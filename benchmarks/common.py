@@ -1,0 +1,31 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, List
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+
+def emit(name: str, us_per_call: float, derived: Dict) -> str:
+    """CSV row per the harness contract: name,us_per_call,derived."""
+    row = f"{name},{us_per_call:.2f},{json.dumps(derived, sort_keys=True)}"
+    print(row)
+    return row
+
+
+def save_json(name: str, payload) -> None:
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    (ARTIFACTS / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters * 1e6

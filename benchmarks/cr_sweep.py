@@ -1,0 +1,94 @@
+"""Benchmark ↔ paper Table 1: method × compression-ratio sweep.
+
+One retrofitted tiny LM, evaluated with every KV policy at CR ∈ {2, 3, 4} on
+(a) teacher-match KL on held-out text, (b) the needle task (NIAH-like).
+The paper's qualitative rows to reproduce: DMS degrades least as CR grows;
+Quest tracks vanilla (it keeps everything in memory) but saves only reads;
+TOVA/H2O fall off fastest; DMC struggles at small capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.configs import get_smoke
+from repro.core.config import DMSConfig, KVPolicyConfig
+from repro.data import tasks
+from repro.data.pipeline import DataConfig, make_batch
+from repro.launch import steps as steps_lib
+from repro.models import transformer as tfm
+from repro.optim import adamw
+from repro.serving.engine import Engine
+
+
+def _train_needle_model(steps=240, seed=0):
+    arch = get_smoke("llama32-1b")
+    arch = dataclasses.replace(
+        arch, vocab_size=64,
+        dms=DMSConfig(enabled=True, window=4, target_cr=4.0,
+                      steps_per_cr_unit=max(steps // 8, 5)))
+    task = tasks.TaskConfig(kind="needle", vocab_size=64, prompt_len=48,
+                            seed=seed)
+    base = dataclasses.replace(arch, dms=DMSConfig(enabled=False))
+    params = tfm.init_model(jax.random.PRNGKey(seed), base)
+    opt = adamw.init(params)
+    step_fn = jax.jit(steps_lib.make_train_step(
+        base, adamw.AdamWConfig(lr=2e-3, warmup_steps=20, total_steps=steps)),
+        donate_argnums=(0, 1))
+    for s in range(steps):
+        b = tasks.make_train_batch(task, s, 32)
+        batch = {"tokens": jnp.asarray(b["tokens"]),
+                 "labels": jnp.asarray(b["labels"])}
+        params, opt, _ = step_fn(params, opt, batch, jnp.asarray(s, jnp.int32))
+    # retrofit
+    teacher = jax.tree_util.tree_map(jnp.copy, params)
+    ropt = adamw.init(params)
+    rstep = jax.jit(steps_lib.make_retrofit_step(
+        arch, adamw.AdamWConfig(lr=1e-3, warmup_steps=10,
+                                total_steps=steps // 2)), donate_argnums=(0, 2))
+    for s in range(steps // 2):
+        b = tasks.make_train_batch(task, 50_000 + s, 32)
+        batch = {"tokens": jnp.asarray(b["tokens"]),
+                 "labels": jnp.asarray(b["labels"])}
+        params, ropt, _ = rstep(params, teacher, ropt, batch,
+                                jnp.asarray(s, jnp.int32))
+    return arch, params, task
+
+
+def _needle_accuracy(engine: Engine, prompts, answers) -> float:
+    hits = 0
+    res = engine.generate(prompts, 1)
+    for i in range(len(prompts)):
+        hits += int(res.tokens[i, 0] == answers[i])
+    return hits / len(prompts)
+
+
+def run(n_eval=32, quick=False):
+    arch, params, task = _train_needle_model(steps=120 if quick else 240)
+    prompts, answers = tasks.make_eval_set(task, n_eval)
+    table = {}
+    policies = {
+        "vanilla": lambda cr: KVPolicyConfig(kind="vanilla"),
+        "dms": lambda cr: KVPolicyConfig(kind="dms", cr=cr, window=arch.dms.window),
+        "tova": lambda cr: KVPolicyConfig(kind="tova", cr=cr),
+        "h2o": lambda cr: KVPolicyConfig(kind="h2o", cr=cr),
+        "quest": lambda cr: KVPolicyConfig(kind="quest", cr=cr, quest_page_size=4),
+        "dmc": lambda cr: KVPolicyConfig(kind="dmc", cr=cr),
+    }
+    for method, make_pol in policies.items():
+        for cr in ([1.0] if method == "vanilla" else [2.0, 3.0, 4.0]):
+            engine = Engine(arch, params, make_pol(cr))
+            acc = _needle_accuracy(engine, prompts, answers)
+            key = f"{method}_cr{cr:g}"
+            table[key] = acc
+            emit(f"cr_sweep/{key}", 0.0, {"needle_acc": acc})
+    save_json("cr_sweep", table)
+    return table
+
+
+if __name__ == "__main__":
+    run()

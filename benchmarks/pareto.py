@@ -1,0 +1,107 @@
+"""Benchmark ↔ paper Fig. 3 / Fig. 4: accuracy vs KV-reads / peak-tokens
+Pareto frontiers under L-W-CR inference-time scaling.
+
+A tiny reasoning model is trained on chain-arithmetic with verifiable
+answers, retrofitted with DMS, then evaluated over a grid of
+(length, width, CR) configurations with *measured* budget metrics from the
+real cache states.  The paper's qualitative claim to reproduce: the DMS
+frontier dominates vanilla at equal budget (more chains affordable for the
+same KV reads / peak memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, save_json, ARTIFACTS
+from repro.configs import get_smoke
+from repro.core.config import DMSConfig, KVPolicyConfig
+from repro.core.hyperscale import ScalingConfig, frontier_margin, pareto_frontier
+from repro.data import tasks
+from repro.data.pipeline import DataConfig
+from repro.serving.engine import Engine, evaluate_hyperscale
+from repro.train.loop import TrainConfig, train
+from repro.models import transformer as tfm
+from repro.optim import adamw
+
+
+def _trained_reasoner(steps=260, window=4, target_cr=4.0, seed=0):
+    """Train a tiny model on chain_arith, then DMS-retrofit it."""
+    arch = get_smoke("qwen-r1-1.5b")
+    arch = dataclasses.replace(
+        arch, vocab_size=64,
+        dms=DMSConfig(enabled=True, window=window, target_cr=target_cr,
+                      steps_per_cr_unit=max(steps // 8, 5)))
+    task = tasks.TaskConfig(kind="chain_arith", vocab_size=64,
+                            prompt_len=32, chain_len=5, seed=seed)
+
+    # supervised pretrain on the task (vanilla attention)
+    base = dataclasses.replace(arch, dms=DMSConfig(enabled=False))
+    params = tfm.init_model(jax.random.PRNGKey(seed), base)
+    opt = adamw.init(params)
+    from repro.launch import steps as steps_lib
+    import jax.numpy as jnp
+    step_fn = jax.jit(steps_lib.make_train_step(
+        base, adamw.AdamWConfig(lr=2e-3, warmup_steps=20, total_steps=steps)),
+        donate_argnums=(0, 1))
+    for s in range(steps):
+        b = tasks.make_train_batch(task, s, 32)
+        batch = {"tokens": jnp.asarray(b["tokens"]),
+                 "labels": jnp.asarray(b["labels"])}
+        params, opt, m = step_fn(params, opt, batch, jnp.asarray(s, jnp.int32))
+
+    # DMS retrofit via distillation (paper §4) on the same data
+    from repro.core import distill as distill_lib
+    teacher = jax.tree_util.tree_map(jnp.copy, params)
+    ropt = adamw.init(params)
+    rstep = jax.jit(steps_lib.make_retrofit_step(
+        arch, adamw.AdamWConfig(lr=1e-3, warmup_steps=10,
+                                total_steps=steps // 2)),
+        donate_argnums=(0, 2))
+    for s in range(steps // 2):
+        b = tasks.make_train_batch(task, 10_000 + s, 32)
+        batch = {"tokens": jnp.asarray(b["tokens"]),
+                 "labels": jnp.asarray(b["labels"])}
+        params, ropt, m = rstep(params, teacher, ropt, batch,
+                                jnp.asarray(s, jnp.int32))
+    return arch, params, task, float(m["alpha_mean"])
+
+
+def run(n_eval=24, quick=False):
+    arch, params, task, alpha = _trained_reasoner(steps=120 if quick else 260)
+    prompts, answers = tasks.make_eval_set(task, n_eval)
+    grid = [ScalingConfig(task.prompt_len + 8, w, 1.0) for w in (1, 2, 4)]
+    results = {}
+    for label, policy in [
+        ("vanilla", KVPolicyConfig(kind="vanilla")),
+        ("dms", KVPolicyConfig(kind="dms", cr=arch.dms.target_cr,
+                               window=arch.dms.window)),
+        ("quest", KVPolicyConfig(kind="quest", cr=2.0, quest_page_size=4)),
+        ("tova", KVPolicyConfig(kind="tova", cr=2.0)),
+    ]:
+        engine = Engine(arch, params, policy, temperature=0.7)
+        pts = []
+        for cfg in grid:
+            r = evaluate_hyperscale(engine, prompts, answers, cfg)
+            pts.append(r)
+            emit(f"pareto/{label}/{cfg.label}", 0.0, r)
+        results[label] = pts
+
+    front = {k: pareto_frontier([(p["kv_reads"], p["accuracy"]) for p in v])
+             for k, v in results.items()}
+    margin = frontier_margin(front["dms"], front["vanilla"])
+    mfront = {k: pareto_frontier([(p["peak_tokens"], p["accuracy"]) for p in v])
+              for k, v in results.items()}
+    mmargin = frontier_margin(mfront["dms"], mfront["vanilla"])
+    summary = {"alpha_mean": alpha,
+               "margin_reads_dms_vs_vanilla": margin,
+               "margin_peak_dms_vs_vanilla": mmargin}
+    emit("pareto/summary", 0.0, summary)
+    save_json("pareto", {"results": results, "summary": summary})
+    return summary
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Roofline table (deliverable g): collates the dry-run artifacts into the
+per-(arch × shape) baseline table used in EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit, save_json
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_records():
+    recs = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        try:
+            recs.append(json.loads(f.read_text()))
+        except Exception:
+            pass
+    return recs
+
+
+def run(quick=False):
+    recs = load_records()
+    rows = []
+    for r in recs:
+        if "compute_s" not in r:
+            continue
+        row = {
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "variant": r.get("variant", "vanilla"),
+            "compute_s": round(r["compute_s"], 6),
+            "memory_s": round(r.get("memory_model_s", r["memory_s"]), 6),
+            "memory_hlo_s": round(r["memory_s"], 6),
+            "collective_s": round(r["collective_s"], 6),
+            "bottleneck": r["bottleneck"],
+            "useful_flops": round(r["useful_flops_ratio"], 3),
+            "hw_util": round(r["hw_util"], 4),
+            "fits": r.get("memory_fit", {}).get("fits_hbm_16g"),
+            "peak_gb": round(r.get("memory_fit", {}).get("peak_bytes", 0) / 1e9, 2),
+        }
+        rows.append(row)
+        emit(f"roofline/{row['arch']}/{row['shape']}/{row['mesh']}"
+             f"/{row['variant']}",
+             r.get("step_time_s", 0) * 1e6, row)
+    save_json("roofline_table", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

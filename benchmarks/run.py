@@ -1,0 +1,62 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Suites (↔ paper artifact):
+    latency_model     Appendix G / Fig. 7 (TPU re-derivation)
+    roofline_table    40-cell dry-run roofline collation (§Roofline)
+    cr_profile        Fig. 6 (CR vs position, per-layer retention)
+    ablation_eviction Fig. 5 left (delayed vs immediate)
+    data_efficiency   Fig. 5 right (DMS vs immediate/DMC objective)
+    cr_sweep          Table 1 (method × CR on needle task)
+    pareto            Fig. 3 / Fig. 4 (accuracy vs budget frontiers)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced step counts (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (ablation_eviction, cr_profile, cr_sweep,
+                            data_efficiency, latency_model, pareto,
+                            roofline_table)
+    suites = {
+        "latency_model": latency_model.run,
+        "roofline_table": roofline_table.run,
+        "cr_profile": cr_profile.run,
+        "ablation_eviction": ablation_eviction.run,
+        "data_efficiency": data_efficiency.run,
+        "cr_sweep": cr_sweep.run,
+        "pareto": pareto.run,
+    }
+    if args.only:
+        suites = {k: v for k, v in suites.items() if k == args.only}
+    failed = []
+    for name, fn in suites.items():
+        t0 = time.time()
+        print(f"# === {name} ===", file=sys.stderr)
+        try:
+            fn(quick=args.quick)
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:
+            traceback.print_exc()
+            failed.append((name, repr(e)))
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,40 @@
+"""Inference-time hyper-scaling demo (paper §5.1): same compute budget,
+more reasoning chains via KV compression.
+
+    PYTHONPATH=src python examples/hyperscale_serve.py
+
+Trains a tiny chain-arithmetic reasoner, retrofits DMS, then compares
+accuracy at (roughly) matched KV-read budgets:
+    vanilla  L-W-CR = 40-1-1
+    DMS      L-W-CR = 40-4-4   (4 chains for the budget of ~1, majority vote)
+"""
+import dataclasses
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks.pareto import _trained_reasoner
+from repro.core.config import KVPolicyConfig
+from repro.core.hyperscale import ScalingConfig
+from repro.data import tasks
+from repro.serving.engine import Engine, evaluate_hyperscale
+
+arch, params, task, alpha = _trained_reasoner(steps=200)
+print(f"retrofitted reasoner ready (alpha={alpha:.2f})")
+prompts, answers = tasks.make_eval_set(task, 16)
+
+v_engine = Engine(arch, params, KVPolicyConfig(kind="vanilla"), temperature=0.7)
+d_engine = Engine(arch, params,
+                  KVPolicyConfig(kind="dms", cr=arch.dms.target_cr,
+                                 window=arch.dms.window), temperature=0.7)
+
+r1 = evaluate_hyperscale(v_engine, prompts, answers,
+                         ScalingConfig(task.prompt_len + 8, 1, 1.0))
+r4 = evaluate_hyperscale(d_engine, prompts, answers,
+                         ScalingConfig(task.prompt_len + 8, 4,
+                                       arch.dms.target_cr))
+print(f"vanilla 1-chain : acc={r1['accuracy']:.2f} kv_reads={r1['kv_reads']:.0f}")
+print(f"DMS 4-chain     : acc={r4['accuracy']:.2f} kv_reads={r4['kv_reads']:.0f}")
+print("hyper-scaling: the compressed model affords W=4 voting chains at a "
+      "comparable read budget — the paper's Figure 3 mechanism.")

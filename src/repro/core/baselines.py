@@ -1,0 +1,307 @@
+"""Training-free KV-cache baselines (paper §2.2) + DMC (§2.3).
+
+Implemented with the same functional-cache conventions as :mod:`kv_cache` so
+they slot into the identical decode loop and budget accounting:
+
+* **TOVA** (Oren et al., 2024): keep a budget of tokens; at each step evict the
+  token with the lowest *current* attention weight, summed over query heads.
+* **H2O** (Zhang et al., 2023a): budget split between a recency window and
+  "heavy hitters" (highest cumulative attention); evict the lowest-cumulative
+  non-recent token.
+* **Quest** (Tang et al., 2024): keeps the full cache; per page (fixed-size
+  block) stores elementwise min/max key metadata; at each step selects the
+  top-k pages by an upper-bound score and attends only to them — reducing
+  memory *reads*, not memory *size*.
+* **DMC** (Nawrot et al., 2024): append-or-merge. When α=1 the new (k, v) is
+  accumulated into the last cache entry by a running weighted average.
+* **Window** (StreamingLLM-ish): sliding window + attention sinks.
+
+These are decode-time policies; the paper evaluates them with a standard dense
+prefill up to the budget (§F.1), which we mirror in the serving engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kv_cache import _tree_dataclass, INVALID_POS
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# TOVA
+# ---------------------------------------------------------------------------
+
+
+@_tree_dataclass
+class TOVACache:
+    k: jnp.ndarray       # (B, H, P, D)
+    v: jnp.ndarray
+    pos: jnp.ndarray     # (B, H, P)
+    valid: jnp.ndarray   # (B, H, P)
+    length: jnp.ndarray  # ()
+
+    @staticmethod
+    def init(batch, kv_heads, budget, head_dim, dtype=jnp.bfloat16):
+        z = jnp.zeros((batch, kv_heads, budget, head_dim), dtype)
+        return TOVACache(z, z,
+                         jnp.full((batch, kv_heads, budget), INVALID_POS, jnp.int32),
+                         jnp.zeros((batch, kv_heads, budget), bool),
+                         jnp.zeros((), jnp.int32))
+
+    @property
+    def budget(self) -> int:
+        return self.k.shape[2] - 1   # arena is budget + 1 (room to insert-then-evict)
+
+    def insert(self, k_new, v_new) -> "TOVACache":
+        """Insert the new token into a free slot (the arena always has one)."""
+        p = self.k.shape[2]
+        slot = jnp.argmin(self.valid, axis=2).astype(jnp.int32)   # first False
+        hit = (jnp.arange(p)[None, None] == slot[..., None])
+        return TOVACache(
+            k=jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k),
+            v=jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v),
+            pos=jnp.where(hit, self.length, self.pos),
+            valid=self.valid | hit,
+            length=self.length + 1,
+        )
+
+    def evict(self, attn_weights) -> "TOVACache":
+        """attn_weights: (B, H, P) current-step post-softmax weights summed
+        over the query heads of each group (§2.2: TOVA victim = argmin)."""
+        p = self.k.shape[2]
+        n_valid = jnp.sum(self.valid, axis=2)
+        over = n_valid > self.budget
+        scores = jnp.where(self.valid, attn_weights.astype(jnp.float32), jnp.inf)
+        victim = jnp.argmin(scores, axis=2).astype(jnp.int32)
+        hit = (jnp.arange(p)[None, None] == victim[..., None]) & over[..., None]
+        return TOVACache(self.k, self.v,
+                         jnp.where(hit, INVALID_POS, self.pos),
+                         self.valid & ~hit, self.length)
+
+    def valid_mask(self):
+        return self.valid
+
+    def positions(self):
+        return self.pos
+
+    def retained_tokens(self):
+        return jnp.sum(self.valid, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# H2O
+# ---------------------------------------------------------------------------
+
+
+@_tree_dataclass
+class H2OCache:
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray
+    valid: jnp.ndarray
+    acc: jnp.ndarray       # (B, H, P) cumulative attention mass
+    length: jnp.ndarray
+    recent_window: int = dataclasses.field(metadata={"static": True})
+
+    @staticmethod
+    def init(batch, kv_heads, budget, head_dim, recent_window=None, dtype=jnp.bfloat16):
+        z = jnp.zeros((batch, kv_heads, budget, head_dim), dtype)
+        rw = recent_window if recent_window is not None else budget // 2
+        return H2OCache(z, z,
+                        jnp.full((batch, kv_heads, budget), INVALID_POS, jnp.int32),
+                        jnp.zeros((batch, kv_heads, budget), bool),
+                        jnp.zeros((batch, kv_heads, budget), jnp.float32),
+                        jnp.zeros((), jnp.int32), rw)
+
+    @property
+    def budget(self) -> int:
+        return self.k.shape[2] - 1
+
+    def insert(self, k_new, v_new) -> "H2OCache":
+        p = self.k.shape[2]
+        slot = jnp.argmin(self.valid, axis=2).astype(jnp.int32)
+        hit = (jnp.arange(p)[None, None] == slot[..., None])
+        return H2OCache(
+            k=jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k),
+            v=jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v),
+            pos=jnp.where(hit, self.length, self.pos),
+            valid=self.valid | hit,
+            acc=jnp.where(hit, 0.0, self.acc),
+            length=self.length + 1,
+            recent_window=self.recent_window,
+        )
+
+    def evict(self, attn_weights) -> "H2OCache":
+        """Accumulate attention mass; evict the lowest-cumulative token outside
+        the recency window when over budget (§2.2)."""
+        p = self.k.shape[2]
+        acc = self.acc + jnp.where(self.valid, attn_weights.astype(jnp.float32), 0.0)
+        over = jnp.sum(self.valid, axis=2) > self.budget
+        recent = self.pos >= (self.length - self.recent_window)
+        scores = jnp.where(self.valid & ~recent, acc, jnp.inf)
+        any_evictable = jnp.any(jnp.isfinite(scores), axis=2)
+        oldest = jnp.argmin(jnp.where(self.valid, self.pos, INVALID_POS), axis=2)
+        victim = jnp.where(any_evictable, jnp.argmin(scores, axis=2), oldest).astype(jnp.int32)
+        hit = (jnp.arange(p)[None, None] == victim[..., None]) & over[..., None]
+        return H2OCache(self.k, self.v,
+                        jnp.where(hit, INVALID_POS, self.pos),
+                        self.valid & ~hit,
+                        jnp.where(hit, 0.0, acc),
+                        self.length, self.recent_window)
+
+    def valid_mask(self):
+        return self.valid
+
+    def positions(self):
+        return self.pos
+
+    def retained_tokens(self):
+        return jnp.sum(self.valid, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Quest
+# ---------------------------------------------------------------------------
+
+
+@_tree_dataclass
+class QuestCache:
+    """Full cache + per-page min/max key metadata.  Pages are contiguous.
+
+    ``page_size`` and ``top_pages`` are static; the *reads* accounting (what
+    Quest actually saves) is ``top_pages * page_size`` per step per head.
+    """
+
+    k: jnp.ndarray        # (B, H, S, D)
+    v: jnp.ndarray
+    kmin: jnp.ndarray     # (B, H, S/page, D)
+    kmax: jnp.ndarray
+    length: jnp.ndarray
+    page_size: int = dataclasses.field(metadata={"static": True})
+    top_pages: int = dataclasses.field(metadata={"static": True})
+
+    @staticmethod
+    def init(batch, kv_heads, max_len, head_dim, page_size, top_pages, dtype=jnp.bfloat16):
+        assert max_len % page_size == 0
+        n_pages = max_len // page_size
+        z = jnp.zeros((batch, kv_heads, max_len, head_dim), dtype)
+        return QuestCache(
+            z, z,
+            jnp.full((batch, kv_heads, n_pages, head_dim), jnp.inf, jnp.float32),
+            jnp.full((batch, kv_heads, n_pages, head_dim), -jnp.inf, jnp.float32),
+            jnp.zeros((), jnp.int32), page_size, top_pages)
+
+    def append(self, k_new, v_new) -> "QuestCache":
+        """k_new/v_new: (B, H, 1, D)."""
+        t = self.length
+        k = jax.lax.dynamic_update_slice_in_dim(self.k, k_new.astype(self.k.dtype), t, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(self.v, v_new.astype(self.v.dtype), t, axis=2)
+        page = t // self.page_size
+        kf = k_new[..., 0, :].astype(jnp.float32)
+        n_pages = self.kmin.shape[2]
+        hit = (jnp.arange(n_pages) == page)[None, None, :, None]
+        kmin = jnp.where(hit, jnp.minimum(self.kmin, kf[..., None, :]), self.kmin)
+        kmax = jnp.where(hit, jnp.maximum(self.kmax, kf[..., None, :]), self.kmax)
+        return QuestCache(k, v, kmin, kmax, t + 1, self.page_size, self.top_pages)
+
+    def select_pages(self, q: jnp.ndarray) -> jnp.ndarray:
+        """Upper-bound page scores (§2.2): sum_d max(q_d*kmin_d, q_d*kmax_d).
+
+        q: (B, H, D) — per-KV-head (group-pooled) query.  Returns a bool page
+        mask (B, H, n_pages) marking the top-k live pages.
+        """
+        qf = q.astype(jnp.float32)[..., None, :]
+        ub = jnp.sum(jnp.maximum(qf * self.kmin, qf * self.kmax), axis=-1)  # (B,H,P)
+        n_pages = self.kmin.shape[2]
+        live = (jnp.arange(n_pages) * self.page_size) < self.length
+        ub = jnp.where(live[None, None], ub, -jnp.inf)
+        k = min(self.top_pages, n_pages)
+        thresh = jax.lax.top_k(ub, k)[0][..., -1:]
+        sel = (ub >= thresh) & live[None, None]
+        return sel
+
+    def token_mask_from_pages(self, page_mask: jnp.ndarray) -> jnp.ndarray:
+        s = self.k.shape[2]
+        token_pages = jnp.arange(s) // self.page_size
+        tok = jnp.take(page_mask, token_pages, axis=2)
+        written = jnp.arange(s) < self.length
+        return tok & written[None, None]
+
+    def positions(self):
+        s = self.k.shape[2]
+        return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, None], self.k.shape[:2] + (s,))
+
+    def retained_tokens(self):
+        # memory footprint is FULL — that is Quest's trade-off
+        s = self.k.shape[2]
+        written = jnp.sum((jnp.arange(s) < self.length))
+        return jnp.broadcast_to(written, self.k.shape[:2])
+
+    def reads_per_step(self):
+        n_live_pages = jnp.minimum((self.length + self.page_size - 1) // self.page_size,
+                                   self.top_pages)
+        return n_live_pages * self.page_size
+
+
+# ---------------------------------------------------------------------------
+# DMC (append-or-merge)
+# ---------------------------------------------------------------------------
+
+
+@_tree_dataclass
+class DMCCache:
+    """Dynamic Memory Compression inference cache (Nawrot et al., 2024).
+
+    α=1 ⇒ accumulate (k, v) into the most recent entry by weighted average
+    with running weight z;  α=0 ⇒ append a fresh entry.
+    """
+
+    k: jnp.ndarray        # (B, H, P, D) fp32 accumulators
+    v: jnp.ndarray
+    z: jnp.ndarray        # (B, H, P) accumulation weights
+    count: jnp.ndarray    # (B, H) number of live entries
+    length: jnp.ndarray
+
+    @staticmethod
+    def init(batch, kv_heads, num_slots, head_dim):
+        z4 = jnp.zeros((batch, kv_heads, num_slots, head_dim), jnp.float32)
+        return DMCCache(z4, z4,
+                        jnp.zeros((batch, kv_heads, num_slots), jnp.float32),
+                        jnp.zeros((batch, kv_heads), jnp.int32),
+                        jnp.zeros((), jnp.int32))
+
+    def step(self, k_new, v_new, alpha, omega=None) -> "DMCCache":
+        """alpha: (B, H) bool merge decision; omega: optional (B, H) importance
+        weight for the weighted average (defaults to 1)."""
+        b, h, p, d = self.k.shape
+        if omega is None:
+            omega = jnp.ones((b, h), jnp.float32)
+        kf = k_new[..., 0, :].astype(jnp.float32)
+        vf = v_new[..., 0, :].astype(jnp.float32)
+        merge = alpha & (self.count > 0)
+        tgt = jnp.where(merge, jnp.maximum(self.count - 1, 0), self.count)  # slot index
+        p_idx = jnp.arange(p)
+        hit = p_idx[None, None] == tgt[..., None]
+        z_old = jnp.where(merge[..., None], self.z, 0.0)
+        z_new = z_old + omega[..., None]
+        k_upd = (jnp.where(merge[..., None, None], self.k, 0.0) * z_old[..., None]
+                 + kf[..., None, :] * omega[..., None, None]) / z_new[..., None]
+        v_upd = (jnp.where(merge[..., None, None], self.v, 0.0) * z_old[..., None]
+                 + vf[..., None, :] * omega[..., None, None]) / z_new[..., None]
+        k = jnp.where(hit[..., None], k_upd, self.k)
+        v = jnp.where(hit[..., None], v_upd, self.v)
+        z = jnp.where(hit, z_new, self.z)
+        count = jnp.where(merge, self.count, self.count + 1)
+        return DMCCache(k, v, z, count, self.length + 1)
+
+    def valid_mask(self):
+        p = self.k.shape[2]
+        return jnp.arange(p)[None, None] < self.count[..., None]
+
+    def retained_tokens(self):
+        return self.count

@@ -1,0 +1,86 @@
+"""Retrofitting losses: logit distillation + DMS auxiliary loss (paper §3.2, §4).
+
+The paper retrofits via logit distillation (Hinton et al., 2015): the vanilla
+LLM is the teacher, the DMS model the student;  L = L_D + L_aux.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import DMSConfig
+from repro.core import dms as dms_lib
+
+
+def kl_logit_distillation(
+    student_logits: jnp.ndarray,
+    teacher_logits: jnp.ndarray,
+    mask: Optional[jnp.ndarray] = None,
+    temperature: float = 1.0,
+) -> jnp.ndarray:
+    """KL(teacher || student) averaged over unmasked positions.
+
+    logits: (B, T, V); mask: (B, T) with 1 = count this position.
+    """
+    t = temperature
+    sp = jax.nn.log_softmax(student_logits.astype(jnp.float32) / t, axis=-1)
+    tp = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    kl = jnp.sum(jnp.exp(tp) * (tp - sp), axis=-1) * (t * t)     # (B, T)
+    if mask is None:
+        return jnp.mean(kl)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(kl * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+) -> jnp.ndarray:
+    """Next-token CE in Megatron vocab-parallel form.
+
+    With vocab-sharded logits, ``take_along_axis`` would force GSPMD to
+    all-gather the (B, T, V) tensor; the logsumexp − one-hot-contraction form
+    keeps every reduction shard-local + psum.  logits: (B, T, V) fp32.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)                    # sharded reduce
+    onehot = labels[..., None] == jnp.arange(logits.shape[-1])[None, None, :]
+    label_logit = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - label_logit
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def retrofit_loss(
+    student_logits: jnp.ndarray,
+    teacher_logits: Optional[jnp.ndarray],
+    labels: jnp.ndarray,
+    alpha_sum: jnp.ndarray,
+    alpha_count: jnp.ndarray,
+    step: jnp.ndarray,
+    dms_cfg: DMSConfig,
+    mask: Optional[jnp.ndarray] = None,
+    distill_weight: float = 1.0,
+):
+    """Full retrofit objective  L = L_D + L_aux  (+ CE fallback without teacher).
+
+    Returns (loss, metrics dict).
+    """
+    if teacher_logits is not None:
+        l_main = kl_logit_distillation(student_logits, teacher_logits, mask) * distill_weight
+    else:
+        l_main = lm_cross_entropy(student_logits, labels, mask)
+    l_aux = dms_lib.aux_compression_loss(alpha_sum, alpha_count, step, dms_cfg)
+    loss = l_main + l_aux
+    metrics = {
+        "loss": loss,
+        "loss_main": l_main,
+        "loss_aux": l_aux,
+        "alpha_mean": alpha_sum / jnp.maximum(alpha_count, 1.0),
+        "target_alpha": dms_lib.target_alpha(step, dms_cfg),
+        "cr_schedule": dms_lib.cr_schedule(step, dms_cfg),
+    }
+    return loss, metrics

@@ -1,0 +1,188 @@
+"""Dynamic Memory Sparsification (DMS) — the paper's core technique (§3).
+
+Everything that defines DMS lives here:
+
+* α-logit extraction ("borrowed neuron", Appendix B) and Gumbel-sigmoid
+  relaxation (Eq. 1),
+* the delayed-eviction additive attention mask ``M_alpha`` (Fig. 2b) — built
+  lazily from the per-token α vector, never materialised inside kernels,
+* the one-sided L1 auxiliary compression loss and the linear CR schedule,
+* binarised inference decisions.
+
+Shapes convention: ``alpha`` is per KV head: ``(batch, kv_heads, seq)``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import DMSConfig
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free on bf16
+_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# alpha prediction
+# ---------------------------------------------------------------------------
+
+
+def alpha_logits_from_q(q_raw: jnp.ndarray, num_kv_heads: int, bias: float) -> jnp.ndarray:
+    """Extract eviction logits from the raw (pre-RoPE) query projection.
+
+    Appendix B: "borrow the first neuron from the first query head in each
+    query group".  ``q_raw``: (B, T, Hq, Dh).  Returns (B, Hkv, T).
+    """
+    b, t, hq, _ = q_raw.shape
+    g = hq // num_kv_heads
+    first = q_raw[:, :, ::g, 0]                       # (B, T, Hkv)
+    return first.astype(jnp.float32).transpose(0, 2, 1) + bias
+
+
+def zero_borrowed_neuron(q: jnp.ndarray, num_kv_heads: int, scale: float = 0.0) -> jnp.ndarray:
+    """Zero (or phase-1 scale) the borrowed neuron so it no longer affects attention.
+
+    Phase-1 retrofit (App. B) passes ``scale = 1 - t/n_t``; the main phase
+    passes 0.  ``q``: (B, T, Hq, Dh).
+    """
+    hq = q.shape[2]
+    g = hq // num_kv_heads
+    mask = jnp.ones((hq, q.shape[3]), dtype=q.dtype)
+    mask = mask.at[::g, 0].set(jnp.asarray(scale, dtype=q.dtype))
+    return q * mask
+
+
+def gumbel_sigmoid(
+    logits: jnp.ndarray, tau: float, rng: Optional[jax.Array], hard: bool = False
+) -> jnp.ndarray:
+    """Binary-concrete / Gumbel-sigmoid sample in [0, 1] (Eq. 1).
+
+    With ``rng=None`` returns the deterministic relaxation sigmoid(logits/tau).
+    ``hard=True`` uses a straight-through estimator.
+    """
+    logits = logits.astype(jnp.float32)
+    if rng is not None:
+        u = jax.random.uniform(rng, logits.shape, minval=_EPS, maxval=1.0 - _EPS)
+        noise = jnp.log(u) - jnp.log1p(-u)            # logistic noise
+        logits = logits + noise
+    y = jax.nn.sigmoid(logits / tau)
+    if hard:
+        y_hard = (y > 0.5).astype(y.dtype)
+        y = y + jax.lax.stop_gradient(y_hard - y)
+    return y
+
+
+def binary_alpha(logits: jnp.ndarray) -> jnp.ndarray:
+    """Inference-time decision  α^bin = round(sigmoid(logit))  (§3.3)."""
+    return (jax.nn.sigmoid(logits.astype(jnp.float32)) > 0.5)
+
+
+# ---------------------------------------------------------------------------
+# delayed-eviction mask
+# ---------------------------------------------------------------------------
+
+
+def eviction_log_survival(alpha: jnp.ndarray) -> jnp.ndarray:
+    """log(1 - α_j), clamped — the additive mask contribution of key j."""
+    return jnp.log1p(-jnp.clip(alpha.astype(jnp.float32), 0.0, 1.0 - _EPS))
+
+
+def build_dms_mask(
+    alpha: jnp.ndarray,
+    q_positions: jnp.ndarray,
+    k_positions: jnp.ndarray,
+    cfg: DMSConfig,
+    causal: bool = True,
+    local_window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Materialise the additive attention mask ``M_alpha`` (training, Fig. 2b).
+
+    Reference path only — kernels consume ``alpha`` directly.
+
+    alpha:        (B, Hkv, Tk)   relaxed eviction decisions for each key.
+    q_positions:  (Tq,) absolute positions of queries.
+    k_positions:  (Tk,) absolute positions of keys.
+    Returns mask: (B, Hkv, Tq, Tk), entries in (-inf, 0].
+
+    Delayed eviction: key j's mask applies to queries i with  i - j >= w .
+    Immediate eviction (ablation): applies to all i > j.
+    """
+    i = q_positions[:, None].astype(jnp.int32)
+    j = k_positions[None, :].astype(jnp.int32)
+    delay = 1 if cfg.immediate_eviction else cfg.window
+    in_evict_zone = (i - j) >= delay                            # (Tq, Tk)
+    log_surv = eviction_log_survival(alpha)                     # (B, Hkv, Tk)
+    mask = jnp.where(in_evict_zone[None, None], log_surv[:, :, None, :], 0.0)
+    if causal:
+        mask = jnp.where((j <= i)[None, None], mask, NEG_INF)
+    if local_window is not None:
+        mask = jnp.where(((i - j) < local_window)[None, None], mask, NEG_INF)
+    return mask
+
+
+def retained_after_prefill(
+    alpha_bin: jnp.ndarray, seq_len: int, cfg: DMSConfig
+) -> jnp.ndarray:
+    """Which tokens remain in the cache after prefilling ``seq_len`` tokens.
+
+    A token j is physically evicted once position j + w has been generated,
+    i.e. after prefill token j is gone iff  α_j = 1  and  j <= seq_len - 1 - w.
+    Returns bool (B, Hkv, T): True = retained.
+    """
+    t = jnp.arange(seq_len)
+    delay = 1 if cfg.immediate_eviction else cfg.window
+    executed = t <= (seq_len - 1 - delay)
+    return ~(alpha_bin & executed[None, None, :])
+
+
+# ---------------------------------------------------------------------------
+# auxiliary loss + schedule
+# ---------------------------------------------------------------------------
+
+
+def cr_schedule(step: jnp.ndarray | int, cfg: DMSConfig) -> jnp.ndarray:
+    """CR(t) = min(1 + t / steps_per_cr_unit, target)  (§4)."""
+    cr = 1.0 + jnp.asarray(step, jnp.float32) / cfg.steps_per_cr_unit
+    return jnp.minimum(cr, cfg.target_cr)
+
+
+def target_alpha(step: jnp.ndarray | int, cfg: DMSConfig) -> jnp.ndarray:
+    """α*(t) = 1 - 1/CR(t): the annealed mean-eviction target."""
+    return 1.0 - 1.0 / cr_schedule(step, cfg)
+
+
+def aux_compression_loss(alpha_sum: jnp.ndarray, alpha_count: jnp.ndarray,
+                         step: jnp.ndarray | int, cfg: DMSConfig) -> jnp.ndarray:
+    """One-sided L1 loss (§3.2), normalised by the α count for scale stability.
+
+    L_aux = max(α* · N − Σ α, 0) / N  where N = L·H·T aggregated over layers.
+    """
+    a_star = target_alpha(step, cfg)
+    return jnp.maximum(a_star * alpha_count - alpha_sum, 0.0) / jnp.maximum(alpha_count, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# convenience: full training-mode alpha pipeline for one attention layer
+# ---------------------------------------------------------------------------
+
+
+def train_alphas(
+    q_raw: jnp.ndarray,
+    num_kv_heads: int,
+    cfg: DMSConfig,
+    rng: Optional[jax.Array],
+    deterministic: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(relaxed alpha, zeroed q) for the training path."""
+    logits = alpha_logits_from_q(q_raw, num_kv_heads, cfg.logit_bias)
+    alpha = gumbel_sigmoid(logits, cfg.tau, None if deterministic else rng)
+    q = zero_borrowed_neuron(q_raw, num_kv_heads)
+    return alpha, q
+
+
+def infer_alphas(q_raw: jnp.ndarray, num_kv_heads: int, cfg: DMSConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(binary alpha, zeroed q) for the inference path."""
+    logits = alpha_logits_from_q(q_raw, num_kv_heads, cfg.logit_bias)
+    return binary_alpha(logits), zero_borrowed_neuron(q_raw, num_kv_heads)

@@ -1,0 +1,358 @@
+"""KV caches: vanilla, masked-DMS (reference), and slot-compacted DMS (production).
+
+Two DMS cache implementations with identical attention semantics:
+
+* :class:`MaskedDMSCache` — logical cache of the full sequence length with a
+  ``retained`` bitmap.  Simple, used as the correctness oracle.
+* :class:`SlotDMSCache` — *physically compacted* cache with ``P << S`` slots,
+  a free-list ring allocator, and a pending-eviction ring implementing the
+  paper's **delayed eviction** (§3.3): the decision made at step *t* frees the
+  slot at step *t + w*.  Evicted slots are overwritten by incoming tokens, so
+  DMS adds no KV read/write traffic.  Keys are stored post-RoPE ("with
+  positional information", §3.3).
+
+All caches are registered pytrees and fully functional (update returns a new
+cache), so they pass through ``jax.jit`` / ``lax.scan`` / pjit unscathed.
+
+Layout: ``k, v``: (B, Hkv, P, Dh); per-slot metadata (B, Hkv, P).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import DMSConfig
+
+INVALID_POS = jnp.iinfo(jnp.int32).max
+
+
+def _tree_dataclass(cls):
+    """Dataclass + pytree registration; fields with metadata {'static': True}
+    go into aux_data (hashable, not traced).  Children are keyed by field name
+    so sharding rules can match on tree paths."""
+    cls = dataclass(cls)
+    child_names = [f.name for f in dataclasses.fields(cls) if not f.metadata.get("static")]
+    static_names = [f.name for f in dataclasses.fields(cls) if f.metadata.get("static")]
+
+    def flatten_with_keys(o):
+        return (
+            [(jax.tree_util.GetAttrKey(n), getattr(o, n)) for n in child_names],
+            tuple(getattr(o, n) for n in static_names),
+        )
+
+    def flatten(o):
+        return (
+            tuple(getattr(o, n) for n in child_names),
+            tuple(getattr(o, n) for n in static_names),
+        )
+
+    def unflatten(aux, children):
+        kw = dict(zip(child_names, children))
+        kw.update(zip(static_names, aux))
+        return cls(**kw)
+
+    jax.tree_util.register_pytree_with_keys(cls, flatten_with_keys, unflatten,
+                                            flatten_func=flatten)
+    return cls
+
+
+# ---------------------------------------------------------------------------
+# Vanilla (dense, append-only) cache
+# ---------------------------------------------------------------------------
+
+
+@_tree_dataclass
+class VanillaCache:
+    k: jnp.ndarray      # (B, Hkv, S, Dh)
+    v: jnp.ndarray
+    length: jnp.ndarray  # () int32 — tokens written
+
+    @staticmethod
+    def init(batch: int, kv_heads: int, max_len: int, head_dim: int, dtype=jnp.bfloat16):
+        z = jnp.zeros((batch, kv_heads, max_len, head_dim), dtype)
+        return VanillaCache(z, z, jnp.zeros((), jnp.int32))
+
+    def append(self, k_new: jnp.ndarray, v_new: jnp.ndarray) -> "VanillaCache":
+        """k_new, v_new: (B, Hkv, T_new, Dh) written at [length, length+T_new)."""
+        t_new = k_new.shape[2]
+        k = jax.lax.dynamic_update_slice_in_dim(self.k, k_new.astype(self.k.dtype), self.length, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(self.v, v_new.astype(self.v.dtype), self.length, axis=2)
+        return VanillaCache(k, v, self.length + t_new)
+
+    def valid_mask(self) -> jnp.ndarray:
+        # lazy (1, 1, S): broadcast happens inside the consumer's `where`
+        s = self.k.shape[2]
+        return (jnp.arange(s) < self.length)[None, None, :]
+
+    def positions(self) -> jnp.ndarray:
+        s = self.k.shape[2]
+        return jnp.arange(s, dtype=jnp.int32)[None, None, :]
+
+    def retained_tokens(self) -> jnp.ndarray:
+        b, h = self.k.shape[:2]
+        return jnp.broadcast_to(self.length, (b, h))
+
+
+# ---------------------------------------------------------------------------
+# Masked DMS cache (reference semantics)
+# ---------------------------------------------------------------------------
+
+
+@_tree_dataclass
+class MaskedDMSCache:
+    k: jnp.ndarray          # (B, Hkv, S, Dh)
+    v: jnp.ndarray
+    retained: jnp.ndarray   # (B, Hkv, S) bool — False once evicted
+    alpha: jnp.ndarray      # (B, Hkv, S) bool — recorded eviction decisions
+    length: jnp.ndarray     # () int32
+    window: int = dataclasses.field(metadata={"static": True})
+
+    @staticmethod
+    def init(batch: int, kv_heads: int, max_len: int, head_dim: int,
+             window: int, dtype=jnp.bfloat16):
+        z = jnp.zeros((batch, kv_heads, max_len, head_dim), dtype)
+        f = jnp.zeros((batch, kv_heads, max_len), bool)
+        return MaskedDMSCache(z, z, f, f, jnp.zeros((), jnp.int32), window)
+
+    def step(self, k_new, v_new, alpha_new) -> "MaskedDMSCache":
+        """Append ONE token per head; execute the eviction scheduled w steps ago.
+
+        k_new/v_new: (B, Hkv, 1, Dh); alpha_new: (B, Hkv) bool.
+        """
+        t = self.length
+        k = jax.lax.dynamic_update_slice_in_dim(self.k, k_new.astype(self.k.dtype), t, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(self.v, v_new.astype(self.v.dtype), t, axis=2)
+        s = self.k.shape[2]
+        idx = jnp.arange(s)
+        retained = jnp.where(idx[None, None] == t, True, self.retained)
+        alpha = jnp.where(idx[None, None] == t, alpha_new[..., None], self.alpha)
+        # execute eviction of token t - w (if it was marked)
+        j = t - self.window
+        evict_now = (idx[None, None] == j) & alpha & (j >= 0)
+        retained = retained & ~evict_now
+        return MaskedDMSCache(k, v, retained, alpha, t + 1, self.window)
+
+    def valid_mask(self) -> jnp.ndarray:
+        s = self.k.shape[2]
+        written = (jnp.arange(s) < self.length)[None, None]
+        return self.retained & written
+
+    def positions(self) -> jnp.ndarray:
+        s = self.k.shape[2]
+        pos = jnp.arange(s, dtype=jnp.int32)
+        return jnp.broadcast_to(pos[None, None], self.k.shape[:2] + (s,))
+
+    def retained_tokens(self) -> jnp.ndarray:
+        return jnp.sum(self.valid_mask(), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Slot-compacted DMS cache (production)
+# ---------------------------------------------------------------------------
+
+
+@_tree_dataclass
+class SlotDMSCache:
+    """Physically compacted cache: P slots per (batch, kv head).
+
+    Allocation uses a ring free-list; the pending ring holds the last ``w``
+    (slot, α) pairs so that decisions execute exactly ``w`` steps late.
+    If the arena overflows (model under-evicts vs. provisioned CR) the
+    allocator evicts the oldest *marked-for-eviction* slot early; as a last
+    resort it recycles the oldest slot (StreamingLLM-style safety valve) and
+    flags ``overflowed`` for observability.
+    """
+
+    k: jnp.ndarray            # (B, H, P, Dh) — post-RoPE keys
+    v: jnp.ndarray            # (B, H, P, Dh)
+    pos: jnp.ndarray          # (B, H, P) int32 — logical position; INVALID_POS = empty
+    valid: jnp.ndarray        # (B, H, P) bool
+    free_ring: jnp.ndarray    # (B, H, P) int32 — circular buffer of free slot ids
+    free_head: jnp.ndarray    # (B, H) int32 — index of next free slot in ring
+    free_count: jnp.ndarray   # (B, H) int32
+    pending_slot: jnp.ndarray   # (B, H, w) int32
+    pending_alpha: jnp.ndarray  # (B, H, w) bool
+    length: jnp.ndarray       # () int32 — logical tokens written
+    overflowed: jnp.ndarray   # (B, H) bool
+    window: int = dataclasses.field(metadata={"static": True})
+    # False = plain ring-buffer use (local-attention window cache): eviction
+    # decisions are never predicted, overflow recycling does the windowing
+    dms_active: bool = dataclasses.field(metadata={"static": True}, default=True)
+
+    @staticmethod
+    def init(batch: int, kv_heads: int, num_slots: int, head_dim: int,
+             window: int, dtype=jnp.bfloat16, dms_active: bool = True):
+        p = num_slots
+        z = jnp.zeros((batch, kv_heads, p, head_dim), dtype)
+        return SlotDMSCache(
+            k=z, v=z,
+            pos=jnp.full((batch, kv_heads, p), INVALID_POS, jnp.int32),
+            valid=jnp.zeros((batch, kv_heads, p), bool),
+            free_ring=jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32), (batch, kv_heads, p)).copy(),
+            free_head=jnp.zeros((batch, kv_heads), jnp.int32),
+            free_count=jnp.full((batch, kv_heads), p, jnp.int32),
+            pending_slot=jnp.full((batch, kv_heads, window), -1, jnp.int32),
+            pending_alpha=jnp.zeros((batch, kv_heads, window), bool),
+            length=jnp.zeros((), jnp.int32),
+            overflowed=jnp.zeros((batch, kv_heads), bool),
+            window=window,
+            dms_active=dms_active,
+        )
+
+    @staticmethod
+    def provision_slots(seq_len: int, cr: float, window: int) -> int:
+        """P = ceil(S / CR) + w + slack — the arena size for a target CR."""
+        return int(seq_len / cr) + window + 16
+
+    # -- internals ----------------------------------------------------------
+
+    def _execute_pending(self) -> "SlotDMSCache":
+        """Execute the eviction decision made ``w`` steps ago (ring slot t mod w)."""
+        t = self.length
+        w = self.window
+        ring_idx = jnp.mod(t, w)
+        slot = jnp.take_along_axis(self.pending_slot, ring_idx[None, None, None].repeat(
+            self.pending_slot.shape[0], 0).repeat(self.pending_slot.shape[1], 1), axis=2)[..., 0]
+        alpha = jnp.take_along_axis(self.pending_alpha, ring_idx[None, None, None].repeat(
+            self.pending_alpha.shape[0], 0).repeat(self.pending_alpha.shape[1], 1), axis=2)[..., 0]
+        do_evict = (t >= w) & alpha & (slot >= 0)
+        # still-valid guard (overflow may have recycled it already)
+        slot_c = jnp.clip(slot, 0, self.valid.shape[2] - 1)
+        was_valid = jnp.take_along_axis(self.valid, slot_c[..., None], axis=2)[..., 0]
+        do_evict = do_evict & was_valid
+
+        p_idx = jnp.arange(self.valid.shape[2])
+        hit = (p_idx[None, None] == slot_c[..., None]) & do_evict[..., None]
+        valid = self.valid & ~hit
+        pos = jnp.where(hit, INVALID_POS, self.pos)
+        # push freed slot onto the free ring
+        tail = jnp.mod(self.free_head + self.free_count, self.free_ring.shape[2])
+        free_ring = jnp.where(
+            (p_idx[None, None] == tail[..., None]) & do_evict[..., None],
+            slot_c[..., None], self.free_ring)
+        free_count = self.free_count + do_evict.astype(jnp.int32)
+        return dataclasses.replace(
+            self, valid=valid, pos=pos, free_ring=free_ring, free_count=free_count)
+
+    def _allocate(self) -> Tuple["SlotDMSCache", jnp.ndarray]:
+        """Pop a slot per (B, H).  Returns (cache, slot (B,H))."""
+        p = self.free_ring.shape[2]
+        have_free = self.free_count > 0
+        head_slot = jnp.take_along_axis(self.free_ring, self.free_head[..., None], axis=2)[..., 0]
+        # overflow path: recycle the oldest valid slot
+        oldest_pos = jnp.where(self.valid, self.pos, INVALID_POS)
+        oldest_slot = jnp.argmin(oldest_pos, axis=2).astype(jnp.int32)
+        slot = jnp.where(have_free, head_slot, oldest_slot)
+        free_head = jnp.where(have_free, jnp.mod(self.free_head + 1, p), self.free_head)
+        free_count = jnp.where(have_free, self.free_count - 1, self.free_count)
+        overflowed = self.overflowed | ~have_free
+        cache = dataclasses.replace(
+            self, free_head=free_head, free_count=free_count, overflowed=overflowed)
+        return cache, slot
+
+    # -- public API ----------------------------------------------------------
+
+    def step(self, k_new, v_new, alpha_new) -> "SlotDMSCache":
+        """Append one token per (batch, head); execute delayed evictions.
+
+        k_new/v_new: (B, H, 1, Dh) post-RoPE; alpha_new: (B, H) bool.
+        """
+        cache = self._execute_pending()
+        cache, slot = cache._allocate()
+        t = cache.length
+        p_idx = jnp.arange(cache.valid.shape[2])
+        hit = p_idx[None, None] == slot[..., None]                        # (B,H,P)
+        k = jnp.where(hit[..., None], k_new.astype(cache.k.dtype), cache.k)
+        v = jnp.where(hit[..., None], v_new.astype(cache.v.dtype), cache.v)
+        pos = jnp.where(hit, t, cache.pos)
+        valid = cache.valid | hit
+        ring_idx = jnp.mod(t, cache.window)
+        w_idx = jnp.arange(cache.window)
+        ring_hit = w_idx[None, None] == ring_idx
+        pending_slot = jnp.where(ring_hit, slot[..., None], cache.pending_slot)
+        pending_alpha = jnp.where(ring_hit, alpha_new[..., None], cache.pending_alpha)
+        return dataclasses.replace(
+            cache, k=k, v=v, pos=pos, valid=valid,
+            pending_slot=pending_slot, pending_alpha=pending_alpha,
+            length=t + 1)
+
+    def valid_mask(self) -> jnp.ndarray:
+        return self.valid
+
+    def positions(self) -> jnp.ndarray:
+        return self.pos
+
+    def retained_tokens(self) -> jnp.ndarray:
+        return jnp.sum(self.valid, axis=-1)
+
+    @staticmethod
+    def from_prefill(k, v, positions, retained, window: int, num_slots: int,
+                     alpha_bin: Optional[jnp.ndarray] = None) -> "SlotDMSCache":
+        """Build a compacted cache from prefill outputs.
+
+        k/v: (B, H, T, Dh) post-RoPE; retained: (B, H, T) bool;
+        positions: (T,).  Retained tokens are packed into the first slots
+        (stable order).  Tokens still inside the delay window whose α = 1 are
+        entered into the pending ring so they get evicted on schedule.
+        """
+        b, h, t, d = k.shape
+        p = num_slots
+        # stable pack: order retained tokens by position
+        order_key = jnp.where(retained, positions[None, None, :], INVALID_POS)
+        order = jnp.argsort(order_key, axis=2)                      # (B,H,T) token idx by slot
+        n_keep = jnp.sum(retained, axis=2)                          # (B,H)
+        slot_ids = jnp.arange(p)
+
+        def gather(x, fill):
+            idx = order[..., :p] if t >= p else jnp.pad(order, ((0, 0), (0, 0), (0, p - t)))
+            g = jnp.take_along_axis(x, idx[..., None] if x.ndim == 4 else idx, axis=2)
+            live = slot_ids[None, None] < n_keep[..., None]
+            if x.ndim == 4:
+                return jnp.where(live[..., None], g, fill)
+            return jnp.where(live, g, fill)
+
+        kc = gather(k, jnp.zeros((), k.dtype))
+        vc = gather(v, jnp.zeros((), v.dtype))
+        pos_full = jnp.broadcast_to(positions[None, None, :], (b, h, t)).astype(jnp.int32)
+        posc = gather(pos_full, INVALID_POS)
+        valid = slot_ids[None, None] < n_keep[..., None]
+        free_count = p - n_keep
+        # free ring: slots [n_keep, P) are free
+        free_ring = jnp.mod(n_keep[..., None] + slot_ids[None, None], p).astype(jnp.int32)
+        cache = SlotDMSCache(
+            k=kc, v=vc, pos=posc, valid=valid,
+            free_ring=free_ring,
+            free_head=jnp.zeros((b, h), jnp.int32),
+            free_count=free_count.astype(jnp.int32),
+            pending_slot=jnp.full((b, h, window), -1, jnp.int32),
+            pending_alpha=jnp.zeros((b, h, window), bool),
+            length=jnp.asarray(t, jnp.int32),
+            overflowed=jnp.zeros((b, h), bool),
+            window=window,
+        )
+        if alpha_bin is not None:
+            # tokens in (t-w, t] have un-executed decisions -> fill pending ring
+            w = window
+            tok = jnp.arange(t)
+            in_window = tok > (t - 1 - w)
+            # slot of token j = its rank among retained (all in-window tokens are retained)
+            rank = jnp.cumsum(retained, axis=2) - 1                  # (B,H,T)
+            ring_pos = jnp.mod(tok, w)
+            pend_slot = jnp.full((b, h, w), -1, jnp.int32)
+            pend_alpha = jnp.zeros((b, h, w), bool)
+            idx = jnp.where(in_window, ring_pos, w)  # w = dumped
+            pend_slot = pend_slot.at[..., :].set(
+                jnp.zeros((b, h, w), jnp.int32) - 1)
+            # scatter (padded with an extra dump column)
+            ps = jnp.concatenate([pend_slot, jnp.zeros((b, h, 1), jnp.int32)], axis=2)
+            pa = jnp.concatenate([pend_alpha, jnp.zeros((b, h, 1), bool)], axis=2)
+            ps = ps.at[jnp.arange(b)[:, None, None], jnp.arange(h)[None, :, None], idx[None, None, :]].set(
+                jnp.where(in_window[None, None, :], rank, -1).astype(jnp.int32))
+            pa = pa.at[jnp.arange(b)[:, None, None], jnp.arange(h)[None, :, None], idx[None, None, :]].set(
+                jnp.where(in_window[None, None, :], alpha_bin, False))
+            cache = dataclasses.replace(cache, pending_slot=ps[..., :w], pending_alpha=pa[..., :w])
+        return cache

@@ -1,0 +1,397 @@
+"""Pallas TPU kernels: flash attention with the DMS delayed-eviction mask.
+
+Design (TPU adaptation of the paper's FlashMask/PagedAttention GPU story):
+
+* The T×T additive mask is never materialised.  Each kv head carries a length-T
+  fp32 vector ``log_surv = log1p(-alpha)``; inside the kernel the mask value
+  for (i, j) is ``log_surv[j]`` iff ``i - j >= w`` (the delayed-eviction zone),
+  else 0.  Causal and local-window masks are position arithmetic.
+* **Block skipping**: with binarised decisions (prefill), a k-block that is
+  (a) entirely inside the eviction zone for the whole q-block and (b) has no
+  retained token, contributes nothing.  Such blocks are skipped two ways:
+    - compute: ``@pl.when(live)`` guards the whole MXU body;
+    - DMA: the k/v ``index_map`` consults a scalar-prefetched remap table and
+      re-requests the previous live block, so Pallas's pipeline emits no new
+      copy (revisited blocks are not re-fetched).
+  This converts DMS sparsity into real prefill FLOP *and* bandwidth savings —
+  the TPU-native equivalent of FlashMask tile skipping.
+* Grid layouts: fwd/dq ``(B·Hq, nQ, nK)`` (k innermost, online softmax in VMEM
+  scratch); dk/dv ``(B·Hkv, nK, G, nQ)`` accumulating over the query heads of
+  each group, which also yields the mask gradient d(log_surv) per kv head.
+
+Block shapes default to 128×128 (MXU-aligned); head_dim is padded to a lane
+multiple by the wrapper when needed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+class FlashConfig(NamedTuple):
+    t: int                      # true sequence length (pre-padding)
+    orig_dh: int                # true head dim (pre-padding) -> softmax scale
+    hq: int
+    hkv: int
+    window: Optional[int]       # local-attention window, or None
+    dms_delay: int              # eviction delay w (0 = no DMS mask)
+    causal: bool
+    logit_cap: Optional[float]
+    block_q: int
+    block_k: int
+    skip_blocks: bool           # binarised alpha -> dead-block skipping
+    interpret: bool
+
+
+def _kv_row(h, cfg: FlashConfig):
+    b = h // cfg.hq
+    g = cfg.hq // cfg.hkv
+    return b * cfg.hkv + (h % cfg.hq) // g
+
+
+def _block_live(qi, ki, cfg: FlashConfig, hr):
+    """Scalar liveness of block (qi, ki); ``hr`` = has-retained flag (int32)."""
+    q_start = qi * cfg.block_q
+    q_end = q_start + cfg.block_q - 1
+    k_start = ki * cfg.block_k
+    k_end = k_start + cfg.block_k - 1
+    live = jnp.asarray(True)
+    if cfg.causal:
+        live &= k_start <= q_end
+    if cfg.window is not None:
+        live &= k_end >= q_start - cfg.window + 1
+    if cfg.skip_blocks and cfg.dms_delay > 0:
+        fully_in_zone = (q_start - k_end) >= cfg.dms_delay
+        live &= (hr > 0) | ~fully_in_zone
+    return live
+
+
+def _mask_scores(s, qi, ki, ls_blk, cfg: FlashConfig):
+    """Apply causal/window/padding masks + the DMS additive mask to (BQ,BK)."""
+    ids_q = qi * cfg.block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    ids_k = ki * cfg.block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if cfg.logit_cap is not None:
+        s = cfg.logit_cap * jnp.tanh(s / cfg.logit_cap)
+    s_capped = s
+    if cfg.dms_delay > 0 and ls_blk is not None:
+        zone = (ids_q - ids_k) >= cfg.dms_delay
+        s = s + jnp.where(zone, ls_blk, 0.0)
+    else:
+        zone = None
+    neg = jnp.full_like(s, NEG_INF)
+    if cfg.causal:
+        s = jnp.where(ids_k <= ids_q, s, neg)
+    if cfg.window is not None:
+        s = jnp.where(ids_q - ids_k < cfg.window, s, neg)
+    s = jnp.where(ids_k < cfg.t, s, neg)        # key padding
+    return s, s_capped, zone, ids_q
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(hr_ref, remap_ref, q_ref, k_ref, v_ref, ls_ref,
+                o_ref, lse_ref, acc_ref, m_ref, l_ref, *, cfg: FlashConfig):
+    h, qi, ki = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    hr = hr_ref[_kv_row(h, cfg), ki] if cfg.skip_blocks else jnp.int32(1)
+
+    @pl.when(_block_live(qi, ki, cfg, hr))
+    def _body():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (cfg.orig_dh ** -0.5)
+        ls_blk = ls_ref[0][None, :] if cfg.dms_delay > 0 else None
+        s, _, _, _ = _mask_scores(s, qi, ki, ls_blk, cfg)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l_safe = jnp.where(l <= 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+        lse_ref[0] = (m_ref[...] + jnp.log(l_safe))[:, 0]
+
+
+def flash_fwd(q, k, v, ls, hr, remap, cfg: FlashConfig):
+    """q: (BHq, Tp, Dh); k/v: (BHkv, Tp, Dh); ls: (BHkv, Tp);
+    hr/remap: (BHkv, nK) int32.  Returns (out (BHq,Tp,Dh), lse (BHq,Tp))."""
+    bhq, tp, dh = q.shape
+    nq, nk = tp // cfg.block_q, tp // cfg.block_k
+    g = cfg.hq // cfg.hkv
+
+    def qmap(h, qi, ki, hr_s, rm_s):
+        return (h, qi, 0)
+
+    def kmap(h, qi, ki, hr_s, rm_s):
+        row = _kv_row(h, cfg)
+        if cfg.skip_blocks and cfg.dms_delay > 0:
+            fully_in_zone = (qi * cfg.block_q - (ki * cfg.block_k + cfg.block_k - 1)
+                             ) >= cfg.dms_delay
+            dead = (hr_s[row, ki] == 0) & fully_in_zone
+            blk = jnp.where(dead, rm_s[row, ki], ki)
+        else:
+            blk = ki
+        return (row, blk, 0)
+
+    def lsmap(h, qi, ki, hr_s, rm_s):
+        row, blk, _ = kmap(h, qi, ki, hr_s, rm_s)
+        return (row, blk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bhq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, cfg.block_q, dh), qmap),
+            pl.BlockSpec((1, cfg.block_k, dh), kmap),
+            pl.BlockSpec((1, cfg.block_k, dh), kmap),
+            pl.BlockSpec((1, cfg.block_k), lsmap),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cfg.block_q, dh), qmap),
+            pl.BlockSpec((1, cfg.block_q), lambda h, qi, ki, *_: (h, qi)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((cfg.block_q, dh), jnp.float32),
+            pltpu.VMEM((cfg.block_q, 1), jnp.float32),
+            pltpu.VMEM((cfg.block_q, 1), jnp.float32),
+        ],
+    )
+    out, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, cfg=cfg),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bhq, tp, dh), q.dtype),
+            jax.ShapeDtypeStruct((bhq, tp), jnp.float32),
+        ],
+        interpret=cfg.interpret,
+        name="dms_flash_fwd",
+    )(hr, remap, q, k, v, ls)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# backward: dq
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(hr_ref, remap_ref, q_ref, k_ref, v_ref, ls_ref, do_ref,
+               lse_ref, delta_ref, dq_ref, dq_acc, *, cfg: FlashConfig):
+    h, qi, ki = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    hr = hr_ref[_kv_row(h, cfg), ki] if cfg.skip_blocks else jnp.int32(1)
+
+    @pl.when(_block_live(qi, ki, cfg, hr))
+    def _body():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        scale = cfg.orig_dh ** -0.5
+        s_raw = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+        ls_blk = ls_ref[0][None, :] if cfg.dms_delay > 0 else None
+        s, s_capped, _, ids_q = _mask_scores(s_raw, qi, ki, ls_blk, cfg)
+        p = jnp.exp(s - lse_ref[0][:, None])
+        p = jnp.where(ids_q < cfg.t, p, 0.0)
+        do = do_ref[0].astype(jnp.float32)
+        dp = jax.lax.dot_general(do, v_ref[0].astype(jnp.float32),
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0][:, None])
+        if cfg.logit_cap is not None:
+            ds = ds * (1.0 - (s_capped / cfg.logit_cap) ** 2)
+        dq_acc[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        dq_ref[0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def flash_dq(q, k, v, ls, do, lse, delta, hr, remap, cfg: FlashConfig):
+    bhq, tp, dh = q.shape
+    nq, nk = tp // cfg.block_q, tp // cfg.block_k
+
+    def qmap(h, qi, ki, *_):
+        return (h, qi, 0)
+
+    def kmap(h, qi, ki, hr_s, rm_s):
+        row = _kv_row(h, cfg)
+        if cfg.skip_blocks and cfg.dms_delay > 0:
+            fully_in_zone = (qi * cfg.block_q - (ki * cfg.block_k + cfg.block_k - 1)
+                             ) >= cfg.dms_delay
+            dead = (hr_s[row, ki] == 0) & fully_in_zone
+            blk = jnp.where(dead, rm_s[row, ki], ki)
+        else:
+            blk = ki
+        return (row, blk, 0)
+
+    def lsmap(h, qi, ki, hr_s, rm_s):
+        row, blk, _ = kmap(h, qi, ki, hr_s, rm_s)
+        return (row, blk)
+
+    def rowmap(h, qi, ki, *_):
+        return (h, qi)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bhq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, cfg.block_q, dh), qmap),
+            pl.BlockSpec((1, cfg.block_k, dh), kmap),
+            pl.BlockSpec((1, cfg.block_k, dh), kmap),
+            pl.BlockSpec((1, cfg.block_k), lsmap),
+            pl.BlockSpec((1, cfg.block_q, dh), qmap),
+            pl.BlockSpec((1, cfg.block_q), rowmap),
+            pl.BlockSpec((1, cfg.block_q), rowmap),
+        ],
+        out_specs=pl.BlockSpec((1, cfg.block_q, dh), qmap),
+        scratch_shapes=[pltpu.VMEM((cfg.block_q, dh), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_dq_kernel, cfg=cfg),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bhq, tp, dh), q.dtype),
+        interpret=cfg.interpret,
+        name="dms_flash_dq",
+    )(hr, remap, q, k, v, ls, do, lse, delta)
+
+
+# ---------------------------------------------------------------------------
+# backward: dk, dv, d(log_surv)
+# ---------------------------------------------------------------------------
+
+
+def _dkv_kernel(hr_ref, remap_ref, q_ref, k_ref, v_ref, ls_ref, do_ref,
+                lse_ref, delta_ref, dk_ref, dv_ref, dls_ref,
+                dk_acc, dv_acc, dls_acc, *, cfg: FlashConfig):
+    bh, kj, g, qi = (pl.program_id(0), pl.program_id(1),
+                     pl.program_id(2), pl.program_id(3))
+    ng, nq = pl.num_programs(2), pl.num_programs(3)
+
+    @pl.when((g == 0) & (qi == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+        dls_acc[...] = jnp.zeros_like(dls_acc)
+
+    hr = hr_ref[bh, kj] if cfg.skip_blocks else jnp.int32(1)
+
+    @pl.when(_block_live(qi, kj, cfg, hr))
+    def _body():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        scale = cfg.orig_dh ** -0.5
+        s_raw = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+        ls_blk = ls_ref[0][None, :] if cfg.dms_delay > 0 else None
+        s, s_capped, zone, ids_q = _mask_scores(s_raw, qi, kj, ls_blk, cfg)
+        p = jnp.exp(s - lse_ref[0][:, None])
+        p = jnp.where(ids_q < cfg.t, p, 0.0)
+        do = do_ref[0].astype(jnp.float32)
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0][:, None])
+        if cfg.dms_delay > 0 and zone is not None:
+            dls_acc[...] += jnp.sum(jnp.where(zone, ds, 0.0), axis=0, keepdims=True)
+        if cfg.logit_cap is not None:
+            ds = ds * (1.0 - (s_capped / cfg.logit_cap) ** 2)
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32) * scale
+
+    @pl.when((g == ng - 1) & (qi == nq - 1))
+    def _finish():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+        dls_ref[0] = dls_acc[0]
+
+
+def flash_dkv(q, k, v, ls, do, lse, delta, hr, remap, cfg: FlashConfig):
+    bhkv, tp, dh = k.shape
+    nq, nk = tp // cfg.block_q, tp // cfg.block_k
+    g_sz = cfg.hq // cfg.hkv
+
+    def qrow(bh, g):
+        b = bh // cfg.hkv
+        return b * cfg.hq + (bh % cfg.hkv) * g_sz + g
+
+    def qmap(bh, kj, g, qi, *_):
+        return (qrow(bh, g), qi, 0)
+
+    def rowmap(bh, kj, g, qi, *_):
+        return (qrow(bh, g), qi)
+
+    def kmap(bh, kj, g, qi, *_):
+        return (bh, kj, 0)
+
+    def lsmap(bh, kj, g, qi, *_):
+        return (bh, kj)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bhkv, nk, g_sz, nq),
+        in_specs=[
+            pl.BlockSpec((1, cfg.block_q, dh), qmap),
+            pl.BlockSpec((1, cfg.block_k, dh), kmap),
+            pl.BlockSpec((1, cfg.block_k, dh), kmap),
+            pl.BlockSpec((1, cfg.block_k), lsmap),
+            pl.BlockSpec((1, cfg.block_q, dh), qmap),
+            pl.BlockSpec((1, cfg.block_q), rowmap),
+            pl.BlockSpec((1, cfg.block_q), rowmap),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cfg.block_k, dh), kmap),
+            pl.BlockSpec((1, cfg.block_k, dh), kmap),
+            pl.BlockSpec((1, cfg.block_k), lsmap),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((cfg.block_k, dh), jnp.float32),
+            pltpu.VMEM((cfg.block_k, dh), jnp.float32),
+            pltpu.VMEM((1, cfg.block_k), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_dkv_kernel, cfg=cfg),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bhkv, tp, dh), k.dtype),
+            jax.ShapeDtypeStruct((bhkv, tp, dh), v.dtype),
+            jax.ShapeDtypeStruct((bhkv, tp), jnp.float32),
+        ],
+        interpret=cfg.interpret,
+        name="dms_flash_dkv",
+    )(hr, remap, q, k, v, ls, do, lse, delta)

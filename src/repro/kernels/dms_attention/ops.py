@@ -1,0 +1,156 @@
+"""jit'd wrapper for the DMS flash-attention kernels (+ custom VJP).
+
+Public entry point: :func:`dms_flash_attention` — takes the relaxed (or
+binarised) eviction decisions ``alpha`` and differentiates through the mask:
+``log_surv = log1p(-alpha)`` is computed *outside* the custom_vjp, so the
+α-chain rule is handled by JAX autodiff while the O(T²) attention body uses
+the hand-written Pallas forward/backward kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dms_attention.dms_attention import (FlashConfig, NEG_INF,
+                                                       flash_dkv, flash_dq,
+                                                       flash_fwd)
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+# -- inner custom-vjp function (log_surv in, static config hashable) ----------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _flash(q, k, v, ls, cfg: FlashConfig):
+    out, _ = _flash_fwd_impl(q, k, v, ls, cfg)
+    return out
+
+
+def _prep_tables(ls, cfg: FlashConfig):
+    """has_retained + remap tables per (BHkv, k-block) from log-survival."""
+    bhkv, tp = ls.shape
+    nk = tp // cfg.block_k
+    if not cfg.skip_blocks:
+        hr = jnp.ones((bhkv, nk), jnp.int32)
+        remap = jnp.broadcast_to(jnp.arange(nk, dtype=jnp.int32), (bhkv, nk))
+        return hr, remap
+    retained = (ls > NEG_INF / 2).reshape(bhkv, nk, cfg.block_k)
+    # key-padding counts as evicted
+    ids = jnp.arange(tp).reshape(nk, cfg.block_k)
+    retained = retained & (ids < cfg.t)[None]
+    hr = jnp.any(retained, axis=-1).astype(jnp.int32)                # (BHkv, nK)
+    idx = jnp.arange(nk, dtype=jnp.int32)
+    last_live = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(hr > 0, idx[None, :], -1), axis=1)
+    remap = jnp.where(last_live >= 0, last_live, idx[None, :]).astype(jnp.int32)
+    return hr, remap
+
+
+def _flash_fwd_impl(q, k, v, ls, cfg: FlashConfig):
+    hr, remap = _prep_tables(ls, cfg)
+    out, lse = flash_fwd(q, k, v, ls, hr, remap, cfg)
+    return out, lse
+
+
+def _flash_vjp_fwd(q, k, v, ls, cfg: FlashConfig):
+    out, lse = _flash_fwd_impl(q, k, v, ls, cfg)
+    return out, (q, k, v, ls, out, lse)
+
+
+def _flash_vjp_bwd(cfg: FlashConfig, res, dout):
+    q, k, v, ls, out, lse = res
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    hr, remap = _prep_tables(ls, cfg)
+    dq = flash_dq(q, k, v, ls, dout, lse, delta, hr, remap, cfg)
+    dk, dv, dls = flash_dkv(q, k, v, ls, dout, lse, delta, hr, remap, cfg)
+    return dq, dk, dv, dls
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+# -- public wrapper -----------------------------------------------------------
+
+
+def dms_flash_attention(
+    q: jnp.ndarray,                      # (B, T, Hq, Dh)
+    k: jnp.ndarray,                      # (B, T, Hkv, Dh)
+    v: jnp.ndarray,                      # (B, T, Hkv, Dh)
+    alpha: Optional[jnp.ndarray] = None,  # (B, Hkv, T) in [0,1]; None = vanilla
+    *,
+    window: Optional[int] = None,
+    dms_window: int = 0,
+    causal: bool = True,
+    logit_cap: Optional[float] = None,
+    immediate: bool = False,
+    skip_blocks: Optional[bool] = None,   # default: True iff alpha is binary-ish
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Flash attention with the DMS delayed-eviction mask.  Returns (B,T,Hq,Dh)."""
+    b, t, hq, dh = q.shape
+    hkv = k.shape[2]
+    interpret = _is_cpu() if interpret is None else interpret
+
+    bq = min(block_q, _round_up(t, 8))
+    bk = min(block_k, _round_up(t, 8))
+    tp = _round_up(t, max(bq, bk))
+    bq = min(bq, tp)
+    bk = min(bk, tp)
+
+    use_alpha = alpha is not None and dms_window >= 0 and alpha is not None
+    delay = (1 if immediate else dms_window) if alpha is not None else 0
+
+    # head-fold + pad
+    def fold(x, heads):
+        x = x.transpose(0, 2, 1, 3).reshape(b * heads, t, dh)
+        return jnp.pad(x, ((0, 0), (0, tp - t), (0, 0)))
+
+    qf, kf, vf = fold(q, hq), fold(k, hkv), fold(v, hkv)
+
+    if alpha is not None:
+        ls = jnp.maximum(jnp.log1p(-jnp.clip(alpha.astype(jnp.float32), 0.0, 1.0)),
+                         NEG_INF)
+        ls = ls.reshape(b * hkv, t)
+        ls = jnp.pad(ls, ((0, 0), (0, tp - t)), constant_values=NEG_INF)
+        if skip_blocks is None:
+            skip_blocks = False
+    else:
+        ls = jnp.zeros((b * hkv, tp), jnp.float32)
+        delay = 0
+        skip_blocks = False
+
+    cfg = FlashConfig(
+        t=t, orig_dh=dh, hq=hq, hkv=hkv, window=window, dms_delay=delay,
+        causal=causal, logit_cap=logit_cap, block_q=bq, block_k=bk,
+        skip_blocks=bool(skip_blocks), interpret=bool(interpret),
+    )
+    out = _flash(qf, kf, vf, ls, cfg)
+    out = out[:, :t].reshape(b, hq, t, dh).transpose(0, 2, 1, 3)
+    return out
+
+
+def dms_flash_attention_prefill(
+    q, k, v, alpha_bin, *, dms_window: int, window=None, causal=True,
+    logit_cap=None, block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+    interpret=None,
+):
+    """Prefill entry: binarised α enables dead-block skipping (compute + DMA)."""
+    return dms_flash_attention(
+        q, k, v, alpha_bin.astype(jnp.float32), window=window,
+        dms_window=dms_window, causal=causal, logit_cap=logit_cap,
+        skip_blocks=True, block_q=block_q, block_k=block_k, interpret=interpret)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the DMS flash-attention kernel.
+
+Mirrors the kernel semantics exactly: causal + local-window masks, the DMS
+delayed-eviction additive mask built from ``log_surv = log1p(-alpha)``, and
+the gemma-style logit softcap (applied to raw scores, before mask addition).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def dms_attention_ref(
+    q: jnp.ndarray,               # (B, T, Hq, Dh)
+    k: jnp.ndarray,               # (B, T, Hkv, Dh)
+    v: jnp.ndarray,               # (B, T, Hkv, Dh)
+    log_surv: Optional[jnp.ndarray],   # (B, Hkv, T) = log1p(-alpha), or None
+    *,
+    window: Optional[int] = None,      # local attention window (i - j < window)
+    dms_window: int = 0,               # eviction delay w (mask applies i - j >= w)
+    causal: bool = True,
+    logit_cap: Optional[float] = None,
+    immediate: bool = False,
+) -> jnp.ndarray:
+    b, t, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, t, hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bihgd,bjhd->bhgij", qg, k.astype(jnp.float32)) * (dh ** -0.5)
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    if causal:
+        s = jnp.where((j <= i)[None, None, None], s, NEG_INF)
+    if window is not None:
+        s = jnp.where(((i - j) < window)[None, None, None], s, NEG_INF)
+    if log_surv is not None:
+        delay = 1 if immediate else dms_window
+        zone = (i - j) >= delay
+        add = jnp.where(zone[None, None], log_surv[:, :, None, :], 0.0)   # (B,H,Tq,Tk)
+        s = s + add[:, :, None]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgij,bjhd->bihgd", p, v.astype(jnp.float32))
+    return out.reshape(b, t, hq, dh).astype(q.dtype)

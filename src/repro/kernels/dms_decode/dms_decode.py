@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: flash-decode over the DMS slot-compacted KV arena.
+
+The production win of DMS at decode time is that the *physical* arena has
+``P ≈ S/CR + w`` slots instead of S — this kernel streams exactly those P
+slots (the CR× HBM-traffic reduction is structural, not simulated).  Dead
+slots (free-list holes) are masked via the ``valid`` bitmap; blocks that are
+entirely dead are skipped with ``@pl.when`` using a scalar-prefetched
+per-block liveness table.
+
+Grid: ``(B·Hkv, nP)`` — one pass over the arena per kv head; the G query
+heads of the group ride along as rows of the (G, Dh) q tile so GQA reuses
+each streamed KV block across the whole group (the main arithmetic-intensity
+lever at decode time).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+class DecodeConfig(NamedTuple):
+    orig_dh: int
+    g: int                      # query heads per kv head
+    block_p: int
+    logit_cap: Optional[float]
+    interpret: bool
+
+
+def _decode_kernel(blk_live_ref, q_ref, k_ref, v_ref, valid_ref,
+                   o_ref, acc_ref, m_ref, l_ref, *, cfg: DecodeConfig):
+    h, pi = pl.program_id(0), pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(blk_live_ref[h, pi] > 0)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                  # (G, Dh)
+        k = k_ref[0].astype(jnp.float32)                  # (BP, Dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (cfg.orig_dh ** -0.5)
+        if cfg.logit_cap is not None:
+            s = cfg.logit_cap * jnp.tanh(s / cfg.logit_cap)
+        live = valid_ref[0][None, :] > 0                  # (1, BP)
+        s = jnp.where(live, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(live, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(pi == np_ - 1)
+    def _finish():
+        l = l_ref[...]
+        l_safe = jnp.where(l <= 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+def decode_fwd(q, k, v, valid, blk_live, cfg: DecodeConfig):
+    """q: (BHkv, G, Dh); k/v: (BHkv, Pp, Dh); valid: (BHkv, Pp) int32;
+    blk_live: (BHkv, nP) int32.  Returns (BHkv, G, Dh)."""
+    bh, g, dh = q.shape
+    pp = k.shape[1]
+    np_ = pp // cfg.block_p
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, np_),
+        in_specs=[
+            pl.BlockSpec((1, g, dh), lambda h, pi, bl: (h, 0, 0)),
+            pl.BlockSpec((1, cfg.block_p, dh), lambda h, pi, bl: (h, pi, 0)),
+            pl.BlockSpec((1, cfg.block_p, dh), lambda h, pi, bl: (h, pi, 0)),
+            pl.BlockSpec((1, cfg.block_p), lambda h, pi, bl: (h, pi)),
+        ],
+        out_specs=pl.BlockSpec((1, g, dh), lambda h, pi, bl: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, cfg=cfg),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, g, dh), q.dtype),
+        interpret=cfg.interpret,
+        name="dms_decode",
+    )(blk_live, q, k, v, valid)

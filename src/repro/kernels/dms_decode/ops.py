@@ -1,0 +1,46 @@
+"""jit'd wrapper for the DMS decode kernel (inference only — no VJP needed)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dms_decode.dms_decode import DecodeConfig, decode_fwd
+
+DEFAULT_BLOCK_P = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def dms_decode_attention(
+    q: jnp.ndarray,       # (B, 1, Hq, Dh)
+    k: jnp.ndarray,       # (B, Hkv, P, Dh)
+    v: jnp.ndarray,
+    valid: jnp.ndarray,   # (B, Hkv, P) bool
+    *,
+    logit_cap: Optional[float] = None,
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    b, _, hq, dh = q.shape
+    hkv, p = k.shape[1], k.shape[2]
+    g = hq // hkv
+    interpret = (jax.default_backend() == "cpu") if interpret is None else interpret
+
+    bp = min(block_p, _round_up(p, 8))
+    pp = _round_up(p, bp)
+
+    qf = q[:, 0].reshape(b, hkv, g, dh).reshape(b * hkv, g, dh)
+    kf = jnp.pad(k.reshape(b * hkv, p, dh), ((0, 0), (0, pp - p), (0, 0)))
+    vf = jnp.pad(v.reshape(b * hkv, p, dh), ((0, 0), (0, pp - p), (0, 0)))
+    valf = jnp.pad(valid.reshape(b * hkv, p).astype(jnp.int32),
+                   ((0, 0), (0, pp - p)))
+    blk_live = jnp.max(valf.reshape(b * hkv, pp // bp, bp), axis=-1)
+
+    cfg = DecodeConfig(orig_dh=dh, g=g, block_p=bp, logit_cap=logit_cap,
+                       interpret=bool(interpret))
+    out = decode_fwd(qf, kf, vf, valf, blk_live, cfg)
+    return out.reshape(b, hkv, g, dh).reshape(b, 1, hq, dh)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the DMS decode-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def dms_decode_ref(
+    q: jnp.ndarray,        # (B, 1, Hq, Dh) — one new token
+    k: jnp.ndarray,        # (B, Hkv, P, Dh) — slot arena (post-RoPE keys)
+    v: jnp.ndarray,        # (B, Hkv, P, Dh)
+    valid: jnp.ndarray,    # (B, Hkv, P) bool — live slots
+    *,
+    logit_cap: Optional[float] = None,
+) -> jnp.ndarray:
+    b, _, hq, dh = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q[:, 0].reshape(b, hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhpd->bhgp", qg, k.astype(jnp.float32)) * (dh ** -0.5)
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    s = jnp.where(valid[:, :, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgp,bhpd->bhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)

@@ -1,0 +1,16 @@
+"""SSD chunk computation wrapper.
+
+A dedicated Pallas SSD kernel (intra-chunk dual-form matmul with in-VMEM
+decay masks) is the natural next hot-spot after the attention kernels; the
+current wrapper routes to the chunked jnp formulation, which XLA already maps
+onto the MXU as batched matmuls — on TPU the win from a hand kernel is the
+fusion of the decay-mask construction, estimated <10% of SSD block time
+(see EXPERIMENTS.md §Perf notes).  Kept as the integration point.
+"""
+from __future__ import annotations
+
+from repro.models.ssd import ssd_chunked_ref
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, *, chunk: int, init_state=None):
+    return ssd_chunked_ref(x, dt, a, bmat, cmat, chunk, init_state=init_state)

@@ -1,0 +1,3 @@
+"""Pure-jnp oracle for the SSD chunk kernel = the chunked reference in
+repro.models.ssd (re-exported for the kernels/ layout convention)."""
+from repro.models.ssd import ssd_chunked_ref  # noqa: F401

@@ -1,0 +1,42 @@
+"""Production mesh builders.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis crosses DCI links and carries only data parallelism (+ optionally
+compressed gradient reduction; see repro.optim.compress).
+
+Defined as functions so importing this module never touches jax device state
+(the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1):
+    """Tiny mesh over the actually-available devices (tests / CPU)."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that carry the batch (data-parallel) dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def dp_size(mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n

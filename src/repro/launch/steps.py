@@ -1,0 +1,248 @@
+"""Step functions (train / retrofit / prefill / serve) + input_specs.
+
+These are the units the multi-pod dry-run lowers and the launchers execute.
+``input_specs`` returns weak-type-correct ShapeDtypeStructs for every model
+input — shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distill as distill_lib
+from repro.core.config import ArchConfig, KVPolicyConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.optim import adamw
+
+# enc-dec shape convention: encoder momentum is capped at 4K frames;
+# the decoder carries the cell's full sequence length (see DESIGN.md).
+ENC_LEN_CAP = 4096
+
+
+def _frontend_split(arch: ArchConfig, seq_len: int) -> Tuple[int, int]:
+    """(frontend_tokens, text_tokens) summing to seq_len."""
+    if arch.frontend == "vision_patches" and arch.frontend_tokens:
+        f = min(arch.frontend_tokens, seq_len // 2)
+        return f, seq_len - f
+    return 0, seq_len
+
+
+def enc_len_for(arch: ArchConfig, seq_len: int) -> int:
+    return min(ENC_LEN_CAP, seq_len) if arch.encoder_layers else 0
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+
+def train_input_specs(arch: ArchConfig, shape: ShapeConfig,
+                      accum_steps: int = 1) -> Dict[str, Any]:
+    """With ``accum_steps > 1`` the pipeline emits microbatched tensors
+    (K, B/K, ...) and the train step scans over K, accumulating grads."""
+    b, s = shape.global_batch, shape.seq_len
+    assert b % accum_steps == 0, (b, accum_steps)
+    f, t_text = _frontend_split(arch, s)
+    lead = (accum_steps, b // accum_steps) if accum_steps > 1 else (b,)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct(lead + (t_text,), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(lead + (s,), jnp.int32),
+    }
+    if f:
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+            lead + (f, arch.d_model), jnp.dtype(arch.dtype))
+    e = enc_len_for(arch, s)
+    if e:
+        specs["enc_embeds"] = jax.ShapeDtypeStruct(
+            lead + (e, arch.d_model), jnp.dtype(arch.dtype))
+    return specs
+
+
+def prefill_input_specs(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    specs = train_input_specs(arch, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_input_specs(arch: ArchConfig, shape: ShapeConfig,
+                       policy: KVPolicyConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: tfm.init_decode_state(arch, b, s, policy))
+    specs: Dict[str, Any] = {
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache,
+    }
+    e = enc_len_for(arch, s)
+    if e:
+        specs["enc_out"] = jax.ShapeDtypeStruct((b, e, arch.d_model),
+                                                jnp.dtype(arch.dtype))
+    return specs
+
+
+def params_spec(arch: ArchConfig, dtype: Optional[str] = None) -> Any:
+    shapes = jax.eval_shape(lambda: tfm.init_model(jax.random.PRNGKey(0), arch))
+    if dtype is not None:
+        shapes = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(dtype)), shapes)
+    return shapes
+
+
+def opt_state_spec(params_shapes: Any) -> Any:
+    return jax.eval_shape(lambda: adamw.init(
+        jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), params_shapes)))
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(arch: ArchConfig, opt_cfg: adamw.AdamWConfig, *,
+                    dms_train: bool = False, remat: bool = True,
+                    use_kernel: bool = False, distill_weight: float = 1.0,
+                    scan_layers: bool = True, attn_impl=None,
+                    accum_steps: int = 1, grad_shardings=None):
+    """Standard LM training step: CE (+ DMS aux + MoE aux), grads, AdamW.
+
+    ``accum_steps > 1`` expects microbatched inputs (K, B/K, ...) and
+    accumulates fp32 grads over a ``lax.scan`` — the production memory/
+    overlap schedule (per-microbatch reduce-scatter hides DP comms behind
+    the next microbatch's compute under XLA's latency-hiding scheduler).
+    """
+    mode = "dms_train" if (dms_train and arch.dms.enabled) else "vanilla"
+
+    def loss_fn(p, batch, rng, step):
+        logits, aux = tfm.model_forward(
+            p, batch["tokens"], arch, mode=mode, rng=rng, remat=remat,
+            use_kernel=use_kernel, scan_layers=scan_layers, attn_impl=attn_impl,
+            frontend_embeds=batch.get("frontend_embeds"),
+            enc_embeds=batch.get("enc_embeds"))
+        ce = distill_lib.lm_cross_entropy(logits, batch["labels"])
+        loss = ce + aux.get("moe_aux_loss", 0.0)
+        if mode == "dms_train":
+            loss = loss + distill_lib.retrofit_loss(
+                logits, None, batch["labels"], aux["alpha_sum"],
+                aux["alpha_count"], step, arch.dms)[1]["loss_aux"]
+        return loss, (ce, aux)
+
+    def train_step(params, opt_state, batch, step):
+        rng = jax.random.fold_in(jax.random.PRNGKey(17), step)
+        if accum_steps == 1:
+            (loss, (ce, aux)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, rng, step)
+        else:
+            def mb_body(acc, mb):
+                g_acc, l_acc, c_acc, a_sum, a_cnt = acc
+                (l, (c, aux)), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb, rng, step)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                if grad_shardings is not None:
+                    # ZeRO: reduce-scatter each microbatch's grads onto the
+                    # optimizer sharding; overlaps with the next microbatch
+                    g_acc = jax.lax.with_sharding_constraint(g_acc, grad_shardings)
+                return (g_acc, l_acc + l, c_acc + c,
+                        a_sum + aux.get("alpha_sum", 0.0),
+                        a_cnt + aux.get("alpha_count", 0.0)), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            z = jnp.zeros(())
+            (grads, loss, ce, a_sum, a_cnt), _ = jax.lax.scan(
+                mb_body, (g0, z, z, z, z), batch)
+            k = jnp.asarray(accum_steps, jnp.float32)
+            grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+            loss, ce = loss / k, ce / k
+            aux = {"alpha_sum": a_sum, "alpha_count": a_cnt}
+        params2, opt_state2, om = adamw.apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, "ce": ce, **om}
+        if mode == "dms_train":
+            metrics["alpha_mean"] = aux["alpha_sum"] / jnp.maximum(aux["alpha_count"], 1.0)
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_retrofit_step(arch: ArchConfig, opt_cfg: adamw.AdamWConfig, *,
+                       remat: bool = True, use_kernel: bool = False,
+                       phase1: bool = False, scan_layers: bool = True, attn_impl=None):
+    """Paper-faithful DMS retrofit: logit distillation from the frozen vanilla
+    teacher + one-sided L1 compression loss (§3.2, §4).  ``phase1`` runs the
+    borrowed-neuron zeroing schedule (App. B) instead of the DMS mask."""
+
+    def retrofit_step(params, teacher_params, opt_state, batch, step):
+        rng = jax.random.fold_in(jax.random.PRNGKey(23), step)
+        teacher_logits, _ = tfm.model_forward(
+            teacher_params, batch["tokens"], arch, mode="vanilla",
+            remat=remat, use_kernel=use_kernel, scan_layers=scan_layers,
+            attn_impl=attn_impl,
+            frontend_embeds=batch.get("frontend_embeds"),
+            enc_embeds=batch.get("enc_embeds"))
+        teacher_logits = jax.lax.stop_gradient(teacher_logits)
+
+        def loss_fn(p):
+            if phase1:
+                scale = jnp.clip(1.0 - step / arch.dms.neuron_zeroing_steps, 0.0, 1.0)
+                logits, aux = tfm.model_forward(
+                    p, batch["tokens"], arch, mode="dms_phase1", rng=rng,
+                    neuron_scale=scale, remat=remat, use_kernel=use_kernel,
+                    scan_layers=scan_layers, attn_impl=attn_impl,
+                    frontend_embeds=batch.get("frontend_embeds"),
+                    enc_embeds=batch.get("enc_embeds"))
+                aux = dict(aux, alpha_sum=jnp.zeros(()), alpha_count=jnp.ones(()))
+            else:
+                logits, aux = tfm.model_forward(
+                    p, batch["tokens"], arch, mode="dms_train", rng=rng,
+                    remat=remat, use_kernel=use_kernel,
+                    scan_layers=scan_layers, attn_impl=attn_impl,
+                    frontend_embeds=batch.get("frontend_embeds"),
+                    enc_embeds=batch.get("enc_embeds"))
+            loss, metrics = distill_lib.retrofit_loss(
+                logits, teacher_logits, batch["labels"],
+                aux["alpha_sum"], aux["alpha_count"], step, arch.dms)
+            loss = loss + aux.get("moe_aux_loss", 0.0)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params2, opt_state2, om = adamw.apply_updates(params, grads, opt_state, opt_cfg)
+        return params2, opt_state2, {**metrics, **om}
+
+    return retrofit_step
+
+
+def make_prefill_step(arch: ArchConfig, *, dms: bool = False,
+                      use_kernel: bool = False, scan_layers: bool = True,
+                      attn_impl=None):
+    """Prefill: full forward, emit last-position logits + per-layer KV
+    (+ retained map when DMS sparsifies the prefill)."""
+    mode = "dms_eval" if (dms and arch.dms.enabled) else "vanilla"
+
+    def prefill_step(params, batch):
+        logits, aux = tfm.model_forward(
+            params, batch["tokens"], arch, mode=mode, collect_kv=True,
+            use_kernel=use_kernel, scan_layers=scan_layers, attn_impl=attn_impl,
+            frontend_embeds=batch.get("frontend_embeds"),
+            enc_embeds=batch.get("enc_embeds"))
+        return logits[:, -1], aux["layer_kv"]
+
+    return prefill_step
+
+
+def make_serve_step(arch: ArchConfig, *, use_kernel: bool = False,
+                    scan_layers: bool = True):
+    """One decode step: new token in, logits + updated cache out."""
+
+    def serve_step(params, cache, batch):
+        logits, cache2, aux = tfm.decode_step(
+            params, batch["token"], cache, arch, batch["pos"],
+            use_kernel=use_kernel, scan_layers=scan_layers,
+            enc_out=batch.get("enc_out"))
+        return logits, cache2, aux["live_tokens"]
+
+    return serve_step

@@ -1,0 +1,47 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+Runs the fault-tolerant loop of :mod:`repro.train.loop`.  ``--smoke`` trains
+the reduced same-family config on CPU (a few hundred steps of a ~100M-class
+model is the examples/ path); the full config is intended for the production
+mesh where the same step functions are lowered via pjit (see dryrun.py for
+the sharding rules applied at scale).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_arch, get_smoke
+from repro.core.config import SHAPES
+from repro.data.pipeline import DataConfig
+from repro.train.loop import TrainConfig, train
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--retrofit", action="store_true",
+                    help="DMS retrofit (logit distillation) instead of pretrain")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    arch = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
+    data_cfg = DataConfig(vocab_size=arch.vocab_size, seq_len=args.seq_len,
+                          global_batch=args.batch, seed=args.seed)
+    cfg = TrainConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      retrofit=args.retrofit, use_kernel=args.use_kernel,
+                      seed=args.seed)
+    out = train(arch, data_cfg, cfg, log_fn=lambda m: print(json.dumps(m)))
+    print(json.dumps({"final": out["history"][-1] if out["history"] else {},
+                      "resumed_from": out["resumed_from"]}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+Block = (x-branch: linear -> causal conv1d -> RG-LRU) ⊙ (y-branch: linear ->
+GeLU) -> linear out.  RG-LRU recurrence (per channel):
+
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(c * softplus(Λ) * (-r_t))     = a^(c·r_t), a = sigmoid(Λ)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses an associative scan over T; decode is a single step carrying
+(h, conv buffer).  Fixed-size state ⇒ no KV cache ⇒ DMS does not apply to
+these layers (it applies to the hybrid's local-attention layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig, RGLRUConfig
+from repro.core.kv_cache import _tree_dataclass
+from repro.models.layers import dense_init
+
+_C = 8.0  # Griffin's fixed gate exponent
+
+
+@_tree_dataclass
+class RGLRUState:
+    h: jnp.ndarray      # (B, W) recurrent state (fp32)
+    conv: jnp.ndarray   # (B, K-1, W)
+    length: jnp.ndarray
+
+
+def init_rglru(key, d_model: int, cfg: RGLRUConfig) -> dict:
+    w = cfg.lru_width or d_model
+    ks = jax.random.split(key, 6)
+    # Λ init so that a^c = sigmoid(Λ)^c spreads over (0.9, 0.999) at r=1
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    a0 = jnp.exp(jnp.log(u) / _C)            # a = u^(1/c) in (0, 1)
+    lam = jnp.log(a0) - jnp.log1p(-a0)       # logit(a)
+    return {
+        "w_x": dense_init(ks[1], d_model, w),
+        "w_y": dense_init(ks[2], d_model, w),
+        "conv_w": jax.random.normal(ks[3], (cfg.conv_kernel, w), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_gate_r": dense_init(ks[4], w, w, scale=w ** -0.5),
+        "b_gate_r": jnp.zeros((w,), jnp.float32),
+        "w_gate_i": dense_init(ks[5], w, w, scale=w ** -0.5),
+        "b_gate_i": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "w_out": dense_init(jax.random.fold_in(key, 7), w, d_model),
+    }
+
+
+def _gates(p, u, dtype):
+    """u: (..., W) conv output.  Returns (log_a, gated_input) fp32."""
+    uf = u.astype(dtype)
+    r = jax.nn.sigmoid((uf @ p["w_gate_r"].astype(dtype)).astype(jnp.float32) + p["b_gate_r"])
+    i = jax.nn.sigmoid((uf @ p["w_gate_i"].astype(dtype)).astype(jnp.float32) + p["b_gate_i"])
+    # log a_t = c * r_t * log sigmoid(Λ) = -c * r_t * softplus(-Λ)   (<= 0)
+    log_a = -_C * jax.nn.softplus(-p["lam"]) * r
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * u.astype(jnp.float32))
+    return log_a, gated
+
+
+def rglru_forward(p: dict, xin: jnp.ndarray, arch: ArchConfig,
+                  state: Optional[RGLRUState] = None
+                  ) -> Tuple[jnp.ndarray, Optional[RGLRUState]]:
+    """Full-sequence forward.  xin: (B, T, D)."""
+    cfg = arch.rglru
+    dtype = jnp.dtype(arch.dtype)
+    bsz, t, _ = xin.shape
+    w = cfg.lru_width or arch.d_model
+    k = cfg.conv_kernel
+
+    x = xin.astype(dtype) @ p["w_x"].astype(dtype)            # (B,T,W)
+    y = jax.nn.gelu((xin.astype(dtype) @ p["w_y"].astype(dtype)).astype(jnp.float32))
+
+    pad = (jnp.zeros((bsz, k - 1, w), x.dtype) if state is None
+           else state.conv.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    u = sum(xp[:, i:i + t] * p["conv_w"].astype(dtype)[i] for i in range(k))
+    u = u + p["conv_b"].astype(dtype)
+    new_conv = xp[:, t:t + k - 1] if t >= k - 1 else jnp.concatenate([pad[:, t:], x], axis=1)
+
+    log_a, gated = _gates(p, u, dtype)                        # (B,T,W) fp32
+
+    # associative scan:  h_t = a_t h_{t-1} + b_t  ==  (a, b) ∘ (a', b')
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_seq = jnp.exp(log_a)
+    b_seq = gated
+    if state is not None:
+        b_seq = b_seq.at[:, 0].add(a_seq[:, 0] * state.h.astype(jnp.float32))
+    _, h_seq = jax.lax.associative_scan(combine, (a_seq, b_seq), axis=1)
+    h_final = h_seq[:, -1]
+
+    out = (h_seq * y).astype(dtype) @ p["w_out"].astype(dtype)
+    return out.astype(xin.dtype), RGLRUState(
+        h_final, new_conv, (state.length if state is not None else 0) + t)
+
+
+def rglru_decode_step(p: dict, x_t: jnp.ndarray, state: RGLRUState, arch: ArchConfig
+                      ) -> Tuple[jnp.ndarray, RGLRUState]:
+    cfg = arch.rglru
+    dtype = jnp.dtype(arch.dtype)
+    bsz = x_t.shape[0]
+    x = x_t.astype(dtype) @ p["w_x"].astype(dtype)            # (B,1,W)
+    y = jax.nn.gelu((x_t.astype(dtype) @ p["w_y"].astype(dtype)).astype(jnp.float32))
+    win = jnp.concatenate([state.conv.astype(x.dtype), x], axis=1)     # (B,K,W)
+    u = jnp.einsum("bkw,kw->bw", win, p["conv_w"].astype(dtype)) + p["conv_b"].astype(dtype)
+    log_a, gated = _gates(p, u[:, None], dtype)
+    h = jnp.exp(log_a[:, 0]) * state.h.astype(jnp.float32) + gated[:, 0]
+    out = ((h[:, None] * y).astype(dtype) @ p["w_out"].astype(dtype)).astype(x_t.dtype)
+    return out, RGLRUState(h, win[:, 1:], state.length + 1)
+
+
+def init_rglru_state(batch: int, d_model: int, cfg: RGLRUConfig) -> RGLRUState:
+    w = cfg.lru_width or d_model
+    return RGLRUState(
+        jnp.zeros((batch, w), jnp.float32),
+        jnp.zeros((batch, cfg.conv_kernel - 1, w), jnp.float32),
+        jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,228 @@
+"""Mamba-2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm: within a chunk the recurrence is computed as a masked
+matmul (the "attention" dual form); chunk states are carried by a scan.
+Attention-free: no KV cache — decode carries a fixed-size (H, Dh, N) state +
+a (K-1)-deep conv buffer.  DMS is inapplicable here (documented in DESIGN.md
+§Arch-applicability); the block exists so the framework covers the assigned
+``mamba2-2.7b`` architecture and the long-context comparisons.
+
+TP note: projections are stored as separate matrices (w_z/w_x/w_b/w_c/w_dt)
+rather than one fused in_proj so each shards cleanly on the ``model`` axis
+(head-parallel) without GSPMD halo exchanges at the concat boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig, SSMConfig
+from repro.core.kv_cache import _tree_dataclass
+from repro.models.layers import dense_init
+
+
+@_tree_dataclass
+class SSDState:
+    ssm: jnp.ndarray      # (B, H, Dh, N)
+    conv_x: jnp.ndarray   # (B, K-1, d_inner)
+    conv_b: jnp.ndarray   # (B, K-1, G*N)
+    conv_c: jnp.ndarray   # (B, K-1, G*N)
+    length: jnp.ndarray
+
+
+def init_ssd(key, d_model: int, cfg: SSMConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    di = cfg.d_inner(d_model)
+    nh = cfg.num_heads(d_model)
+    g, n = cfg.n_groups, cfg.d_state
+    return {
+        "w_z": dense_init(ks[0], d_model, di),
+        "w_x": dense_init(ks[1], d_model, di),
+        "w_b": dense_init(ks[2], d_model, g * n),
+        "w_c": dense_init(ks[3], d_model, g * n),
+        "w_dt": dense_init(ks[4], d_model, nh),
+        "conv_x_w": jax.random.normal(ks[5], (cfg.conv_kernel, di), jnp.float32) * 0.1,
+        "conv_x_b": jnp.zeros((di,), jnp.float32),
+        "conv_b_w": jax.random.normal(ks[6], (cfg.conv_kernel, g * n), jnp.float32) * 0.1,
+        "conv_b_b": jnp.zeros((g * n,), jnp.float32),
+        "conv_c_w": jax.random.normal(ks[7], (cfg.conv_kernel, g * n), jnp.float32) * 0.1,
+        "conv_c_b": jnp.zeros((g * n,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01, jnp.float32))),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(jax.random.fold_in(key, 9), di, d_model),
+    }
+
+
+def _causal_conv(x, w, b, prev, t):
+    """Depthwise causal conv.  x: (B,T,C); w: (K,C); prev: (B,K-1,C) history."""
+    k = w.shape[0]
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + t] * w.astype(x.dtype)[i] for i in range(k))
+    y = jax.nn.silu(y + b.astype(x.dtype))
+    new_prev = xp[:, t:t + k - 1] if t >= k - 1 else jnp.concatenate(
+        [prev.astype(x.dtype)[:, t:], x], axis=1)
+    return y, new_prev
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    yz = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    var = jnp.mean(yz * yz, axis=-1, keepdims=True)
+    return (yz * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def ssd_forward(p: dict, xin: jnp.ndarray, arch: ArchConfig,
+                state: Optional[SSDState] = None, use_kernel: bool = False,
+                ) -> Tuple[jnp.ndarray, SSDState]:
+    """Full-sequence SSD.  xin: (B, T, D).  Returns (y, final_state)."""
+    cfg = arch.ssm
+    dtype = jnp.dtype(arch.dtype)
+    bsz, t, d_model = xin.shape
+    di = cfg.d_inner(d_model)
+    nh = cfg.num_heads(d_model)
+    g, n, ph = cfg.n_groups, cfg.d_state, cfg.head_dim
+    k = cfg.conv_kernel
+    xd = xin.astype(dtype)
+
+    z = xd @ p["w_z"].astype(dtype)
+    x_in = xd @ p["w_x"].astype(dtype)
+    b_in = xd @ p["w_b"].astype(dtype)
+    c_in = xd @ p["w_c"].astype(dtype)
+    dt = xd @ p["w_dt"].astype(dtype)
+
+    def hist(name, ch):
+        return (jnp.zeros((bsz, k - 1, ch), dtype) if state is None
+                else getattr(state, name))
+
+    x, new_cx = _causal_conv(x_in, p["conv_x_w"], p["conv_x_b"], hist("conv_x", di), t)
+    bmat, new_cb = _causal_conv(b_in, p["conv_b_w"], p["conv_b_b"], hist("conv_b", g * n), t)
+    cmat, new_cc = _causal_conv(c_in, p["conv_c_w"], p["conv_c_b"], hist("conv_c", g * n), t)
+
+    x = x.reshape(bsz, t, nh, ph)
+    bmat = bmat.reshape(bsz, t, g, n)
+    cmat = cmat.reshape(bsz, t, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])        # (B,T,H)
+    a = -jnp.exp(p["a_log"])                                           # (H,)
+
+    if use_kernel:
+        from repro.kernels.ssd import ops as ssd_kops
+        y, final = ssd_kops.ssd_chunked(
+            x, dt, a, bmat, cmat, chunk=cfg.chunk_size,
+            init_state=None if state is None else state.ssm)
+    else:
+        y, final = ssd_chunked_ref(
+            x, dt, a, bmat, cmat, cfg.chunk_size,
+            init_state=None if state is None else state.ssm)
+    y = y + x.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = _gated_norm(y.reshape(bsz, t, di).astype(dtype), z, p["norm_scale"])
+    out = (y.astype(dtype) @ p["w_out"].astype(dtype)).astype(xin.dtype)
+    new_state = SSDState(final, new_cx, new_cb, new_cc,
+                         (state.length if state is not None else 0) + t)
+    return out, new_state
+
+
+def ssd_chunked_ref(x, dt, a, bmat, cmat, q: int, init_state=None):
+    """Chunked SSD reference.  x: (B,T,H,P); dt: (B,T,H); a: (H,);
+    B/C: (B,T,G,N).  Returns (y (B,T,H,P) fp32, final_state (B,H,P,N))."""
+    bsz, t, nh, ph = x.shape
+    n = bmat.shape[-1]
+    g = bmat.shape[2]
+    if t % q:
+        padlen = q - t % q
+        x = jnp.pad(x, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padlen), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+    tt = x.shape[1]
+    nc = tt // q
+    rep = nh // g
+
+    xc = x.reshape(bsz, nc, q, nh, ph).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, nh).astype(jnp.float32)
+    bc = bmat.reshape(bsz, nc, q, g, n).astype(jnp.float32)
+    cc = cmat.reshape(bsz, nc, q, g, n).astype(jnp.float32)
+    bh = jnp.repeat(bc, rep, axis=3)                # (B,NC,Q,H,N)
+    ch = jnp.repeat(cc, rep, axis=3)
+
+    da = dtc * a[None, None, None, :]               # (B,NC,Q,H) log-decay
+    cum = jnp.cumsum(da, axis=2)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,NC,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", ch, bh) * l_mat
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores, dtc, xc)
+
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,NC,Q,H)
+    chunk_state = jnp.einsum("bcjh,bcjh,bcjhn,bcjhp->bchpn",
+                             decay_to_end, dtc, bh, xc)       # (B,NC,H,P,N)
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))                # (B,NC,H)
+
+    def scan_fn(s, inp):
+        cs, cd = inp
+        return s * cd[..., None, None] + cs, s                # emit state BEFORE chunk
+
+    s0 = (jnp.zeros((bsz, nh, ph, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, states_before = jax.lax.scan(
+        scan_fn, s0,
+        (chunk_state.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    states_before = states_before.transpose(1, 0, 2, 3, 4)    # (B,NC,H,P,N)
+
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", ch * jnp.exp(cum)[..., None], states_before)
+    y = (y_intra + y_inter).reshape(bsz, tt, nh, ph)
+    return y[:, :t], final
+
+
+def ssd_decode_step(p: dict, x_t: jnp.ndarray, state: SSDState, arch: ArchConfig
+                    ) -> Tuple[jnp.ndarray, SSDState]:
+    """Single-token recurrent step.  x_t: (B, 1, D)."""
+    cfg = arch.ssm
+    dtype = jnp.dtype(arch.dtype)
+    bsz, _, d_model = x_t.shape
+    di = cfg.d_inner(d_model)
+    nh = cfg.num_heads(d_model)
+    g, n, ph = cfg.n_groups, cfg.d_state, cfg.head_dim
+    xd = x_t.astype(dtype)
+
+    z = xd @ p["w_z"].astype(dtype)
+    x_in = xd @ p["w_x"].astype(dtype)
+    b_in = xd @ p["w_b"].astype(dtype)
+    c_in = xd @ p["w_c"].astype(dtype)
+    dt = xd @ p["w_dt"].astype(dtype)
+
+    x, new_cx = _causal_conv(x_in, p["conv_x_w"], p["conv_x_b"], state.conv_x, 1)
+    bmat, new_cb = _causal_conv(b_in, p["conv_b_w"], p["conv_b_b"], state.conv_b, 1)
+    cmat, new_cc = _causal_conv(c_in, p["conv_c_w"], p["conv_c_b"], state.conv_c, 1)
+
+    x = x.reshape(bsz, nh, ph).astype(jnp.float32)
+    bmat = jnp.repeat(bmat.reshape(bsz, g, n), nh // g, axis=1).astype(jnp.float32)
+    cmat = jnp.repeat(cmat.reshape(bsz, g, n), nh // g, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a[None])
+    s = state.ssm.astype(jnp.float32) * decay[..., None, None] + \
+        jnp.einsum("bh,bhn,bhp->bhpn", dt, bmat, x)
+    y = jnp.einsum("bhn,bhpn->bhp", cmat, s)
+    y = y + x * p["d_skip"][None, :, None]
+    y = _gated_norm(y.reshape(bsz, 1, di).astype(dtype), z, p["norm_scale"])
+    out = (y.astype(dtype) @ p["w_out"].astype(dtype)).astype(x_t.dtype)
+    return out, SSDState(s, new_cx, new_cb, new_cc, state.length + 1)
+
+
+def init_ssd_state(batch: int, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> SSDState:
+    di = cfg.d_inner(d_model)
+    nh = cfg.num_heads(d_model)
+    gn = cfg.n_groups * cfg.d_state
+    k1 = cfg.conv_kernel - 1
+    return SSDState(
+        jnp.zeros((batch, nh, cfg.head_dim, cfg.d_state), jnp.float32),
+        jnp.zeros((batch, k1, di), dtype),
+        jnp.zeros((batch, k1, gn), dtype),
+        jnp.zeros((batch, k1, gn), dtype),
+        jnp.zeros((), jnp.int32),
+    )

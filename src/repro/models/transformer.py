@@ -1,0 +1,456 @@
+"""Unified model: decoder-only / hybrid / SSM / MoE / encoder-decoder LMs.
+
+One code path covers every assigned architecture.  Layers are grouped into
+*superblocks* (one repetition of ``arch.layer_pattern``); superblocks are
+scanned with ``jax.lax.scan`` so HLO size and compile time stay bounded at
+full depth (64-layer Mamba-2 compiles the same graph as a 2-layer one).
+
+Params layout::
+
+    {"embed": (V, D),
+     "blocks": {"0": <stacked over superblocks>, "1": ...},   # per pattern pos
+     "enc_blocks": {...},                                     # enc-dec only
+     "final_norm": {...}, "lm_head": (D, V)?}
+
+Caches for decode mirror the same structure: ``{"0": stacked-cache, ...}``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig, KVPolicyConfig
+from repro.core.baselines import DMCCache, H2OCache, QuestCache, TOVACache
+from repro.core.kv_cache import MaskedDMSCache, SlotDMSCache, VanillaCache
+from repro.models import attention as attn_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssd as ssd_lib
+from repro.models.layers import init_mlp, init_norm, mlp_apply, norm_apply, softcap
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, arch: ArchConfig, kind: str, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    d = arch.d_model
+    if kind in ("attn", "attn_local"):
+        p["attn_norm"] = init_norm(d, arch.norm)
+        p["attn"] = attn_lib.init_attention(ks[0], d, arch.attn)
+        if arch.post_norm:
+            p["attn_post_norm"] = init_norm(d, arch.norm)
+        if cross:
+            p["cross_norm"] = init_norm(d, arch.norm)
+            p["cross"] = attn_lib.init_attention(ks[1], d, arch.attn)
+        if arch.mlp is not None:
+            p["mlp_norm"] = init_norm(d, arch.norm)
+            p["mlp"] = init_mlp(ks[2], d, arch.mlp)
+            if arch.post_norm:
+                p["mlp_post_norm"] = init_norm(d, arch.norm)
+    elif kind == "ssd":
+        p["norm"] = init_norm(d, arch.norm)
+        p["ssd"] = ssd_lib.init_ssd(ks[0], d, arch.ssm)
+    elif kind == "rglru":
+        p["rglru_norm"] = init_norm(d, arch.norm)
+        p["rglru"] = rglru_lib.init_rglru(ks[0], d, arch.rglru)
+        if arch.mlp is not None:
+            p["mlp_norm"] = init_norm(d, arch.norm)
+            p["mlp"] = init_mlp(ks[2], d, arch.mlp)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_model(key, arch: ArchConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    vp = arch.padded_vocab
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (vp, arch.d_model), jnp.float32) * 0.02,
+        "final_norm": init_norm(arch.d_model, arch.norm),
+    }
+    if not arch.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            ks[1], (arch.d_model, vp), jnp.float32) * (arch.d_model ** -0.5)
+
+    nsb = arch.num_superblocks
+    blocks: Dict[str, Any] = {}
+    for pi, kind in enumerate(arch.layer_pattern):
+        layer_keys = jax.random.split(jax.random.fold_in(ks[2], pi), nsb)
+        blocks[str(pi)] = _stack([
+            _init_block(layer_keys[s], arch, kind, cross=arch.cross_attention)
+            for s in range(nsb)])
+    params["blocks"] = blocks
+
+    if arch.encoder_layers:
+        ne = arch.encoder_layers // arch.pattern_period
+        enc_blocks: Dict[str, Any] = {}
+        for pi, kind in enumerate(arch.layer_pattern):
+            layer_keys = jax.random.split(jax.random.fold_in(ks[3], pi), ne)
+            enc_blocks[str(pi)] = _stack([
+                _init_block(layer_keys[s], arch, kind) for s in range(ne)])
+        params["enc_blocks"] = enc_blocks
+        params["enc_final_norm"] = init_norm(arch.d_model, arch.norm)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _layer_window(arch: ArchConfig, kind: str) -> Optional[int]:
+    if kind == "attn_local":
+        return arch.attn.window
+    return None
+
+
+def _apply_block_full(
+    p: dict, x: jnp.ndarray, arch: ArchConfig, kind: str, *,
+    mode: str, rng, positions, neuron_scale, use_kernel, collect_kv,
+    causal: bool, enc_out: Optional[jnp.ndarray], attn_impl=None,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    aux: Dict[str, Any] = {}
+    if kind in ("attn", "attn_local"):
+        acfg = arch.attn if causal else dataclasses.replace(arch.attn, causal=False)
+        h = norm_apply(p["attn_norm"], x, arch.norm, arch.norm_eps)
+        a_out, a_aux = attn_lib.full_attention(
+            p["attn"], h, acfg, arch,
+            layer_window=_layer_window(arch, kind),
+            mode=mode, dms_rng=rng, positions=positions,
+            neuron_scale=neuron_scale, use_kernel=use_kernel,
+            attn_impl=attn_impl, collect_kv=collect_kv)
+        if arch.post_norm:
+            a_out = norm_apply(p["attn_post_norm"], a_out, arch.norm, arch.norm_eps)
+        x = x + a_out
+        aux.update(a_aux)
+        if enc_out is not None and "cross" in p:
+            h = norm_apply(p["cross_norm"], x, arch.norm, arch.norm_eps)
+            dtype = jnp.dtype(arch.dtype)
+            ek = (enc_out.astype(dtype) @ p["cross"]["wk"].astype(dtype)).reshape(
+                enc_out.shape[0], enc_out.shape[1], acfg.num_kv_heads, acfg.head_dim)
+            ev = (enc_out.astype(dtype) @ p["cross"]["wv"].astype(dtype)).reshape(
+                enc_out.shape[0], enc_out.shape[1], acfg.num_kv_heads, acfg.head_dim)
+            c_out, _ = attn_lib.full_attention(
+                p["cross"], h, dataclasses.replace(acfg, causal=False, rope="none"),
+                arch, mode="vanilla", positions=positions, kv_override=(ek, ev))
+            x = x + c_out
+        if arch.mlp is not None:
+            h = norm_apply(p["mlp_norm"], x, arch.norm, arch.norm_eps)
+            m_out, m_aux = mlp_apply(p["mlp"], h, arch.mlp, jnp.dtype(arch.dtype))
+            if arch.post_norm:
+                m_out = norm_apply(p["mlp_post_norm"], m_out, arch.norm, arch.norm_eps)
+            x = x + m_out
+            aux.update(m_aux)
+    elif kind == "ssd":
+        h = norm_apply(p["norm"], x, arch.norm, arch.norm_eps)
+        s_out, _ = ssd_lib.ssd_forward(p["ssd"], h, arch)
+        x = x + s_out
+    elif kind == "rglru":
+        h = norm_apply(p["rglru_norm"], x, arch.norm, arch.norm_eps)
+        r_out, _ = rglru_lib.rglru_forward(p["rglru"], h, arch)
+        x = x + r_out
+        if arch.mlp is not None:
+            h = norm_apply(p["mlp_norm"], x, arch.norm, arch.norm_eps)
+            m_out, m_aux = mlp_apply(p["mlp"], h, arch.mlp, jnp.dtype(arch.dtype))
+            x = x + m_out
+            aux.update(m_aux)
+    return x, aux
+
+
+def _scan_blocks(blocks, x, arch: ArchConfig, *, mode, rng, positions,
+                 neuron_scale, use_kernel, collect_kv, causal, enc_out,
+                 num_sb: int, remat: bool, scan_layers: bool = True,
+                 attn_impl=None):
+    """Apply all superblocks; accumulate DMS/MoE stats; optionally emit KV.
+
+    ``scan_layers=True`` uses ``lax.scan`` (bounded HLO size / compile time);
+    ``False`` unrolls (exact per-layer cost analysis for the dry-run roofline —
+    XLA's cost model counts while-loop bodies once)."""
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    sb_rngs = jax.random.split(rng, num_sb * arch.pattern_period).reshape(
+        num_sb, arch.pattern_period, 2)
+
+    def body(carry, xs):
+        x, a_sum, a_cnt, moe_aux = carry
+        blk, rngs = xs
+        ys = {}
+        for pi, kind in enumerate(arch.layer_pattern):
+            x, aux = _apply_block_full(
+                blk[str(pi)], x, arch, kind,
+                mode=mode, rng=rngs[pi], positions=positions,
+                neuron_scale=neuron_scale, use_kernel=use_kernel,
+                attn_impl=attn_impl, collect_kv=collect_kv, causal=causal,
+                enc_out=enc_out)
+            a_sum = a_sum + aux.get("alpha_sum", 0.0)
+            a_cnt = a_cnt + aux.get("alpha_count", 0.0)
+            moe_aux = moe_aux + aux.get("moe_aux_loss", 0.0)
+            if collect_kv:
+                ys[str(pi)] = {k: aux[k] for k in ("k_rope", "v", "retained", "alpha_bin")
+                               if k in aux}
+        return (x, a_sum, a_cnt, moe_aux), ys
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    zero = jnp.zeros((), jnp.float32)
+    if scan_layers:
+        (x, a_sum, a_cnt, moe_aux), ys = jax.lax.scan(
+            body, (x, zero, zero, zero), (blocks, sb_rngs))
+    else:
+        carry = (x, zero, zero, zero)
+        ys_list = []
+        for s in range(num_sb):
+            blk_s = jax.tree_util.tree_map(lambda a: a[s], blocks)
+            carry, y = body(carry, (blk_s, sb_rngs[s]))
+            ys_list.append(y)
+        (x, a_sum, a_cnt, moe_aux) = carry
+        ys = (jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ys_list)
+              if collect_kv and ys_list and ys_list[0] else {})
+    return x, {"alpha_sum": a_sum, "alpha_count": a_cnt, "moe_aux_loss": moe_aux,
+               "layer_kv": ys if collect_kv else None}
+
+
+# ---------------------------------------------------------------------------
+# public forward
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, tokens, arch: ArchConfig,
+                 frontend_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(arch.dtype))
+    if arch.embedding_multiplier != 1.0:
+        x = x * jnp.asarray(arch.embedding_multiplier, x.dtype)
+    if frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def lm_logits(params, x, arch: ArchConfig) -> jnp.ndarray:
+    h = norm_apply(params["final_norm"], x, arch.norm, arch.norm_eps)
+    dtype = jnp.dtype(arch.dtype)
+    w = params["embed"].T if arch.tie_embeddings else params["lm_head"]
+    logits = h.astype(dtype) @ w.astype(dtype)
+    logits = softcap(logits.astype(jnp.float32), arch.logit_softcap)
+    if arch.padded_vocab != arch.vocab_size:   # mask pad rows (see padded_vocab)
+        live = jnp.arange(arch.padded_vocab) < arch.vocab_size
+        logits = jnp.where(live, logits, -1e30)
+    return logits
+
+
+def encode(params, enc_embeds: jnp.ndarray, arch: ArchConfig, *,
+           use_kernel: bool = False, scan_layers: bool = True,
+           attn_impl=None) -> jnp.ndarray:
+    """Encoder stack (bidirectional) over precomputed frontend embeddings."""
+    ne = arch.encoder_layers // arch.pattern_period
+    t = enc_embeds.shape[1]
+    x, _ = _scan_blocks(
+        params["enc_blocks"], enc_embeds.astype(jnp.dtype(arch.dtype)), arch,
+        mode="vanilla", rng=None, positions=jnp.arange(t, dtype=jnp.int32),
+        neuron_scale=0.0, use_kernel=use_kernel, collect_kv=False,
+        causal=not arch.encoder_bidirectional, enc_out=None,
+        num_sb=ne, remat=False, scan_layers=scan_layers, attn_impl=attn_impl)
+    return norm_apply(params["enc_final_norm"], x, arch.norm, arch.norm_eps)
+
+
+def model_forward(
+    params: dict,
+    tokens: jnp.ndarray,                       # (B, T_text) int32
+    arch: ArchConfig,
+    *,
+    mode: str = "vanilla",                     # vanilla | dms_train | dms_eval | dms_phase1
+    rng: Optional[jax.Array] = None,
+    positions: Optional[jnp.ndarray] = None,
+    neuron_scale: float = 0.0,
+    use_kernel: bool = False,
+    collect_kv: bool = False,
+    remat: bool = False,
+    scan_layers: bool = True,
+    attn_impl: Optional[str] = None,
+    frontend_embeds: Optional[jnp.ndarray] = None,   # (B, F, D) modality stub
+    enc_embeds: Optional[jnp.ndarray] = None,        # (B, S_enc, D) enc-dec stub
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Full forward.  Returns (logits (B, T, V), aux)."""
+    enc_out = None
+    if arch.encoder_layers and enc_embeds is not None:
+        enc_out = encode(params, enc_embeds, arch, use_kernel=use_kernel,
+                         scan_layers=scan_layers, attn_impl=attn_impl)
+    x = embed_tokens(params, tokens, arch, frontend_embeds)
+    t = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(t, dtype=jnp.int32)
+    x, aux = _scan_blocks(
+        params["blocks"], x, arch, mode=mode, rng=rng, positions=positions,
+        neuron_scale=neuron_scale, use_kernel=use_kernel, collect_kv=collect_kv,
+        causal=True, enc_out=enc_out, num_sb=arch.num_superblocks, remat=remat,
+        scan_layers=scan_layers, attn_impl=attn_impl)
+    logits = lm_logits(params, x, arch)
+    if enc_out is not None:
+        aux["enc_out"] = enc_out
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode state
+# ---------------------------------------------------------------------------
+
+
+def _init_layer_cache(arch: ArchConfig, kind: str, batch: int, max_len: int,
+                      policy: KVPolicyConfig, dtype):
+    if kind == "ssd":
+        return ssd_lib.init_ssd_state(batch, arch.d_model, arch.ssm)
+    if kind == "rglru":
+        return rglru_lib.init_rglru_state(batch, arch.d_model, arch.rglru)
+    a = arch.attn
+    window = _layer_window(arch, kind)
+    eff_len = min(max_len, window + 1) if window is not None else max_len
+    if policy.kind == "vanilla":
+        if window is not None:
+            # ring-buffer via slot cache (overflow recycles oldest = sliding window)
+            return SlotDMSCache.init(batch, a.num_kv_heads, eff_len, a.head_dim,
+                                     max(arch.dms.window, 1), dtype,
+                                     dms_active=False)
+        return VanillaCache.init(batch, a.num_kv_heads, max_len, a.head_dim, dtype)
+    if policy.kind == "dms":
+        slots = SlotDMSCache.provision_slots(eff_len, policy.cr, arch.dms.window)
+        return SlotDMSCache.init(batch, a.num_kv_heads, min(slots, eff_len + 1),
+                                 a.head_dim, arch.dms.window, dtype)
+    if policy.kind == "dms_masked":
+        return MaskedDMSCache.init(batch, a.num_kv_heads, max_len, a.head_dim,
+                                   arch.dms.window, dtype)
+    if policy.kind == "tova":
+        budget = policy.budget or int(max_len / policy.cr)
+        return TOVACache.init(batch, a.num_kv_heads, budget + 1, a.head_dim, dtype)
+    if policy.kind == "h2o":
+        budget = policy.budget or int(max_len / policy.cr)
+        return H2OCache.init(batch, a.num_kv_heads, budget + 1, a.head_dim,
+                             max(budget // 2, 1), dtype)
+    if policy.kind == "quest":
+        ps = policy.quest_page_size
+        ml = ((max_len + ps - 1) // ps) * ps
+        top = policy.quest_top_pages or max(int(ml / policy.cr) // ps, 1)
+        return QuestCache.init(batch, a.num_kv_heads, ml, a.head_dim, ps, top, dtype)
+    if policy.kind == "dmc":
+        slots = int(max_len / policy.cr) + 16
+        return DMCCache.init(batch, a.num_kv_heads, slots, a.head_dim)
+    if policy.kind == "window":
+        budget = policy.budget or int(max_len / policy.cr)
+        return SlotDMSCache.init(batch, a.num_kv_heads, budget + 1, a.head_dim,
+                                 max(arch.dms.window, 1), dtype,
+                                 dms_active=False)
+    raise ValueError(policy.kind)
+
+
+def init_decode_state(arch: ArchConfig, batch: int, max_len: int,
+                      policy: KVPolicyConfig, dtype=None) -> Dict[str, Any]:
+    dtype = dtype or jnp.dtype(arch.dtype)
+    nsb = arch.num_superblocks
+    state: Dict[str, Any] = {}
+    for pi, kind in enumerate(arch.layer_pattern):
+        one = _init_layer_cache(arch, kind, batch, max_len, policy, dtype)
+        state[str(pi)] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (nsb,) + a.shape), one)
+    return state
+
+
+def decode_step(
+    params: dict,
+    token: jnp.ndarray,               # (B, 1) int32
+    state: Dict[str, Any],
+    arch: ArchConfig,
+    pos_t: jnp.ndarray,               # scalar int32
+    *,
+    use_kernel: bool = False,
+    scan_layers: bool = True,
+    enc_out: Optional[jnp.ndarray] = None,
+    enc_valid: Optional[jnp.ndarray] = None,
+    embed_override: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Dict[str, Any], Dict[str, Any]]:
+    """One decode step.  Returns (logits (B, V), new_state, aux)."""
+    x = (embed_override if embed_override is not None
+         else embed_tokens(params, token, arch))
+
+    def body(carry, xs):
+        x_t, live, reads = carry
+        blk, cache = xs
+        new_caches = {}
+        for pi, kind in enumerate(arch.layer_pattern):
+            p = blk[str(pi)]
+            if kind in ("attn", "attn_local"):
+                h = norm_apply(p["attn_norm"], x_t, arch.norm, arch.norm_eps)
+                a_out, new_c, aux = attn_lib.decode_attention(
+                    p["attn"], h, cache[str(pi)], arch.attn, arch,
+                    layer_window=_layer_window(arch, kind), pos_t=pos_t,
+                    use_kernel=use_kernel)
+                if arch.post_norm:
+                    a_out = norm_apply(p["attn_post_norm"], a_out, arch.norm, arch.norm_eps)
+                x_t = x_t + a_out
+                live = live + aux["live_tokens"]
+                reads = reads + aux["reads_tokens"]
+                if enc_out is not None and "cross" in p:
+                    h = norm_apply(p["cross_norm"], x_t, arch.norm, arch.norm_eps)
+                    dtype = jnp.dtype(arch.dtype)
+                    a = arch.attn
+                    ek = (enc_out.astype(dtype) @ p["cross"]["wk"].astype(dtype)).reshape(
+                        enc_out.shape[0], enc_out.shape[1], a.num_kv_heads, a.head_dim)
+                    ev = (enc_out.astype(dtype) @ p["cross"]["wv"].astype(dtype)).reshape(
+                        enc_out.shape[0], enc_out.shape[1], a.num_kv_heads, a.head_dim)
+                    vmask = (enc_valid if enc_valid is not None else
+                             jnp.ones(ek.shape[:2], bool))
+                    c_out, _, _ = attn_lib.decode_attention(
+                        p["cross"], h, None,
+                        dataclasses.replace(a, causal=False, rope="none"), arch,
+                        pos_t=pos_t,
+                        cross_kv=(ek.transpose(0, 2, 1, 3), ev.transpose(0, 2, 1, 3),
+                                  jnp.broadcast_to(vmask[:, None, :],
+                                                   (ek.shape[0], a.num_kv_heads, ek.shape[1]))))
+                    x_t = x_t + c_out
+                if arch.mlp is not None:
+                    h = norm_apply(p["mlp_norm"], x_t, arch.norm, arch.norm_eps)
+                    m_out, _ = mlp_apply(p["mlp"], h, arch.mlp, jnp.dtype(arch.dtype))
+                    if arch.post_norm:
+                        m_out = norm_apply(p["mlp_post_norm"], m_out, arch.norm, arch.norm_eps)
+                    x_t = x_t + m_out
+            elif kind == "ssd":
+                h = norm_apply(p["norm"], x_t, arch.norm, arch.norm_eps)
+                s_out, new_c = ssd_lib.ssd_decode_step(p["ssd"], h, cache[str(pi)], arch)
+                x_t = x_t + s_out
+            elif kind == "rglru":
+                h = norm_apply(p["rglru_norm"], x_t, arch.norm, arch.norm_eps)
+                r_out, new_c = rglru_lib.rglru_decode_step(p["rglru"], h, cache[str(pi)], arch)
+                x_t = x_t + r_out
+                if arch.mlp is not None:
+                    h = norm_apply(p["mlp_norm"], x_t, arch.norm, arch.norm_eps)
+                    m_out, _ = mlp_apply(p["mlp"], h, arch.mlp, jnp.dtype(arch.dtype))
+                    x_t = x_t + m_out
+            new_caches[str(pi)] = new_c
+        return (x_t, live, reads), new_caches
+
+    b = x.shape[0]
+    zero = jnp.zeros((b,), jnp.float32)
+    if scan_layers:
+        (x, live, reads), new_state = jax.lax.scan(
+            body, (x, zero, zero), (params["blocks"], state))
+    else:
+        carry = (x, zero, zero)
+        outs = []
+        nsb = arch.num_superblocks
+        for s in range(nsb):
+            blk_s = jax.tree_util.tree_map(lambda a: a[s], params["blocks"])
+            st_s = jax.tree_util.tree_map(lambda a: a[s], state)
+            carry, y = body(carry, (blk_s, st_s))
+            outs.append(y)
+        (x, live, reads) = carry
+        new_state = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *outs)
+    logits = lm_logits(params, x, arch)[:, 0]
+    return logits, new_state, {"live_tokens": live, "reads_tokens": reads}

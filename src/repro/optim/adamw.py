@@ -1,0 +1,91 @@
+"""AdamW with fp32 master weights/moments (paper App. B trains bf16 params +
+fp32 optimizer state) and global-norm clipping.  Pure pytree functions — no
+external optimizer dependency."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any        # first moment (fp32)
+    nu: Any        # second moment (fp32)
+    master: Any    # fp32 master copy of params (None if params already fp32)
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def init(params: Any, keep_master: bool = True) -> AdamWState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # jnp.array copies: the master must never alias params (donation safety)
+    master = (jax.tree_util.tree_map(lambda p: jnp.array(p, dtype=jnp.float32), params)
+              if keep_master else None)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree_util.tree_map(jnp.copy, zeros), master)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def apply_updates(params: Any, grads: Any, state: AdamWState, cfg: AdamWConfig
+                  ) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip is not None:
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    lr = schedule(cfg, step)
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p32):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        p32 = p32 - lr * (u + cfg.weight_decay * p32)
+        return m, v, p32
+
+    master = state.master if state.master is not None else jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.float32), params)
+    flat = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, master)
+    mu = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    new_master = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree_util.tree_map(
+        lambda p, p32: p32.astype(p.dtype), params, new_master)
+    new_state = AdamWState(step, mu, nu,
+                           new_master if state.master is not None else None)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

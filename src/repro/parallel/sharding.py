@@ -1,0 +1,291 @@
+"""Logical-axis sharding rules: DP / TP / EP / sequence(context) parallelism.
+
+All rules are *adaptive*: a dimension is put on the ``model`` axis only when
+it divides evenly (GSPMD tolerates uneven shardings but pads — we avoid that
+except for MoE expert counts, where padding ≤ tp-1 experts is the standard
+trade-off and noted in EXPERIMENTS.md).
+
+Conventions (Megatron-style TP on the fused projection column dims):
+  * embed (V, D)             → (model, None)   vocab-parallel
+  * attn wq/wk/wv (D, H·Dh)  → (None, model)   head-parallel (fallback: repl.)
+  * attn wo (H·Dh, D)        → (model, None)
+  * mlp w_gate/up (D, F)     → (None, model);  w_down (F, D) → (model, None)
+  * MoE experts (E, D, F)    → (model, None, None)   expert-parallel
+  * SSD / RG-LRU channel dims → model (head-parallel recurrence)
+  * batch dims               → ("pod", "data") (or ("data",) single-pod)
+  * long-context decode (B=1) → KV length on "data" (context parallelism)
+
+Stacked-superblock leading axes are never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.config import ArchConfig
+from repro.launch.mesh import batch_axes
+
+
+def _div(n: int, by: int) -> bool:
+    return n % by == 0 and n >= by
+
+
+def _model_if(dim: int, tp: int, allow_uneven: bool = False) -> Optional[str]:
+    if _div(dim, tp) or (allow_uneven and dim > 1):
+        return "model"
+    return None
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], arch: ArchConfig,
+               tp: int) -> P:
+    """PartitionSpec for one parameter identified by its tree path."""
+    name = path[-1]
+    inside_blocks = "blocks" in path or "enc_blocks" in path
+    lead = (None,) if inside_blocks else ()         # stacked superblock dim
+
+    def spec(*dims):
+        return P(*lead, *dims)
+
+    if name in ("embed", "lm_head"):
+        v_dim = shape[0] if name == "embed" else shape[1]
+        if name == "embed":
+            return P(_model_if(shape[0], tp), None)
+        return P(None, _model_if(shape[1], tp))
+    if name in ("scale", "bias", "a_log", "d_skip", "dt_bias", "lam",
+                "norm_scale", "b_gate_r", "b_gate_i",
+                "conv_x_b", "conv_b_b", "conv_c_b", "conv_b"):
+        # small vectors: shard the channel dim when it divides (ssd/rglru), else repl.
+        if name in ("norm_scale", "lam", "b_gate_r", "b_gate_i"):
+            return spec(_model_if(shape[-1], tp))
+        if name in ("a_log", "d_skip", "dt_bias"):
+            return spec(_model_if(shape[-1], tp))
+        return spec(*([None] * (len(shape) - len(lead))))
+    if name in ("wq", "wk", "wv"):
+        return spec(None, _model_if(shape[-1], tp))
+    if name == "wo":
+        return spec(_model_if(shape[-2], tp), None)
+    if name in ("w_gate", "w_up", "w_down", "router"):
+        moe = arch.mlp is not None and arch.mlp.moe is not None
+        nd = len(shape) - len(lead)
+        if moe and nd == 3:                          # (E, D, F) / (E, F, D)
+            e = shape[len(lead)]
+            if e % tp == 0:                          # expert parallelism
+                return spec("model", None, None)
+            # E not divisible (e.g. 40 experts on 16): Megatron TP inside
+            # each expert instead — shard the ffn dim
+            if name == "w_down":
+                return spec(None, _model_if(shape[-2], tp), None)
+            return spec(None, None, _model_if(shape[-1], tp))
+        if name == "router":
+            return spec(None, None)
+        if name == "w_down":
+            return spec(_model_if(shape[-2], tp), None)
+        return spec(None, _model_if(shape[-1], tp))
+    # SSD projections
+    if name in ("w_z", "w_x", "w_b", "w_c", "w_dt"):
+        if name == "w_x" and "rglru" in path:
+            return spec(None, _model_if(shape[-1], tp))
+        return spec(None, _model_if(shape[-1], tp))
+    if name in ("conv_x_w", "conv_b_w", "conv_c_w", "conv_w"):
+        return spec(None, _model_if(shape[-1], tp))
+    if name == "w_out":
+        return spec(_model_if(shape[-2], tp), None)
+    if name == "w_y":
+        return spec(None, _model_if(shape[-1], tp))
+    if name in ("w_gate_r", "w_gate_i"):
+        return spec(None, _model_if(shape[-1], tp))
+    # default: replicate
+    return spec(*([None] * (len(shape) - len(lead))))
+
+
+def param_shardings(params_shape: Any, arch: ArchConfig, mesh,
+                    tp: Optional[int] = None) -> Any:
+    """``tp`` overrides the tensor-parallel degree: tp=1 turns the model
+    axis into extra data parallelism (the right plan for models that fit
+    per-device — removes every activation all-reduce)."""
+    tp = mesh.shape["model"] if tp is None else tp
+
+    def one(path, leaf):
+        keys = tuple(getattr(p, "key", getattr(p, "name", str(p))) for p in path)
+        spec = param_spec(keys, leaf.shape, arch, tp) if tp > 1 else \
+            P(*([None] * len(leaf.shape)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# activations / batches
+# ---------------------------------------------------------------------------
+
+
+def data_spec(mesh, batch: int, extra_dims: int = 1,
+              batch_over_model: bool = False) -> P:
+    """Batch on the data axes when divisible, else replicated."""
+    ba = batch_axes(mesh) + (("model",) if batch_over_model else ())
+    total = 1
+    for a in ba:
+        total *= mesh.shape[a]
+    lead = ba if batch % total == 0 else None
+    return P(lead, *([None] * extra_dims))
+
+
+def batch_shardings(mesh, batch_tree: Any, microbatched: bool = False,
+                    batch_over_model: bool = False) -> Any:
+    """Batch dim on the data axes; with ``microbatched`` inputs (K, B/K, ...)
+    the accumulation dim K stays unsharded and B/K carries data parallelism.
+    ``batch_over_model`` adds the model axis to the batch axes (tp=1 plan)."""
+    def one(leaf):
+        if len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        if microbatched and len(leaf.shape) >= 2:
+            spec = data_spec(mesh, leaf.shape[1], len(leaf.shape) - 2,
+                             batch_over_model)
+            return NamedSharding(mesh, P(None, *spec))
+        return NamedSharding(mesh, data_spec(mesh, leaf.shape[0],
+                                             len(leaf.shape) - 1,
+                                             batch_over_model))
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+# ---------------------------------------------------------------------------
+# KV / decode-state shardings
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh,
+               batch: int, arch: ArchConfig) -> P:
+    """Sharding for one decode-state leaf (stacked over superblocks: dim 0).
+
+    Layouts: k/v (L,B,H,P,Dh); slot metadata (L,B,H,P); rings (L,B,H,w);
+    scalars (L,); ssd state (L,B,H,Dh,N); conv buffers (L,B,K-1,C);
+    rglru h (L,B,W).
+    """
+    tp = mesh.shape["model"]
+    ba = batch_axes(mesh)
+    dp = 1
+    for a in ba:
+        dp *= mesh.shape[a]
+    bspec = ba if batch % dp == 0 else None
+    name = path[-1]
+    nd = len(shape)
+    if nd <= 1:
+        return P(*([None] * nd))
+    def slot_specs(h, p):
+        """(head_spec, slot_spec): TP on heads when divisible; otherwise
+        split-KV over 'model'; context parallelism over 'data' (or both) when
+        the batch can't shard."""
+        hspec = _model_if(h, tp)
+        dsz = mesh.shape["data"]
+        if bspec is None and hspec is None and _div(p, dsz * tp):
+            return None, ("data", "model")
+        if bspec is None and _div(p, dsz):
+            return hspec, "data"
+        if hspec is None and _div(p, tp):
+            return None, "model"
+        return hspec, None
+
+    if name in ("k", "v") and nd == 5:
+        hspec, pspec = slot_specs(shape[2], shape[3])
+        return P(None, bspec, hspec, pspec, None)
+    if name in ("pos", "valid", "free_ring", "acc", "z") and nd == 4:
+        hspec, pspec = slot_specs(shape[2], shape[3])
+        return P(None, bspec, hspec, pspec)
+    if name in ("kmin", "kmax") and nd == 5:
+        return P(None, bspec, _model_if(shape[2], tp), None, None)
+    if name in ("pending_slot", "pending_alpha") and nd == 4:
+        return P(None, bspec, _model_if(shape[2], tp), None)
+    if name in ("free_head", "free_count", "overflowed", "count") and nd == 3:
+        return P(None, bspec, _model_if(shape[2], tp))
+    if name == "ssm" and nd == 5:
+        return P(None, bspec, _model_if(shape[2], tp), None, None)
+    if name in ("conv_x", "conv_b", "conv_c") and nd == 4:
+        return P(None, bspec, None, _model_if(shape[3], tp))
+    if name == "h" and nd == 3:                      # rglru state (L,B,W)
+        return P(None, bspec, _model_if(shape[2], tp))
+    if name == "conv" and nd == 4:
+        return P(None, bspec, None, _model_if(shape[3], tp))
+    # fallback: batch on dim1 if present
+    return P(None, bspec, *([None] * (nd - 2)))
+
+
+def cache_shardings(cache_shape: Any, mesh, batch: int, arch: ArchConfig) -> Any:
+    def one(path, leaf):
+        keys = tuple(getattr(p, "key", getattr(p, "name", str(p))) for p in path)
+        return NamedSharding(mesh, cache_spec(keys, leaf.shape, mesh, batch, arch))
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def opt_shardings(params_shape: Any, arch: ArchConfig, mesh,
+                  tp: Optional[int] = None) -> Any:
+    """ZeRO-1: optimizer moments + fp32 master additionally sharded over the
+    data axes on the largest still-unsharded divisible dim.  GSPMD then emits
+    reduce-scatter(grads) → sharded update → all-gather(params), the
+    memory-optimal schedule at 1000+ nodes.  With tp=1 (dp-only plan) the
+    model axis joins the ZeRO shard axes."""
+    from repro.optim.adamw import AdamWState
+    dp_only = tp == 1
+    tp = mesh.shape["model"] if not dp_only else 1
+    ba = batch_axes(mesh) + (("model",) if dp_only else ())
+    dp = 1
+    for a in ba:
+        dp *= mesh.shape[a]
+
+    def upgrade(path, leaf):
+        keys = tuple(getattr(p, "key", getattr(p, "name", str(p))) for p in path)
+        # strip the AdamWState prefix ('mu'/'nu'/'master') from the path
+        keys = tuple(k for k in keys if k not in ("mu", "nu", "master"))
+        spec = (list(param_spec(keys, leaf.shape, arch, tp)) if tp > 1
+                else [None] * len(leaf.shape))
+        while len(spec) < len(leaf.shape):
+            spec.append(None)
+        for i, (dim, s) in enumerate(zip(leaf.shape, spec)):
+            if s is None and dim % dp == 0 and dim >= dp:
+                spec[i] = ba if len(ba) > 1 else ba[0]
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    def shard_tree(tree):
+        return jax.tree_util.tree_map_with_path(upgrade, tree)
+
+    params_like = params_shape
+
+    mu = shard_tree(params_like)
+    nu = shard_tree(params_like)
+    master = shard_tree(params_like)
+    return AdamWState(step=NamedSharding(mesh, P()), mu=mu, nu=nu, master=master)
+
+
+def prefill_out_shardings(out_shape: Any, mesh, arch: ArchConfig) -> Any:
+    """Prefill returns (last logits (B, V), per-layer KV pytree (L,B,H,T,Dh)
+    (+ retained maps)).  Shard batch on the data axes, kv-heads on model."""
+    tp = mesh.shape["model"]
+    ba = batch_axes(mesh)
+    dp = 1
+    for a in ba:
+        dp *= mesh.shape[a]
+
+    def one(leaf):
+        shp = leaf.shape
+        if len(shp) == 2:                       # logits (B, V)
+            return NamedSharding(mesh, P(ba if shp[0] % dp == 0 else None,
+                                         _model_if(shp[1], tp)))
+        if len(shp) >= 4:                       # (L, B, H, T[, Dh])
+            bspec = ba if shp[1] % dp == 0 else None
+            hspec = _model_if(shp[2], tp)
+            rest = [None] * (len(shp) - 3)
+            return NamedSharding(mesh, P(None, bspec, hspec, *rest))
+        return NamedSharding(mesh, P(*([None] * len(shp))))
+
+    return jax.tree_util.tree_map(one, out_shape)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def tree_replicated(tree_shape: Any, mesh) -> Any:
+    return jax.tree_util.tree_map(lambda _: replicated(mesh), tree_shape)

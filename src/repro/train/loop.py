@@ -1,0 +1,124 @@
+"""Training loop with fault tolerance: auto-resume, async checkpoints,
+preemption handling, deterministic data, and the two-phase DMS retrofit.
+
+The same loop runs a CPU-scale smoke model and (via pjit shardings from
+repro.parallel) a multi-pod production job — the launcher decides.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.config import ArchConfig
+from repro.data.pipeline import DataConfig, make_batch
+from repro.launch import steps as steps_lib
+from repro.models import transformer as tfm
+from repro.optim import adamw
+
+
+@dataclass
+class TrainConfig:
+    total_steps: int = 200
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_last: int = 2
+    seed: int = 0
+    retrofit: bool = False           # DMS retrofit (distill from vanilla self)
+    phase1_steps: int = 0            # borrowed-neuron zeroing prologue
+    accum_steps: int = 1
+    use_kernel: bool = False
+    remat: bool = False
+
+
+class PreemptionGuard:
+    """SIGTERM → checkpoint-now-and-exit (cluster preemption style)."""
+
+    def __init__(self):
+        self.requested = False
+        try:
+            signal.signal(signal.SIGTERM, self._handler)
+        except ValueError:
+            pass  # non-main thread (tests)
+
+    def _handler(self, *_):
+        self.requested = True
+
+
+def train(arch: ArchConfig, data_cfg: DataConfig, cfg: TrainConfig,
+          opt_cfg: Optional[adamw.AdamWConfig] = None,
+          params: Optional[Any] = None,
+          log_fn: Callable[[Dict], None] = None) -> Dict[str, Any]:
+    """Returns {params, opt_state, metrics_history, resumed_from}."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig(
+        lr=1e-3, warmup_steps=20, total_steps=cfg.total_steps)
+    key = jax.random.PRNGKey(cfg.seed)
+    if params is None:
+        params = tfm.init_model(key, arch)
+    opt_state = adamw.init(params)
+    teacher = None
+    if cfg.retrofit:
+        teacher = jax.tree_util.tree_map(jnp.copy, params)
+        step_fn = steps_lib.make_retrofit_step(
+            arch, opt_cfg, remat=cfg.remat, use_kernel=cfg.use_kernel)
+        phase1_fn = steps_lib.make_retrofit_step(
+            arch, opt_cfg, remat=cfg.remat, use_kernel=cfg.use_kernel, phase1=True)
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 2))
+        jit_phase1 = jax.jit(phase1_fn, donate_argnums=(0, 2))
+    else:
+        step_fn = steps_lib.make_train_step(
+            arch, opt_cfg, dms_train=arch.dms.enabled, remat=cfg.remat,
+            use_kernel=cfg.use_kernel, accum_steps=cfg.accum_steps)
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    mgr = CheckpointManager(cfg.ckpt_dir, keep_last=cfg.keep_last) \
+        if cfg.ckpt_dir else None
+    start = 0
+    resumed_from = None
+    if mgr is not None and mgr.latest_step() is not None:
+        (params, opt_state), start, _ = mgr.restore((params, opt_state))
+        resumed_from = start
+
+    guard = PreemptionGuard()
+    history = []
+    for step in range(start, cfg.total_steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in make_batch(data_cfg, step).items()}
+        sj = jnp.asarray(step, jnp.int32)
+        if cfg.retrofit:
+            if step < cfg.phase1_steps:
+                params, opt_state, metrics = jit_phase1(
+                    params, teacher, opt_state, batch, sj)
+            else:
+                params, opt_state, metrics = jit_step(
+                    params, teacher, opt_state, batch, sj)
+        else:
+            params, opt_state, metrics = jit_step(params, opt_state, batch, sj)
+        if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            history.append(m)
+            if log_fn:
+                log_fn(m)
+        want_ckpt = mgr is not None and (
+            (step + 1) % cfg.ckpt_every == 0 or guard.requested
+            or step == cfg.total_steps - 1)
+        if want_ckpt:
+            mgr.save(step + 1, (params, opt_state), blocking=False)
+        if guard.requested:
+            if mgr:
+                mgr.wait()
+            break
+    if mgr:
+        mgr.wait()
+    return {"params": params, "opt_state": opt_state, "history": history,
+            "resumed_from": resumed_from, "teacher": teacher}

@@ -1,0 +1,19 @@
+import os
+import sys
+
+# tests see the real (1-device) CPU topology — only the dry-run forces 512.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def nprng():
+    return np.random.default_rng(0)

@@ -1,0 +1,111 @@
+"""Unit + property tests for the DMS core (paper §3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dms
+from repro.core.config import DMSConfig
+
+
+def test_alpha_logits_borrowed_neuron():
+    """α logit = first neuron of the first query head of each group + bias."""
+    b, t, hq, dh, hkv = 2, 5, 6, 4, 3
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, t, hq, dh))
+    logits = dms.alpha_logits_from_q(q, hkv, bias=-5.0)
+    assert logits.shape == (b, hkv, t)
+    g = hq // hkv
+    np.testing.assert_allclose(
+        np.asarray(logits[0, 1, 3]), float(q[0, 3, g, 0]) - 5.0, rtol=1e-6)
+
+
+def test_zero_borrowed_neuron_only_touches_first():
+    b, t, hq, dh, hkv = 1, 3, 4, 4, 2
+    q = jnp.ones((b, t, hq, dh))
+    z = dms.zero_borrowed_neuron(q, hkv)
+    z = np.asarray(z)
+    assert (z[:, :, 0, 0] == 0).all() and (z[:, :, 2, 0] == 0).all()
+    assert (z[:, :, 1, :] == 1).all() and (z[:, :, 0, 1:] == 1).all()
+
+
+def test_neuron_phase1_scale():
+    q = jnp.ones((1, 2, 2, 4))
+    z = dms.zero_borrowed_neuron(q, 1, scale=0.25)
+    assert float(z[0, 0, 0, 0]) == pytest.approx(0.25)
+
+
+def test_gumbel_sigmoid_range_and_bias():
+    logits = jnp.full((1000,), -5.0)
+    a = dms.gumbel_sigmoid(logits, tau=0.3, rng=jax.random.PRNGKey(0))
+    assert float(a.min()) >= 0.0 and float(a.max()) <= 1.0
+    # b = -5 keeps alpha ~ 0 early in training (paper: prevents loss spikes)
+    assert float(a.mean()) < 0.05
+
+
+def test_gumbel_sigmoid_straight_through():
+    logits = jnp.array([3.0, -3.0])
+    a = dms.gumbel_sigmoid(logits, tau=0.3, rng=None, hard=True)
+    np.testing.assert_array_equal(np.asarray(a), [1.0, 0.0])
+
+
+def test_cr_schedule_linear_then_capped():
+    cfg = DMSConfig(target_cr=8.0, steps_per_cr_unit=100)
+    assert float(dms.cr_schedule(0, cfg)) == pytest.approx(1.0)
+    assert float(dms.cr_schedule(100, cfg)) == pytest.approx(2.0)
+    assert float(dms.cr_schedule(300, cfg)) == pytest.approx(4.0)
+    assert float(dms.cr_schedule(700, cfg)) == pytest.approx(8.0)
+    assert float(dms.cr_schedule(10_000, cfg)) == pytest.approx(8.0)
+    # paper §5.3: CR4 by step 300, CR8 by step 700 with the 100-steps/unit rule
+
+
+def test_aux_loss_one_sided():
+    cfg = DMSConfig(target_cr=2.0, steps_per_cr_unit=1)
+    # at step >= 1, target alpha = 0.5
+    over = dms.aux_compression_loss(jnp.asarray(80.0), jnp.asarray(100.0), 10, cfg)
+    under = dms.aux_compression_loss(jnp.asarray(20.0), jnp.asarray(100.0), 10, cfg)
+    assert float(over) == 0.0            # compressing more than target: no penalty
+    assert float(under) == pytest.approx(0.3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 20))
+def test_mask_delay_semantics(w, t):
+    """M[i,j] == log(1-α_j) iff i-j >= w; causal -inf above diagonal."""
+    cfg = DMSConfig(window=w)
+    alpha = jax.random.uniform(jax.random.PRNGKey(t), (1, 1, t), minval=0.0, maxval=0.9)
+    m = np.asarray(dms.build_dms_mask(alpha, jnp.arange(t), jnp.arange(t), cfg))
+    ls = np.log1p(-np.asarray(alpha))[0, 0]
+    for i in range(t):
+        for j in range(t):
+            if j > i:
+                assert m[0, 0, i, j] <= dms.NEG_INF / 2
+            elif i - j >= w:
+                assert m[0, 0, i, j] == pytest.approx(ls[j], rel=1e-5)
+            else:
+                assert m[0, 0, i, j] == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 24), st.integers(0, 100))
+def test_retained_after_prefill_matches_stepwise(w, t, seed):
+    """Prefill retained-set == replaying the same decisions step by step."""
+    cfg = DMSConfig(window=w)
+    alpha = np.asarray(
+        jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (1, 1, t)))
+    ret = np.asarray(dms.retained_after_prefill(jnp.asarray(alpha), t, cfg))[0, 0]
+    # manual replay: token j is evicted when step j + w has been *written*
+    live = np.ones(t, bool)
+    for step in range(t):
+        j = step - w
+        if j >= 0 and alpha[0, 0, j]:
+            live[j] = False
+    np.testing.assert_array_equal(ret, live)
+
+
+def test_immediate_eviction_mask():
+    cfg = DMSConfig(window=8, immediate_eviction=True)
+    alpha = jnp.full((1, 1, 6), 0.5)
+    m = np.asarray(dms.build_dms_mask(alpha, jnp.arange(6), jnp.arange(6), cfg))
+    assert m[0, 0, 3, 2] == pytest.approx(np.log1p(-0.5), rel=1e-5)  # i-j=1 already masked
+    assert m[0, 0, 3, 3] == 0.0

@@ -1,0 +1,150 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dms_attention import ops as fops
+from repro.kernels.dms_attention import ref as fref
+from repro.kernels.dms_decode import ops as dops
+from repro.kernels.dms_decode import ref as dref
+
+SHAPES = [
+    # (B, T, Hq, Hkv, Dh)
+    (1, 16, 2, 1, 8),
+    (2, 48, 4, 2, 16),
+    (1, 64, 8, 2, 32),
+    (2, 33, 6, 3, 8),       # non-divisible T (padding path)
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _inputs(shape, dtype, seed=0):
+    b, t, hq, hkv, dh = shape
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, t, hq, dh), dtype)
+    k = jax.random.normal(ks[1], (b, t, hkv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, t, hkv, dh), dtype)
+    alpha = jax.random.uniform(ks[3], (b, hkv, t), jnp.float32, 0.02, 0.9)
+    return q, k, v, alpha
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flash_fwd_matches_ref(shape, dtype):
+    q, k, v, alpha = _inputs(shape, dtype)
+    out = fops.dms_flash_attention(q, k, v, alpha, dms_window=4,
+                                   block_q=16, block_k=16)
+    ref = fref.dms_attention_ref(q, k, v, jnp.log1p(-alpha), dms_window=4)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window,cap", [(None, None), (16, None), (None, 30.0),
+                                        (8, 50.0)])
+def test_flash_fwd_window_softcap(window, cap):
+    q, k, v, alpha = _inputs((2, 48, 4, 2, 16), jnp.float32)
+    out = fops.dms_flash_attention(q, k, v, alpha, dms_window=4, window=window,
+                                   logit_cap=cap, block_q=16, block_k=16)
+    ref = fref.dms_attention_ref(q, k, v, jnp.log1p(-alpha), dms_window=4,
+                                 window=window, logit_cap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_vanilla_no_alpha():
+    q, k, v, _ = _inputs((2, 32, 4, 2, 16), jnp.float32)
+    out = fops.dms_flash_attention(q, k, v, None, block_q=16, block_k=16)
+    ref = fref.dms_attention_ref(q, k, v, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_flash_bwd_matches_autodiff(seed):
+    q, k, v, alpha = _inputs((1, 32, 4, 2, 16), jnp.float32, seed)
+    tgt = jax.random.normal(jax.random.PRNGKey(9), q.shape)
+
+    def loss_k(q, k, v, a):
+        o = fops.dms_flash_attention(q, k, v, a, dms_window=4,
+                                     block_q=16, block_k=16)
+        return jnp.sum(o * tgt)
+
+    def loss_r(q, k, v, a):
+        o = fref.dms_attention_ref(q, k, v, jnp.log1p(-a), dms_window=4)
+        return jnp.sum(o * tgt)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2, 3))(q, k, v, alpha)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2, 3))(q, k, v, alpha)
+    for name, a, b in zip("q k v alpha".split(), gk, gr):
+        rel = float(jnp.max(jnp.abs(a - b))) / (float(jnp.max(jnp.abs(b))) + 1e-9)
+        assert rel < 1e-4, (name, rel)
+
+
+def test_flash_skip_blocks_binary_alpha():
+    """Dead-block skipping must be exact for binarised decisions."""
+    b, t, hq, hkv, dh = 1, 64, 2, 1, 8
+    q, k, v, _ = _inputs((b, t, hq, hkv, dh), jnp.float32)
+    alpha_bin = jnp.zeros((b, hkv, t), bool).at[:, :, 4:40].set(True)
+    out = fops.dms_flash_attention_prefill(q, k, v, alpha_bin, dms_window=8,
+                                           block_q=16, block_k=16)
+    ls = jnp.maximum(jnp.log1p(-alpha_bin.astype(jnp.float32)), -1e30)
+    ref = fref.dms_attention_ref(q, k, v, ls, dms_window=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(2, 4, 2, 40, 16), (1, 8, 1, 100, 32),
+                                   (3, 6, 3, 24, 8), (2, 8, 4, 17, 8)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_decode_kernel_matches_ref(shape, dtype):
+    b, hq, hkv, p, dh = shape
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (b, 1, hq, dh), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, p, dh), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, p, dh), dtype)
+    valid = jax.random.bernoulli(ks[3], 0.6, (b, hkv, p)).at[:, :, 0].set(True)
+    out = dops.dms_decode_attention(q, k, v, valid, block_p=16)
+    ref = dref.dms_decode_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_decode_kernel_softcap():
+    b, hq, hkv, p, dh = 1, 4, 2, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = jax.random.normal(ks[0], (b, 1, hq, dh))
+    k = jax.random.normal(ks[1], (b, hkv, p, dh))
+    v = jax.random.normal(ks[2], (b, hkv, p, dh))
+    valid = jnp.ones((b, hkv, p), bool)
+    out = dops.dms_decode_attention(q, k, v, valid, logit_cap=30.0, block_p=16)
+    ref = dref.dms_decode_ref(q, k, v, valid, logit_cap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_kernel_all_blocks_dead_but_one():
+    """Block-level liveness: only one live slot far into the arena."""
+    b, hq, hkv, p, dh = 1, 2, 1, 64, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (b, 1, hq, dh))
+    k = jax.random.normal(ks[1], (b, hkv, p, dh))
+    v = jax.random.normal(ks[2], (b, hkv, p, dh))
+    valid = jnp.zeros((b, hkv, p), bool).at[:, :, 50].set(True)
+    out = dops.dms_decode_attention(q, k, v, valid, block_p=16)
+    ref = dref.dms_decode_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_impls_match_kernel():
+    """The dry-run lowering paths agree with the Pallas kernel."""
+    from repro.models.attention import attention_chunked, attention_chunked_scan
+    q, k, v, alpha = _inputs((2, 40, 4, 2, 16), jnp.float32)
+    ker = fops.dms_flash_attention(q, k, v, alpha, dms_window=4,
+                                   block_q=16, block_k=16)
+    ch = attention_chunked(q, k, v, alpha, dms_delay=4, chunk_q=16, chunk_k=16)
+    cs = attention_chunked_scan(q, k, v, alpha, dms_delay=4)
+    np.testing.assert_allclose(np.asarray(ch), np.asarray(ker), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(ker), rtol=2e-5, atol=2e-5)

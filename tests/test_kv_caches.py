@@ -1,0 +1,155 @@
+"""Cache semantics: slot-compacted DMS == masked reference; baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines
+from repro.core.kv_cache import MaskedDMSCache, SlotDMSCache, VanillaCache
+
+
+def _stream(seed, t, b=1, h=2, dh=4, p_evict=0.5):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    k = jax.random.normal(ks[0], (t, b, h, 1, dh))
+    v = jax.random.normal(ks[1], (t, b, h, 1, dh))
+    a = jax.random.bernoulli(ks[2], p_evict, (t, b, h))
+    return k, v, a
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 6), st.integers(4, 24),
+       st.floats(0.0, 0.95))
+def test_slot_cache_equals_masked_cache(seed, w, t, p_evict):
+    """Property: for any decision stream, the physically-compacted cache
+    retains exactly the same (position) set as the masked oracle."""
+    k, v, a = _stream(seed, t, p_evict=p_evict)
+    mc = MaskedDMSCache.init(1, 2, t, 4, w)
+    sc = SlotDMSCache.init(1, 2, t + 1, 4, w)     # ample arena: no overflow
+    for i in range(t):
+        mc = mc.step(k[i], v[i], a[i])
+        sc = sc.step(k[i], v[i], a[i])
+    assert (mc.retained_tokens() == sc.retained_tokens()).all()
+    for b in range(1):
+        for h in range(2):
+            mpos = set(np.where(np.asarray(mc.valid_mask()[b, h]))[0].tolist())
+            spos = set(np.asarray(sc.pos[b, h])[np.asarray(sc.valid[b, h])].tolist())
+            assert mpos == spos
+    assert not bool(sc.overflowed.any())
+
+
+def test_slot_cache_kv_content_preserved():
+    t, w = 12, 3
+    k, v, a = _stream(7, t)
+    sc = SlotDMSCache.init(1, 2, t + 1, 4, w)
+    for i in range(t):
+        sc = sc.step(k[i], v[i], a[i])
+    for h in range(2):
+        valid = np.asarray(sc.valid[0, h])
+        pos = np.asarray(sc.pos[0, h])[valid]
+        kv = np.asarray(sc.k[0, h])[valid]
+        for p, row in zip(pos, kv):
+            np.testing.assert_allclose(row, np.asarray(k[p, 0, h, 0]), rtol=1e-2)
+
+
+def test_slot_cache_overflow_recycles_oldest():
+    """Arena smaller than the stream with alpha=0: ring-buffer semantics."""
+    t, p = 10, 4
+    k, v, _ = _stream(3, t)
+    a0 = jnp.zeros((t, 1, 2), bool)
+    sc = SlotDMSCache.init(1, 2, p, 4, 2)
+    for i in range(t):
+        sc = sc.step(k[i], v[i], a0[i])
+    assert bool(sc.overflowed.all())
+    pos = np.sort(np.asarray(sc.pos[0, 0])[np.asarray(sc.valid[0, 0])])
+    np.testing.assert_array_equal(pos, np.arange(t - p, t))   # newest P retained
+
+
+def test_memory_saving_at_target_cr():
+    """The provisioned arena is ~S/CR + w — the physical memory claim."""
+    slots = SlotDMSCache.provision_slots(4096, cr=8.0, window=256)
+    assert slots < 4096 * 0.2
+    assert slots >= 4096 // 8 + 256
+
+
+def test_vanilla_cache_append_and_mask():
+    c = VanillaCache.init(2, 2, 8, 4)
+    k = jnp.ones((2, 2, 3, 4))
+    c = c.append(k, k)
+    assert int(c.length) == 3
+    m = np.asarray(c.valid_mask())[0, 0]
+    np.testing.assert_array_equal(m, [1, 1, 1, 0, 0, 0, 0, 0])
+
+
+def test_tova_evicts_lowest_weight():
+    c = baselines.TOVACache.init(1, 1, budget=3 + 1, head_dim=2)
+    k = jnp.ones((1, 1, 1, 2))
+    for i in range(4):
+        c = c.insert(k * i, k * i)
+        w = jnp.ones((1, 1, 4))
+        if i == 3:
+            w = w.at[0, 0, 1].set(0.01)      # slot 1 = weakest
+            c = c.evict(w)
+        else:
+            c = c.evict(w * 0 + jnp.arange(4) + 1.0)
+    valid = np.asarray(c.valid[0, 0])
+    assert valid.sum() == 3
+    assert not valid[1]
+
+
+def test_h2o_protects_recent_window():
+    c = baselines.H2OCache.init(1, 1, budget=4 + 1, head_dim=2, recent_window=2)
+    k = jnp.ones((1, 1, 1, 2))
+    for i in range(6):
+        c = c.insert(k, k)
+        w = jnp.ones((1, 1, 5)) * 0.2
+        c = c.evict(w)
+    pos = np.asarray(c.pos[0, 0])[np.asarray(c.valid[0, 0])]
+    # the two most recent tokens are always alive
+    assert {4, 5}.issubset(set(pos.tolist()))
+
+
+def test_quest_selects_relevant_pages():
+    page, top = 4, 1
+    c = baselines.QuestCache.init(1, 1, 16, 4, page, top)
+    key = jax.random.PRNGKey(0)
+    for i in range(16):
+        val = jnp.ones((1, 1, 1, 4)) * (10.0 if 8 <= i < 12 else 0.1)
+        c = c.append(val, val)
+    q = jnp.ones((1, 1, 4))
+    pages = np.asarray(c.select_pages(q))[0, 0]
+    assert pages[2] and pages.sum() == 1          # page 2 = tokens 8..11
+    # memory footprint is full (Quest trades memory for reads)
+    assert int(c.retained_tokens()[0, 0]) == 16
+    assert int(c.reads_per_step()) == top * page
+
+
+def test_dmc_merges_with_weighted_average():
+    c = baselines.DMCCache.init(1, 1, 4, 2)
+    one = jnp.ones((1, 1, 1, 2))
+    c = c.step(one * 2.0, one * 2.0, jnp.zeros((1, 1), bool))   # append [2]
+    c = c.step(one * 4.0, one * 4.0, jnp.ones((1, 1), bool))    # merge -> 3
+    assert int(c.count[0, 0]) == 1
+    np.testing.assert_allclose(np.asarray(c.k[0, 0, 0]), [3.0, 3.0], rtol=1e-6)
+    c = c.step(one * 9.0, one * 9.0, jnp.zeros((1, 1), bool))   # append
+    assert int(c.count[0, 0]) == 2
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 500))
+def test_slot_cache_under_jit_and_scan(seed):
+    """The cache must be scan/jit transparent (registered pytree)."""
+    t, w = 8, 2
+    k, v, a = _stream(seed, t)
+    sc = SlotDMSCache.init(1, 2, t + 1, 4, w)
+
+    def body(c, xs):
+        kk, vv, aa = xs
+        return c.step(kk, vv, aa), c.retained_tokens()
+
+    final, _ = jax.jit(lambda c: jax.lax.scan(body, c, (k, v, a)))(sc)
+    ref = sc
+    for i in range(t):
+        ref = ref.step(k[i], v[i], a[i])
+    assert (final.retained_tokens() == ref.retained_tokens()).all()

@@ -1,0 +1,90 @@
+"""End-to-end behaviour tests: the paper's pipeline on CPU-scale models.
+
+1. retrofit a tiny LM with DMS (distillation + CR schedule) — α rises,
+   distill loss stays sane (no collapse),
+2. serve with the compressed cache — budget metrics shrink by ~CR,
+3. fault tolerance: checkpoint + resume mid-training.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.config import DMSConfig, KVPolicyConfig
+from repro.data.pipeline import DataConfig
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine
+from repro.train.loop import TrainConfig, train
+
+
+@pytest.fixture(scope="module")
+def tiny_arch():
+    arch = get_smoke("llama32-1b")
+    return dataclasses.replace(
+        arch, dms=dataclasses.replace(arch.dms, window=4, target_cr=4.0,
+                                      steps_per_cr_unit=5))
+
+
+def test_retrofit_increases_alpha_and_tracks_teacher(tiny_arch):
+    data = DataConfig(vocab_size=tiny_arch.vocab_size, seq_len=64,
+                      global_batch=8, seed=1)
+    out = train(tiny_arch, data,
+                TrainConfig(total_steps=50, retrofit=True, log_every=5,
+                            ckpt_every=1000))
+    hist = out["history"]
+    assert hist[-1]["alpha_mean"] > 0.15, hist[-1]       # compression learned
+    assert hist[-1]["alpha_mean"] > hist[0]["alpha_mean"] + 0.1
+    assert np.isfinite(hist[-1]["loss_main"])
+    # the distillation loss must not explode as compression ramps
+    assert hist[-1]["loss_main"] < hist[0]["loss_main"] * 10 + 1.0
+
+
+def test_pretrain_loss_decreases(tiny_arch):
+    arch = dataclasses.replace(tiny_arch, dms=DMSConfig(enabled=False))
+    data = DataConfig(vocab_size=arch.vocab_size, seq_len=64, global_batch=8)
+    out = train(arch, data, TrainConfig(total_steps=80, log_every=5))
+    hist = out["history"]
+    assert hist[-1]["ce"] < hist[0]["ce"] - 0.1
+
+
+def test_engine_budget_shrinks_with_dms(tiny_arch):
+    """Paper core claim, measured: DMS reduces both KV reads and peak tokens
+    vs vanilla for the same generation length."""
+    params = tfm.init_model(jax.random.PRNGKey(0), tiny_arch)
+    prompts = np.random.default_rng(0).integers(3, tiny_arch.vocab_size,
+                                                size=(2, 24)).astype(np.int32)
+    res_v = Engine(tiny_arch, params, KVPolicyConfig(kind="vanilla")
+                   ).generate(prompts, 16)
+    res_d = Engine(tiny_arch, params, KVPolicyConfig(kind="dms", cr=2.0)
+                   ).generate(prompts, 16)
+    assert res_d.meter.peak_tokens <= res_v.meter.peak_tokens
+    assert res_d.meter.kv_reads <= res_v.meter.kv_reads
+    assert res_v.tokens.shape == res_d.tokens.shape == (2, 16)
+
+
+def test_engine_policies_run(tiny_arch):
+    params = tfm.init_model(jax.random.PRNGKey(0), tiny_arch)
+    prompts = np.random.default_rng(0).integers(3, tiny_arch.vocab_size,
+                                                size=(1, 12)).astype(np.int32)
+    for kind in ["vanilla", "dms", "tova", "h2o", "quest", "dmc"]:
+        res = Engine(tiny_arch, params,
+                     KVPolicyConfig(kind=kind, cr=2.0, budget=16)
+                     ).generate(prompts, 6)
+        assert res.tokens.shape == (1, 6), kind
+        assert np.isfinite(res.meter.kv_reads), kind
+
+
+def test_checkpoint_resume_mid_training(tiny_arch, tmp_path):
+    """Fault tolerance: stop at step 20, resume, reach the full step count."""
+    arch = dataclasses.replace(tiny_arch, dms=DMSConfig(enabled=False))
+    data = DataConfig(vocab_size=arch.vocab_size, seq_len=32, global_batch=4)
+    cfg = TrainConfig(total_steps=20, ckpt_every=10, ckpt_dir=str(tmp_path),
+                      log_every=5)
+    train(arch, data, cfg)
+    cfg2 = dataclasses.replace(cfg, total_steps=30)
+    out2 = train(arch, data, cfg2)
+    assert out2["resumed_from"] == 20
+    assert out2["history"][-1]["step"] == 29
