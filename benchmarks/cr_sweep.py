@@ -17,6 +17,7 @@ import numpy as np
 from benchmarks.common import emit, save_json
 from repro.configs import get_smoke
 from repro.core.config import DMSConfig, KVPolicyConfig
+from repro.core.policy import available_policies
 from repro.data import tasks
 from repro.data.pipeline import DataConfig, make_batch
 from repro.launch import steps as steps_lib
@@ -71,17 +72,16 @@ def run(n_eval=32, quick=False):
     arch, params, task = _train_needle_model(steps=120 if quick else 240)
     prompts, answers = tasks.make_eval_set(task, n_eval)
     table = {}
-    policies = {
-        "vanilla": lambda cr: KVPolicyConfig(kind="vanilla"),
-        "dms": lambda cr: KVPolicyConfig(kind="dms", cr=cr, window=arch.dms.window),
-        "tova": lambda cr: KVPolicyConfig(kind="tova", cr=cr),
-        "h2o": lambda cr: KVPolicyConfig(kind="h2o", cr=cr),
-        "quest": lambda cr: KVPolicyConfig(kind="quest", cr=cr, quest_page_size=4),
-        "dmc": lambda cr: KVPolicyConfig(kind="dmc", cr=cr),
-    }
-    for method, make_pol in policies.items():
-        for cr in ([1.0] if method == "vanilla" else [2.0, 3.0, 4.0]):
-            engine = Engine(arch, params, make_pol(cr))
+    # every policy in the registry, no hardcoded list: a newly registered
+    # policy (e.g. keyformer) shows up in Table 1 automatically
+    for method in available_policies():
+        # vanilla and the masked-DMS oracle ignore cr (full arena; eviction
+        # driven by trained alphas alone) — one row each, not three
+        crs = [1.0] if method in ("vanilla", "dms_masked") else [2.0, 3.0, 4.0]
+        for cr in crs:
+            pol = KVPolicyConfig(kind=method, cr=cr, window=arch.dms.window,
+                                 quest_page_size=4)
+            engine = Engine(arch, params, pol)
             acc = _needle_accuracy(engine, prompts, answers)
             key = f"{method}_cr{cr:g}"
             table[key] = acc

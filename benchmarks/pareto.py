@@ -18,6 +18,7 @@ import numpy as np
 from benchmarks.common import emit, save_json, ARTIFACTS
 from repro.configs import get_smoke
 from repro.core.config import DMSConfig, KVPolicyConfig
+from repro.core.policy import available_policies
 from repro.core.hyperscale import ScalingConfig, frontier_margin, pareto_frontier
 from repro.data import tasks
 from repro.data.pipeline import DataConfig
@@ -74,13 +75,13 @@ def run(n_eval=24, quick=False):
     prompts, answers = tasks.make_eval_set(task, n_eval)
     grid = [ScalingConfig(task.prompt_len + 8, w, 1.0) for w in (1, 2, 4)]
     results = {}
-    for label, policy in [
-        ("vanilla", KVPolicyConfig(kind="vanilla")),
-        ("dms", KVPolicyConfig(kind="dms", cr=arch.dms.target_cr,
-                               window=arch.dms.window)),
-        ("quest", KVPolicyConfig(kind="quest", cr=2.0, quest_page_size=4)),
-        ("tova", KVPolicyConfig(kind="tova", cr=2.0)),
-    ]:
+    # enumerate the full KVPolicy registry: every policy gets a frontier,
+    # with per-policy kv_reads/peak_tokens from the uniform metrics() contract
+    for label in available_policies():
+        policy = KVPolicyConfig(
+            kind=label,
+            cr=arch.dms.target_cr if label.startswith("dms") else 2.0,
+            window=arch.dms.window, quest_page_size=4)
         engine = Engine(arch, params, policy, temperature=0.7)
         pts = []
         for cfg in grid:

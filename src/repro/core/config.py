@@ -35,15 +35,41 @@ class DMSConfig:
 
 @dataclass(frozen=True)
 class KVPolicyConfig:
-    """Which KV-cache policy runs at inference time."""
+    """Which KV-cache policy runs at inference time.
 
-    kind: Literal["vanilla", "dms", "tova", "h2o", "quest", "dmc", "window"] = "vanilla"
+    ``kind`` names a policy registered in :mod:`repro.core.policy` ("vanilla",
+    "dms", "dms_masked", "tova", "h2o", "quest", "dmc", "window",
+    "keyformer", ...); the registry validates it at cache-init time, so new
+    policies plug in without touching this config.
+
+    ``layer_map`` optionally overrides the policy per *layer kind* — e.g.
+    ``{"attn_local": "window", "attn": "dms"}`` runs gemma2-style hybrid
+    caching (FastGen-like per-layer policies).  Stored as a sorted tuple of
+    pairs so the config stays hashable (jit-static).
+    """
+
+    kind: str = "vanilla"
     # Common budget knob: max retained tokens (tova/h2o/window) or CR (dms/dmc/quest).
     budget: Optional[int] = None
     cr: float = 1.0
     window: int = 256            # dms delay / h2o recency window
     quest_page_size: int = 16
     quest_top_pages: Optional[int] = None
+    keyformer_tau: float = 1.0   # Gumbel-softmax temperature (score smoothing)
+    layer_map: Optional[Tuple[Tuple[str, str], ...]] = None
+
+    def __post_init__(self):
+        if isinstance(self.layer_map, dict):
+            object.__setattr__(self, "layer_map",
+                               tuple(sorted(self.layer_map.items())))
+
+    def kind_for_layer(self, layer_kind: str) -> str:
+        """Resolve the policy name for a layer kind ("attn" / "attn_local")."""
+        if self.layer_map:
+            for k, v in self.layer_map:
+                if k == layer_kind:
+                    return v
+        return self.kind
 
 
 # ---------------------------------------------------------------------------
@@ -249,7 +275,7 @@ class ArchConfig:
                     self.d_model * a.num_heads * a.head_dim * 2
                     + self.d_model * a.num_kv_heads * a.head_dim * 2
                 )
-                n += self.encoder_layers and self.num_layers * per_cross
+                n += self.num_layers * per_cross   # one cross-attn per decoder layer
         return n
 
     def _layer_params(self, kind: str, active_only: bool) -> int:

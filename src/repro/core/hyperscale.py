@@ -40,26 +40,43 @@ class ScalingConfig:
 
 @dataclass
 class BudgetMeter:
-    """Accumulates the paper's two budget metrics during generation."""
+    """Accumulates the paper's two budget metrics during generation.
+
+    The two axes are metered separately because they diverge for reads-sparse
+    policies (Quest reduces *reads*, not cache size): ``kv_reads`` integrates
+    ``reads_tokens`` over steps, ``peak_tokens`` tracks the max of
+    ``live_tokens``.  Both come from the policies' uniform ``metrics()``
+    contract (:mod:`repro.core.policy`), not engine guesses.
+    """
 
     kv_reads: float = 0.0
     peak_tokens: float = 0.0
+    peak_bytes: float = 0.0       # physical arena bytes (static per state)
     steps: int = 0
     generated_tokens: int = 0
 
-    def observe_step(self, live_tokens_per_layer: Sequence[float], new_tokens: int = 1):
+    def observe_step(self, live_tokens_per_layer: Sequence[float],
+                     new_tokens: int = 1,
+                     reads_tokens_per_layer: Optional[Sequence[float]] = None):
         """live_tokens_per_layer: Σ over (batch, kv-heads)/H of live cache items
-        for each layer at this decode step."""
-        total = float(np.sum(live_tokens_per_layer))
-        self.kv_reads += total
-        self.peak_tokens = max(self.peak_tokens, total)
+        for each layer at this decode step.  ``reads_tokens_per_layer`` defaults
+        to live (the dense-read case)."""
+        live = float(np.sum(live_tokens_per_layer))
+        reads = (live if reads_tokens_per_layer is None
+                 else float(np.sum(reads_tokens_per_layer)))
+        self.kv_reads += reads
+        self.peak_tokens = max(self.peak_tokens, live)
         self.steps += 1
         self.generated_tokens += new_tokens
+
+    def observe_peak_bytes(self, nbytes: float):
+        self.peak_bytes = max(self.peak_bytes, float(nbytes))
 
     def merge(self, other: "BudgetMeter") -> "BudgetMeter":
         return BudgetMeter(
             kv_reads=self.kv_reads + other.kv_reads,
             peak_tokens=self.peak_tokens + other.peak_tokens,  # parallel chains co-resident
+            peak_bytes=self.peak_bytes + other.peak_bytes,
             steps=max(self.steps, other.steps),
             generated_tokens=self.generated_tokens + other.generated_tokens,
         )

@@ -1,0 +1,135 @@
+"""Keyformer (Adnan et al., 2024): score-based KV eviction with
+Gumbel-softmax regularization.
+
+Intuition: post-softmax attention weights are a biased importance signal —
+once tokens are dropped, the softmax renormalises over survivors and
+over-weights recency.  Keyformer regularises the per-step score with Gumbel
+noise and a temperature ``tau`` before accumulating, which both smooths the
+distribution and injects the stochastic tie-breaking the paper shows matters
+for long-tail retention.  A recency window is always protected (like H2O);
+outside it, the token with the lowest accumulated regularised score is
+evicted when over budget.
+
+This module is the registry's worked extension example: it defines its own
+cache pytree and plugs in purely through ``@register_policy`` + the
+``KVPolicy`` lifecycle — zero edits to ``models/`` or ``serving/`` (see
+docs/policies.md for the walkthrough).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig, KVPolicyConfig
+from repro.core.kv_cache import INVALID_POS, _tree_dataclass
+from repro.core.policy import AttendSpec, KVPolicy, register_policy
+
+_SCORE_EPS = 1e-9
+_NOISE_SEED = 0x5EED  # fixed: decode must be reproducible per (seed, step)
+
+
+@_tree_dataclass
+class KeyformerCache:
+    k: jnp.ndarray       # (B, H, P, D)
+    v: jnp.ndarray
+    pos: jnp.ndarray     # (B, H, P) int32
+    valid: jnp.ndarray   # (B, H, P) bool
+    score: jnp.ndarray   # (B, H, P) f32 — accumulated regularised scores
+    length: jnp.ndarray  # ()
+    recent_window: int = dataclasses.field(metadata={"static": True})
+    tau: float = dataclasses.field(metadata={"static": True}, default=1.0)
+
+    @staticmethod
+    def init(batch, kv_heads, budget, head_dim, recent_window, tau,
+             dtype=jnp.bfloat16):
+        z = jnp.zeros((batch, kv_heads, budget, head_dim), dtype)
+        return KeyformerCache(
+            z, z,
+            jnp.full((batch, kv_heads, budget), INVALID_POS, jnp.int32),
+            jnp.zeros((batch, kv_heads, budget), bool),
+            jnp.zeros((batch, kv_heads, budget), jnp.float32),
+            jnp.zeros((), jnp.int32), recent_window, tau)
+
+    @property
+    def budget(self) -> int:
+        return self.k.shape[2] - 1   # arena is budget + 1 (insert-then-evict)
+
+    def insert(self, k_new, v_new) -> "KeyformerCache":
+        p = self.k.shape[2]
+        slot = jnp.argmin(self.valid, axis=2).astype(jnp.int32)   # first free
+        hit = (jnp.arange(p)[None, None] == slot[..., None])
+        return dataclasses.replace(
+            self,
+            k=jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k),
+            v=jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v),
+            pos=jnp.where(hit, self.length, self.pos),
+            valid=self.valid | hit,
+            score=jnp.where(hit, 0.0, self.score),
+            length=self.length + 1)
+
+    def accumulate_and_evict(self, attn_weights) -> "KeyformerCache":
+        """attn_weights: (B, H, P) group-summed post-softmax weights.
+
+        Score update (Keyformer §4): softmax((log w + Gumbel noise) / tau)
+        over live slots, accumulated; evict argmin outside the recency window
+        when over budget.  Noise is derived from a fixed key folded with the
+        logical step, so jitted decode stays deterministic and scan-safe.
+        """
+        p = self.k.shape[2]
+        w = attn_weights.astype(jnp.float32)
+        key = jax.random.fold_in(jax.random.PRNGKey(_NOISE_SEED), self.length)
+        # decorrelate the draw across layers (all caches share `length` at a
+        # given step): fold in a content-derived salt from this layer's weights
+        salt = jax.lax.bitcast_convert_type(
+            jnp.sum(w).astype(jnp.float32), jnp.uint32)
+        key = jax.random.fold_in(key, salt)
+        u = jax.random.uniform(key, w.shape, minval=_SCORE_EPS,
+                               maxval=1.0 - _SCORE_EPS)
+        gumbel = -jnp.log(-jnp.log(u))
+        logits = jnp.where(self.valid, jnp.log(w + _SCORE_EPS) + gumbel, -jnp.inf)
+        reg = jax.nn.softmax(logits / self.tau, axis=-1)
+        score = self.score + jnp.where(self.valid, reg, 0.0)
+
+        over = jnp.sum(self.valid, axis=2) > self.budget
+        recent = self.pos >= (self.length - self.recent_window)
+        cand = jnp.where(self.valid & ~recent, score, jnp.inf)
+        any_evictable = jnp.any(jnp.isfinite(cand), axis=2)
+        oldest = jnp.argmin(jnp.where(self.valid, self.pos, INVALID_POS), axis=2)
+        victim = jnp.where(any_evictable, jnp.argmin(cand, axis=2),
+                           oldest).astype(jnp.int32)
+        hit = (jnp.arange(p)[None, None] == victim[..., None]) & over[..., None]
+        return dataclasses.replace(
+            self,
+            pos=jnp.where(hit, INVALID_POS, self.pos),
+            valid=self.valid & ~hit,
+            score=jnp.where(hit, 0.0, score))
+
+    def valid_mask(self):
+        return self.valid
+
+    def positions(self):
+        return self.pos
+
+    def retained_tokens(self):
+        return jnp.sum(self.valid, axis=-1)
+
+
+@register_policy("keyformer")
+class KeyformerPolicy(KVPolicy):
+    def init_cache(self, arch: ArchConfig, batch: int, max_len: int,
+                   cfg: KVPolicyConfig, *, layer_window, dtype):
+        a = arch.attn
+        budget = cfg.budget or max(int(max_len / cfg.cr), 1)
+        return KeyformerCache.init(batch, a.num_kv_heads, budget + 1,
+                                   a.head_dim, max(budget // 2, 1),
+                                   cfg.keyformer_tau, dtype)
+
+    def decode_update(self, cache, q, k_new, v_new, aux):
+        cache = cache.insert(k_new, v_new)
+        return cache, AttendSpec(cache.k, cache.v, cache.valid_mask(),
+                                 cache.pos, needs_weights=True)
+
+    def post_attend(self, cache, weights):
+        return cache.accumulate_and_evict(weights)

@@ -1,0 +1,430 @@
+"""Unified, pluggable KV cache-policy API: the ``KVPolicy`` registry.
+
+The paper's hyper-scaling results hinge on *which* compression policy runs
+(DMS vs. training-free baselines vs. DMC), so the policy abstraction must be
+a first-class, extensible contract rather than ``if policy.kind == ...``
+chains smeared across the model and engine.  This module defines that
+contract; every policy owns its full lifecycle:
+
+* ``init_cache(arch, batch, max_len, cfg, layer_window, dtype)`` — provision
+  the cache arena for one attention layer.
+* ``decode_update(cache, q, k_new, v_new, aux) -> (cache, AttendSpec)`` —
+  absorb one decoded token and describe what this step's attention should
+  read (keys/values, visibility, positions, whether post-softmax weights are
+  needed back).
+* ``post_attend(cache, weights)`` — optional second phase for policies whose
+  eviction depends on the current step's attention weights (TOVA, H2O,
+  Keyformer).
+* ``prefill_import(...)`` — build the cache from full-attention prefill
+  outputs (e.g. :meth:`SlotDMSCache.from_prefill`), including un-executed
+  delayed-eviction decisions.
+* ``metrics(cache)`` — the paper's two budget axes, policy-defined instead of
+  engine-guessed: ``live_tokens`` (peak-memory axis), ``reads_tokens``
+  (KV-reads axis; differs from live for Quest) and ``peak_bytes`` (physical
+  arena bytes, static).
+
+Policies register by name with :func:`register_policy`; the model/engine
+dispatch purely through the registry via the :class:`PolicyCache` pytree
+wrapper, whose ``policy`` name rides in static (hashable) aux data — so
+``jax.jit`` re-traces per policy but the *code* is policy-agnostic.  Adding a
+new policy (see :mod:`repro.core.keyformer`) requires zero edits to
+``models/`` or ``serving/``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dms as dms_lib
+from repro.core.baselines import DMCCache, H2OCache, QuestCache, TOVACache
+from repro.core.config import ArchConfig, KVPolicyConfig
+from repro.core.kv_cache import (MaskedDMSCache, SlotDMSCache, VanillaCache,
+                                 _tree_dataclass)
+
+
+# ---------------------------------------------------------------------------
+# wire types
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class AttendSpec:
+    """What one decode step's attention should read.
+
+    ``k``/``v``: (B, Hkv, P, Dh); ``visible``: (B, Hkv, P) bool (broadcastable);
+    ``positions``: per-slot logical positions for local-window masking, or
+    ``None`` when positions are meaningless (merged DMC entries).
+    ``needs_weights`` requests the group-summed post-softmax weights back via
+    :meth:`KVPolicy.post_attend`.
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    visible: jnp.ndarray
+    positions: Optional[jnp.ndarray] = None
+    needs_weights: bool = False
+
+
+@_tree_dataclass
+class PolicyCache:
+    """Pytree wrapper binding a cache state to its policy *by name*.
+
+    The name lives in static aux data, so dispatch inside jitted code is a
+    trace-time registry lookup — no isinstance chains, and the cache pytree
+    stays an opaque, shardable container for the engine.
+    """
+
+    cache: Any
+    policy: str = dataclasses.field(metadata={"static": True}, default="vanilla")
+
+    @property
+    def length(self) -> jnp.ndarray:
+        return self.cache.length
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, "KVPolicy"] = {}
+
+
+def register_policy(name: str) -> Callable[[type], type]:
+    """Class decorator: instantiate and register a :class:`KVPolicy` by name."""
+
+    def deco(cls: type) -> type:
+        if name in _REGISTRY:
+            raise ValueError(
+                f"KV policy {name!r} already registered "
+                f"(by {type(_REGISTRY[name]).__name__})")
+        pol = cls()
+        pol.name = name
+        _REGISTRY[name] = pol
+        return cls
+
+    return deco
+
+
+def get_policy(name: str) -> "KVPolicy":
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown KV policy {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def init_policy_cache(arch: ArchConfig, batch: int, max_len: int,
+                      cfg: KVPolicyConfig, *, layer_kind: str = "attn",
+                      layer_window: Optional[int] = None,
+                      dtype=None) -> PolicyCache:
+    """Provision one attention layer's cache through the registry."""
+    name = cfg.kind_for_layer(layer_kind)
+    pol = get_policy(name)
+    dtype = dtype or jnp.dtype(arch.dtype)
+    inner = pol.init_cache(arch, batch, max_len, cfg,
+                           layer_window=layer_window, dtype=dtype)
+    return PolicyCache(cache=inner, policy=name)
+
+
+def iter_policy_caches(tree: Any) -> Iterator[PolicyCache]:
+    """Yield every :class:`PolicyCache` node in a decode-state pytree."""
+    leaves = jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: isinstance(x, PolicyCache))
+    for leaf in leaves:
+        if isinstance(leaf, PolicyCache):
+            yield leaf
+
+
+def state_peak_bytes(state: Any) -> int:
+    """Physical KV arena bytes of a decode state (uniform metrics contract).
+
+    Works on both per-layer caches and the stacked (superblock-leading)
+    decode state — ``peak_bytes`` is purely shape-derived.
+    """
+    return sum(get_policy(pc.policy).peak_bytes(pc.cache)
+               for pc in iter_policy_caches(state))
+
+
+def _nbytes(a) -> int:
+    n = 1
+    for s in a.shape:
+        n *= int(s)
+    return n * jnp.dtype(a.dtype).itemsize
+
+
+def _budget_tokens(cfg: KVPolicyConfig, max_len: int) -> int:
+    return cfg.budget or max(int(max_len / cfg.cr), 1)
+
+
+# ---------------------------------------------------------------------------
+# the protocol
+# ---------------------------------------------------------------------------
+
+
+class KVPolicy:
+    """Base contract.  Subclass, implement the lifecycle, decorate with
+    ``@register_policy("name")`` — the model/engine pick it up untouched."""
+
+    name: str = ""
+    #: "none" — policy never sees eviction decisions;
+    #: "dms"  — extract binarised DMS α when ``arch.dms.enabled``;
+    #: "always" — extract α from the borrowed neuron unconditionally (DMC).
+    alpha_mode: str = "none"
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def init_cache(self, arch: ArchConfig, batch: int, max_len: int,
+                   cfg: KVPolicyConfig, *, layer_window: Optional[int],
+                   dtype) -> Any:
+        raise NotImplementedError
+
+    def decode_update(self, cache: Any, q: jnp.ndarray, k_new: jnp.ndarray,
+                      v_new: jnp.ndarray, aux: Dict[str, Any]
+                      ) -> Tuple[Any, AttendSpec]:
+        """q: (B, 1, Hq, Dh) post-RoPE; k_new/v_new: (B, Hkv, 1, Dh) post-RoPE.
+
+        aux carries ``alpha_bin`` ((B, Hkv) bool or None), ``pos_t``,
+        ``attn_cfg``, ``arch`` and ``dtype``.
+        """
+        raise NotImplementedError
+
+    def post_attend(self, cache: Any, weights: jnp.ndarray) -> Any:
+        """Second phase when ``AttendSpec.needs_weights``; ``weights`` is the
+        group-summed post-softmax distribution (B, Hkv, P)."""
+        return cache
+
+    def prefill_import(self, arch: ArchConfig, cfg: KVPolicyConfig,
+                       k: jnp.ndarray, v: jnp.ndarray,
+                       positions: jnp.ndarray, retained: Optional[jnp.ndarray],
+                       alpha_bin: Optional[jnp.ndarray], *, max_len: int,
+                       layer_window: Optional[int] = None, dtype=None) -> Any:
+        """Build a cache from full-attention prefill outputs (k/v:
+        (B, Hkv, T, Dh) post-RoPE, e.g. ``make_prefill_step``'s ``layer_kv``).
+
+        ``Engine`` currently teacher-forces prompts through the decode path
+        (exact eviction semantics for every policy); this hook is for callers
+        that run a dense prefill and import the result — policies without an
+        import path raise."""
+        raise NotImplementedError(f"{self.name}: no prefill import path")
+
+    # -- accounting ----------------------------------------------------------
+
+    def metrics(self, cache: Any) -> Dict[str, Any]:
+        """Budget accounting, policy-defined.  ``live_tokens``/``reads_tokens``
+        are (B,) arrays (mean over kv heads); ``peak_bytes`` is a static int
+        (physical arena size, valid under tracing as a constant)."""
+        live = cache.retained_tokens().astype(jnp.float32).mean(axis=-1)
+        return {"live_tokens": live, "reads_tokens": live,
+                "peak_bytes": self.peak_bytes(cache)}
+
+    def peak_bytes(self, cache: Any) -> int:
+        return _nbytes(cache.k) + _nbytes(cache.v)
+
+
+# ---------------------------------------------------------------------------
+# built-in policies
+# ---------------------------------------------------------------------------
+
+
+class _SlotRingMixin:
+    """Shared decode path for slot-arena caches (dms / vanilla-local / window)."""
+
+    @staticmethod
+    def _slot_update(cache, k_new, v_new, aux):
+        cfg = aux["attn_cfg"]
+        b = k_new.shape[0]
+        alpha = aux.get("alpha_bin")
+        if alpha is None:
+            alpha = jnp.zeros((b, cfg.num_kv_heads), bool)
+        cache = cache.step(k_new, v_new, alpha)
+        return cache, AttendSpec(cache.k, cache.v, cache.valid_mask(),
+                                 cache.positions())
+
+
+@register_policy("vanilla")
+class VanillaPolicy(_SlotRingMixin, KVPolicy):
+    """Dense append-only cache; local-attention layers get a ring buffer
+    (overflow recycling == sliding window) so memory stays O(window)."""
+
+    def init_cache(self, arch, batch, max_len, cfg, *, layer_window, dtype):
+        a = arch.attn
+        if layer_window is not None:
+            eff_len = min(max_len, layer_window + 1)
+            return SlotDMSCache.init(batch, a.num_kv_heads, eff_len, a.head_dim,
+                                     max(arch.dms.window, 1), dtype,
+                                     dms_active=False)
+        return VanillaCache.init(batch, a.num_kv_heads, max_len, a.head_dim, dtype)
+
+    def decode_update(self, cache, q, k_new, v_new, aux):
+        if isinstance(cache, VanillaCache):
+            cache = cache.append(k_new, v_new)
+            return cache, AttendSpec(cache.k, cache.v, cache.valid_mask(),
+                                     cache.positions())
+        return self._slot_update(cache, k_new, v_new, aux)
+
+    def prefill_import(self, arch, cfg, k, v, positions, retained, alpha_bin,
+                       *, max_len, layer_window=None, dtype=None):
+        a = arch.attn
+        dtype = dtype or jnp.dtype(arch.dtype)
+        if layer_window is not None:
+            raise NotImplementedError("vanilla: no local-window import path")
+        b, h, t, d = k.shape
+        cache = VanillaCache.init(b, a.num_kv_heads, max_len, a.head_dim, dtype)
+        return cache.append(k, v)
+
+
+@register_policy("window")
+class WindowPolicy(_SlotRingMixin, KVPolicy):
+    """StreamingLLM-style sliding window via ring-buffer overflow recycling."""
+
+    def init_cache(self, arch, batch, max_len, cfg, *, layer_window, dtype):
+        a = arch.attn
+        budget = _budget_tokens(cfg, max_len)
+        return SlotDMSCache.init(batch, a.num_kv_heads, budget + 1, a.head_dim,
+                                 max(arch.dms.window, 1), dtype,
+                                 dms_active=False)
+
+    def decode_update(self, cache, q, k_new, v_new, aux):
+        return self._slot_update(cache, k_new, v_new, aux)
+
+
+@register_policy("dms")
+class DMSPolicy(_SlotRingMixin, KVPolicy):
+    """The paper's policy: slot-compacted arena, delayed eviction (§3.3)."""
+
+    alpha_mode = "dms"
+
+    def init_cache(self, arch, batch, max_len, cfg, *, layer_window, dtype):
+        a = arch.attn
+        eff_len = (min(max_len, layer_window + 1) if layer_window is not None
+                   else max_len)
+        slots = SlotDMSCache.provision_slots(eff_len, cfg.cr, arch.dms.window)
+        return SlotDMSCache.init(batch, a.num_kv_heads, min(slots, eff_len + 1),
+                                 a.head_dim, arch.dms.window, dtype)
+
+    def decode_update(self, cache, q, k_new, v_new, aux):
+        return self._slot_update(cache, k_new, v_new, aux)
+
+    def prefill_import(self, arch, cfg, k, v, positions, retained, alpha_bin,
+                       *, max_len, layer_window=None, dtype=None):
+        eff_len = (min(max_len, layer_window + 1) if layer_window is not None
+                   else max_len)
+        slots = SlotDMSCache.provision_slots(eff_len, cfg.cr, arch.dms.window)
+        return SlotDMSCache.from_prefill(
+            k, v, positions, retained, arch.dms.window,
+            min(slots, eff_len + 1), alpha_bin=alpha_bin)
+
+
+@register_policy("dms_masked")
+class MaskedDMSPolicy(_SlotRingMixin, KVPolicy):
+    """Full-length cache with a retained bitmap — the correctness oracle."""
+
+    alpha_mode = "dms"
+
+    def init_cache(self, arch, batch, max_len, cfg, *, layer_window, dtype):
+        a = arch.attn
+        return MaskedDMSCache.init(batch, a.num_kv_heads, max_len, a.head_dim,
+                                   arch.dms.window, dtype)
+
+    def decode_update(self, cache, q, k_new, v_new, aux):
+        return self._slot_update(cache, k_new, v_new, aux)
+
+
+class _WeightEvictPolicy(KVPolicy):
+    """Shared insert→attend→evict shape for weight-driven policies."""
+
+    def decode_update(self, cache, q, k_new, v_new, aux):
+        cache = cache.insert(k_new, v_new)
+        return cache, AttendSpec(cache.k, cache.v, cache.valid_mask(),
+                                 cache.pos, needs_weights=True)
+
+    def post_attend(self, cache, weights):
+        return cache.evict(weights)
+
+
+@register_policy("tova")
+class TOVAPolicy(_WeightEvictPolicy):
+    def init_cache(self, arch, batch, max_len, cfg, *, layer_window, dtype):
+        a = arch.attn
+        budget = _budget_tokens(cfg, max_len)
+        return TOVACache.init(batch, a.num_kv_heads, budget + 1, a.head_dim, dtype)
+
+
+@register_policy("h2o")
+class H2OPolicy(_WeightEvictPolicy):
+    def init_cache(self, arch, batch, max_len, cfg, *, layer_window, dtype):
+        a = arch.attn
+        budget = _budget_tokens(cfg, max_len)
+        return H2OCache.init(batch, a.num_kv_heads, budget + 1, a.head_dim,
+                             max(budget // 2, 1), dtype)
+
+
+@register_policy("quest")
+class QuestPolicy(KVPolicy):
+    """Page-sparse reads over a full cache: the policy whose two budget axes
+    diverge — ``reads_tokens`` shrinks, ``live_tokens`` does not."""
+
+    def init_cache(self, arch, batch, max_len, cfg, *, layer_window, dtype):
+        a = arch.attn
+        ps = cfg.quest_page_size
+        ml = ((max_len + ps - 1) // ps) * ps
+        top = cfg.quest_top_pages or max(int(ml / cfg.cr) // ps, 1)
+        return QuestCache.init(batch, a.num_kv_heads, ml, a.head_dim, ps, top, dtype)
+
+    def decode_update(self, cache, q, k_new, v_new, aux):
+        cfg = aux["attn_cfg"]
+        b = q.shape[0]
+        cache = cache.append(k_new, v_new)
+        g = cfg.q_per_kv
+        q_pool = q[:, 0].reshape(b, cfg.num_kv_heads, g, cfg.head_dim).mean(axis=2)
+        tok_mask = cache.token_mask_from_pages(cache.select_pages(q_pool))
+        return cache, AttendSpec(cache.k, cache.v, tok_mask, cache.positions())
+
+    def metrics(self, cache):
+        live = cache.retained_tokens().astype(jnp.float32).mean(axis=-1)
+        reads = jnp.broadcast_to(cache.reads_per_step().astype(jnp.float32),
+                                 live.shape)
+        return {"live_tokens": live, "reads_tokens": reads,
+                "peak_bytes": self.peak_bytes(cache)}
+
+    def peak_bytes(self, cache):
+        return (_nbytes(cache.k) + _nbytes(cache.v)
+                + _nbytes(cache.kmin) + _nbytes(cache.kmax))
+
+
+@register_policy("dmc")
+class DMCPolicy(KVPolicy):
+    """Dynamic Memory Compression: α=1 merges into the newest entry."""
+
+    alpha_mode = "always"
+
+    def init_cache(self, arch, batch, max_len, cfg, *, layer_window, dtype):
+        a = arch.attn
+        slots = int(max_len / cfg.cr) + 16
+        return DMCCache.init(batch, a.num_kv_heads, slots, a.head_dim)
+
+    def decode_update(self, cache, q, k_new, v_new, aux):
+        cfg = aux["attn_cfg"]
+        b = k_new.shape[0]
+        alpha = aux.get("alpha_bin")
+        if alpha is None:
+            alpha = jnp.zeros((b, cfg.num_kv_heads), bool)
+        cache = cache.step(k_new, v_new, alpha)
+        dtype = aux["dtype"]
+        # merged entries have no single logical position: skip window masking
+        return cache, AttendSpec(cache.k.astype(dtype), cache.v.astype(dtype),
+                                 cache.valid_mask(), None)
+
+
+# autoload policies that live in their own modules (each registers itself on
+# import — the same mechanism downstream plugins use)
+from repro.core import keyformer as _keyformer  # noqa: E402,F401

@@ -147,6 +147,8 @@ def run_cell(arch_name, shape_name, *, multi_pod=False, policy_kind="vanilla",
                 scan_layers=False, attn_impl=attn_impl, accum_steps=1, tp=tp)
         compile_s = time.time() - t0
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # jax < 0.4.30 returned [dict]
+            cost = cost[0] if cost else {}
         if verbose:
             print(f"[{arch_name} × {shape_name} × {mesh_desc}] flops-pass "
                   f"compiled in {compile_s:.1f}s")
@@ -220,7 +222,9 @@ def main(argv=None):
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true", help="all 40 cells")
-    ap.add_argument("--policy", default="vanilla")
+    from repro.core.policy import available_policies
+    ap.add_argument("--policy", default="vanilla",
+                    choices=list(available_policies()))
     ap.add_argument("--cr", type=float, default=1.0)
     ap.add_argument("--dms-train", action="store_true")
     ap.add_argument("--use-kernel", action="store_true")

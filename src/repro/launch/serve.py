@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.core.config import KVPolicyConfig
+from repro.core.policy import available_policies
 from repro.models import transformer as tfm
 from repro.serving.engine import Engine
 
@@ -23,7 +24,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen-r1-1.5b")
     ap.add_argument("--policy", default="dms",
-                    choices=["vanilla", "dms", "tova", "h2o", "quest", "dmc"])
+                    choices=list(available_policies()))
     ap.add_argument("--cr", type=float, default=4.0)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -43,6 +44,7 @@ def main(argv=None):
         "generated_shape": list(res.tokens.shape),
         "kv_reads": res.meter.kv_reads,
         "peak_tokens": res.meter.peak_tokens,
+        "peak_bytes": res.meter.peak_bytes,
         "steps": res.meter.steps,
     }))
 

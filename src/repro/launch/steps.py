@@ -236,13 +236,18 @@ def make_prefill_step(arch: ArchConfig, *, dms: bool = False,
 
 def make_serve_step(arch: ArchConfig, *, use_kernel: bool = False,
                     scan_layers: bool = True):
-    """One decode step: new token in, logits + updated cache out."""
+    """One decode step: new token in, logits + updated cache out.
+
+    Emits both axes of the policies' uniform ``metrics()`` contract so the
+    serving layer can meter KV reads and peak memory without knowing which
+    policy runs (see :mod:`repro.core.policy`)."""
 
     def serve_step(params, cache, batch):
         logits, cache2, aux = tfm.decode_step(
             params, batch["token"], cache, arch, batch["pos"],
             use_kernel=use_kernel, scan_layers=scan_layers,
             enc_out=batch.get("enc_out"))
-        return logits, cache2, aux["live_tokens"]
+        return logits, cache2, {"live_tokens": aux["live_tokens"],
+                                "reads_tokens": aux["reads_tokens"]}
 
     return serve_step

@@ -13,15 +13,15 @@ Three entry points:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import dms as dms_lib
-from repro.core.baselines import DMCCache, H2OCache, QuestCache, TOVACache
+from repro.core import policy as policy_lib
 from repro.core.config import ArchConfig, AttentionConfig
-from repro.core.kv_cache import MaskedDMSCache, SlotDMSCache, VanillaCache
 from repro.models.layers import apply_rope, dense_init, softcap
 
 NEG_INF = dms_lib.NEG_INF
@@ -360,11 +360,15 @@ def decode_attention(
     use_kernel: bool = False,
     cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None,
 ) -> Tuple[jnp.ndarray, Any, Dict[str, Any]]:
-    """One decode step against ``cache`` (any supported policy class).
+    """One decode step against a :class:`repro.core.policy.PolicyCache`.
+
+    All policy behaviour (cache update, visibility, eviction, budget
+    accounting) is dispatched through the KVPolicy registry keyed by the
+    cache's static policy name — this function contains no per-policy code.
 
     Returns (output (B,1,D), new_cache, aux).  aux["live_tokens"] feeds the
-    hyper-scaling budget meter; aux["reads_tokens"] is the per-step memory-
-    reads metric (differs from live for Quest).
+    hyper-scaling peak-memory axis; aux["reads_tokens"] the KV-reads axis
+    (the two differ for reads-sparse policies like Quest).
     """
     dtype = jnp.dtype(arch.dtype)
     b = x_t.shape[0]
@@ -374,13 +378,15 @@ def decode_attention(
         pos_t = _cache_length(cache)
     pos_arr = jnp.full((1,), pos_t, jnp.int32) if jnp.ndim(pos_t) == 0 else pos_t[:1]
 
+    # cache is a PolicyCache (or None for encoder-memory cross-attention);
+    # its static policy name is the only dispatch key
+    pol = None if cache is None else policy_lib.get_policy(cache.policy)
+
     alpha_bin = None
-    dms_cache = (isinstance(cache, MaskedDMSCache)
-                 or (isinstance(cache, SlotDMSCache) and cache.dms_active))
-    if dms.enabled and dms_cache:
+    if pol is not None and pol.alpha_mode == "dms" and dms.enabled:
         alpha_bin, q_raw = dms_lib.infer_alphas(q_raw, cfg.num_kv_heads, dms)
         alpha_bin = alpha_bin[..., 0]                     # (B, Hkv)
-    elif isinstance(cache, DMCCache):
+    elif pol is not None and pol.alpha_mode == "always":
         logits = dms_lib.alpha_logits_from_q(q_raw, cfg.num_kv_heads, dms.logit_bias)
         alpha_bin = dms_lib.binary_alpha(logits)[..., 0]
         q_raw = dms_lib.zero_borrowed_neuron(q_raw, cfg.num_kv_heads)
@@ -406,43 +412,24 @@ def decode_attention(
         aux["reads_tokens"] = aux["live_tokens"]
         return y.astype(x_t.dtype), cache, aux
 
-    if isinstance(cache, VanillaCache):
-        cache = cache.append(k_new_c, v_new_c)
-        out, _ = _masked_decode(q, cache.k, cache.v, cache.valid_mask(),
-                                cache.positions(), window, cfg, use_kernel, pos_t)
-    elif isinstance(cache, (SlotDMSCache, MaskedDMSCache)):
-        a = alpha_bin if alpha_bin is not None else jnp.zeros((b, cfg.num_kv_heads), bool)
-        cache = cache.step(k_new_c, v_new_c, a)
-        out, _ = _masked_decode(q, cache.k, cache.v, cache.valid_mask(),
-                                cache.positions(), window, cfg, use_kernel, pos_t)
-    elif isinstance(cache, (TOVACache, H2OCache)):
-        cache = cache.insert(k_new_c, v_new_c)
-        out, w_group = _masked_decode(q, cache.k, cache.v, cache.valid_mask(),
-                                      cache.pos, window, cfg, use_kernel, pos_t,
-                                      need_weights=True)
-        cache = cache.evict(w_group)
-    elif isinstance(cache, QuestCache):
-        cache = cache.append(k_new_c, v_new_c)
-        g = cfg.q_per_kv
-        q_pool = q[:, 0].reshape(b, cfg.num_kv_heads, g, cfg.head_dim).mean(axis=2)
-        pages = cache.select_pages(q_pool)
-        tok_mask = cache.token_mask_from_pages(pages)
-        out, _ = _masked_decode(q, cache.k, cache.v, tok_mask,
-                                cache.positions(), window, cfg, use_kernel, pos_t)
-        aux["reads_tokens"] = jnp.broadcast_to(
-            cache.reads_per_step().astype(jnp.float32), (b,))
-    elif isinstance(cache, DMCCache):
-        a = alpha_bin if alpha_bin is not None else jnp.zeros((b, cfg.num_kv_heads), bool)
-        cache = cache.step(k_new_c, v_new_c, a)
-        out, _ = _masked_decode(q, cache.k.astype(dtype), cache.v.astype(dtype),
-                                cache.valid_mask(), None, None, cfg, use_kernel)
-    else:
-        raise TypeError(f"unknown cache type {type(cache)}")
+    if pol is None:
+        raise TypeError(f"decode_attention needs a PolicyCache, got {type(cache)}")
+
+    pol_aux = {"alpha_bin": alpha_bin, "pos_t": pos_t, "attn_cfg": cfg,
+               "arch": arch, "dtype": dtype}
+    inner, spec = pol.decode_update(cache.cache, q, k_new_c, v_new_c, pol_aux)
+    out, w_group = _masked_decode(
+        q, spec.k, spec.v, spec.visible, spec.positions,
+        window if spec.positions is not None else None, cfg, use_kernel, pos_t,
+        need_weights=spec.needs_weights)
+    if spec.needs_weights:
+        inner = pol.post_attend(inner, w_group)
+    cache = dataclasses.replace(cache, cache=inner)
 
     y = out.reshape(b, 1, cfg.num_heads * cfg.head_dim) @ p["wo"].astype(dtype)
-    live = cache.retained_tokens().astype(jnp.float32).mean(axis=-1)   # (B,)
-    aux["live_tokens"] = live
-    aux.setdefault("reads_tokens", live)
+    metrics = pol.metrics(inner)
+    aux["live_tokens"] = metrics["live_tokens"]
+    aux["reads_tokens"] = metrics["reads_tokens"]
     return y.astype(x_t.dtype), cache, aux
 
 

@@ -23,9 +23,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import policy as policy_lib
 from repro.core.config import ArchConfig, KVPolicyConfig
-from repro.core.baselines import DMCCache, H2OCache, QuestCache, TOVACache
-from repro.core.kv_cache import MaskedDMSCache, SlotDMSCache, VanillaCache
 from repro.models import attention as attn_lib
 from repro.models import rglru as rglru_lib
 from repro.models import ssd as ssd_lib
@@ -311,44 +310,11 @@ def _init_layer_cache(arch: ArchConfig, kind: str, batch: int, max_len: int,
         return ssd_lib.init_ssd_state(batch, arch.d_model, arch.ssm)
     if kind == "rglru":
         return rglru_lib.init_rglru_state(batch, arch.d_model, arch.rglru)
-    a = arch.attn
-    window = _layer_window(arch, kind)
-    eff_len = min(max_len, window + 1) if window is not None else max_len
-    if policy.kind == "vanilla":
-        if window is not None:
-            # ring-buffer via slot cache (overflow recycles oldest = sliding window)
-            return SlotDMSCache.init(batch, a.num_kv_heads, eff_len, a.head_dim,
-                                     max(arch.dms.window, 1), dtype,
-                                     dms_active=False)
-        return VanillaCache.init(batch, a.num_kv_heads, max_len, a.head_dim, dtype)
-    if policy.kind == "dms":
-        slots = SlotDMSCache.provision_slots(eff_len, policy.cr, arch.dms.window)
-        return SlotDMSCache.init(batch, a.num_kv_heads, min(slots, eff_len + 1),
-                                 a.head_dim, arch.dms.window, dtype)
-    if policy.kind == "dms_masked":
-        return MaskedDMSCache.init(batch, a.num_kv_heads, max_len, a.head_dim,
-                                   arch.dms.window, dtype)
-    if policy.kind == "tova":
-        budget = policy.budget or int(max_len / policy.cr)
-        return TOVACache.init(batch, a.num_kv_heads, budget + 1, a.head_dim, dtype)
-    if policy.kind == "h2o":
-        budget = policy.budget or int(max_len / policy.cr)
-        return H2OCache.init(batch, a.num_kv_heads, budget + 1, a.head_dim,
-                             max(budget // 2, 1), dtype)
-    if policy.kind == "quest":
-        ps = policy.quest_page_size
-        ml = ((max_len + ps - 1) // ps) * ps
-        top = policy.quest_top_pages or max(int(ml / policy.cr) // ps, 1)
-        return QuestCache.init(batch, a.num_kv_heads, ml, a.head_dim, ps, top, dtype)
-    if policy.kind == "dmc":
-        slots = int(max_len / policy.cr) + 16
-        return DMCCache.init(batch, a.num_kv_heads, slots, a.head_dim)
-    if policy.kind == "window":
-        budget = policy.budget or int(max_len / policy.cr)
-        return SlotDMSCache.init(batch, a.num_kv_heads, budget + 1, a.head_dim,
-                                 max(arch.dms.window, 1), dtype,
-                                 dms_active=False)
-    raise ValueError(policy.kind)
+    # attention layers: every policy comes from the KVPolicy registry — the
+    # model never special-cases a cache class (see repro.core.policy)
+    return policy_lib.init_policy_cache(
+        arch, batch, max_len, policy, layer_kind=kind,
+        layer_window=_layer_window(arch, kind), dtype=dtype)
 
 
 def init_decode_state(arch: ArchConfig, batch: int, max_len: int,

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import policy as policy_lib
 from repro.core.config import ArchConfig, KVPolicyConfig
 from repro.core.hyperscale import BudgetMeter, ScalingConfig, majority_vote
 from repro.models import transformer as tfm
@@ -79,6 +80,9 @@ class Engine:
         state = self._prefill_jit(self.params, jnp.asarray(prompts), state, t=t0)
         tok = jnp.asarray(prompts[:, -1:])
         meter = BudgetMeter()
+        # physical arena bytes are static per policy/state — from metrics(),
+        # not engine guesses
+        meter.observe_peak_bytes(policy_lib.state_peak_bytes(state))
         outs = []
         rng = jax.random.PRNGKey(seed)
         for i in range(max_new):
@@ -87,7 +91,10 @@ class Engine:
                 self.params, tok, state, jnp.asarray(t0 + i, jnp.int32), sub)
             outs.append(np.asarray(tok[:, 0]))
             live = np.asarray(aux["live_tokens"])       # (B,) summed over layers
-            meter.observe_step([float(live.sum())], new_tokens=b)
+            reads = np.asarray(aux["reads_tokens"])     # KV-reads axis (≠ live
+            meter.observe_step([float(live.sum())],     # for e.g. Quest)
+                               new_tokens=b,
+                               reads_tokens_per_layer=[float(reads.sum())])
         return GenerationResult(tokens=np.stack(outs, 1), meter=meter)
 
     def hyperscale_generate(self, prompt: np.ndarray, cfg: ScalingConfig,
@@ -120,6 +127,7 @@ def evaluate_hyperscale(
     return {
         "accuracy": hits / n,
         "kv_reads": meter.kv_reads / n,
-        "peak_tokens": meter.peak_tokens,
+        "peak_tokens": meter.peak_tokens / n,
+        "peak_bytes": meter.peak_bytes / n,
         "config": cfg.label,
     }

@@ -1,0 +1,270 @@
+"""The unified KVPolicy registry: one pluggable cache-policy API.
+
+Covers the PR's acceptance criteria:
+* every registered policy decodes through ``Engine.generate`` with no
+  policy-specific code in models/serving,
+* Quest budget metering is split correctly (reads shrink, peak does not),
+* per-layer policy maps (gemma2-style hybrid caching),
+* ``SlotDMSCache.from_prefill``'s pending-ring import matches the masked
+  oracle step-by-step for tokens still inside the delay window,
+* a new policy registers through the public API alone (the Keyformer path),
+* the cross-attention parameter-count fix.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, get_smoke
+from repro.core import policy as policy_lib
+from repro.core.config import KVPolicyConfig
+from repro.core.keyformer import KeyformerCache
+from repro.core.kv_cache import MaskedDMSCache, SlotDMSCache
+from repro.core.policy import (AttendSpec, KVPolicy, PolicyCache,
+                               available_policies, get_policy,
+                               iter_policy_caches, register_policy)
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine
+
+
+BUILTINS = {"vanilla", "dms", "dms_masked", "tova", "h2o", "quest", "dmc",
+            "window", "keyformer"}
+
+
+@pytest.fixture(scope="module")
+def tiny_arch():
+    arch = get_smoke("qwen-r1-1.5b")
+    return dataclasses.replace(
+        arch, dms=dataclasses.replace(arch.dms, window=4, target_cr=4.0))
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_arch):
+    return tfm.init_model(jax.random.PRNGKey(0), tiny_arch)
+
+
+# -- registry ------------------------------------------------------------
+
+
+def test_registry_has_all_builtin_policies():
+    assert BUILTINS.issubset(set(available_policies()))
+
+
+def test_unknown_policy_is_a_clear_error():
+    with pytest.raises(KeyError, match="registered"):
+        get_policy("nope")
+
+
+def test_every_registered_policy_runs_through_engine(tiny_arch, tiny_params):
+    """The acceptance gate: all policies generate via the registry alone."""
+    prompts = np.random.default_rng(0).integers(
+        3, tiny_arch.vocab_size, size=(1, 12)).astype(np.int32)
+    for kind in available_policies():
+        res = Engine(tiny_arch, tiny_params,
+                     KVPolicyConfig(kind=kind, cr=2.0, budget=16)
+                     ).generate(prompts, 6)
+        assert res.tokens.shape == (1, 6), kind
+        assert np.isfinite(res.meter.kv_reads), kind
+        assert res.meter.peak_tokens > 0, kind
+        assert res.meter.peak_bytes > 0, kind
+
+
+def test_extension_via_public_api_only(tiny_arch, tiny_params):
+    """Register a brand-new policy here, in test code — zero edits anywhere.
+
+    (Keyformer is the in-tree proof; this guards the mechanism itself.)"""
+
+    @register_policy("_test_last8")
+    class Last8Policy(KVPolicy):
+        def init_cache(self, arch, batch, max_len, cfg, *, layer_window, dtype):
+            a = arch.attn
+            return SlotDMSCache.init(batch, a.num_kv_heads, 8 + 1, a.head_dim,
+                                     max(arch.dms.window, 1), dtype,
+                                     dms_active=False)
+
+        def decode_update(self, cache, q, k_new, v_new, aux):
+            alpha = jnp.zeros(k_new.shape[:2], bool)
+            cache = cache.step(k_new, v_new, alpha)
+            return cache, AttendSpec(cache.k, cache.v, cache.valid_mask(),
+                                     cache.positions())
+
+    try:
+        res = Engine(tiny_arch, tiny_params,
+                     KVPolicyConfig(kind="_test_last8")).generate(
+            np.ones((1, 12), np.int32) * 3, 6)
+        assert res.tokens.shape == (1, 6)
+        assert res.meter.peak_tokens <= 9 * tiny_arch.num_layers
+    finally:
+        policy_lib._REGISTRY.pop("_test_last8", None)
+
+
+# -- budget metering (Quest regression) ----------------------------------
+
+
+def test_quest_meters_reads_not_size(tiny_arch, tiny_params):
+    """Quest reduces KV *reads*, not cache size: kv_reads must drop below
+    vanilla while peak_tokens stays identical (the seed metered live tokens
+    on both axes, hiding Quest's entire effect)."""
+    prompts = np.random.default_rng(1).integers(
+        3, tiny_arch.vocab_size, size=(1, 24)).astype(np.int32)
+    res_v = Engine(tiny_arch, tiny_params,
+                   KVPolicyConfig(kind="vanilla")).generate(prompts, 16)
+    res_q = Engine(tiny_arch, tiny_params,
+                   KVPolicyConfig(kind="quest", quest_page_size=4,
+                                  quest_top_pages=2)).generate(prompts, 16)
+    assert res_q.meter.kv_reads < res_v.meter.kv_reads
+    assert res_q.meter.peak_tokens == pytest.approx(res_v.meter.peak_tokens)
+
+
+def test_metrics_contract_uniform_across_policies(tiny_arch):
+    """metrics() returns the same keys for every policy; peak_bytes is
+    shape-derived and positive."""
+    for kind in available_policies():
+        cfg = KVPolicyConfig(kind=kind, cr=2.0, budget=8)
+        state = tfm.init_decode_state(tiny_arch, 1, 16, cfg)
+        for pc in iter_policy_caches(state):
+            m = get_policy(pc.policy).peak_bytes(pc.cache)
+            assert isinstance(m, int) and m > 0, kind
+        assert policy_lib.state_peak_bytes(state) > 0, kind
+
+
+# -- per-layer policy maps ------------------------------------------------
+
+
+def test_layer_map_assigns_policies_per_layer_kind():
+    arch = get_smoke("gemma2-2b")        # ("attn_local", "attn") pattern
+    cfg = KVPolicyConfig(kind="dms", cr=2.0,
+                         layer_map={"attn_local": "window", "attn": "dms"})
+    assert cfg.kind_for_layer("attn_local") == "window"
+    assert cfg.kind_for_layer("attn") == "dms"
+    assert cfg.kind_for_layer("other") == "dms"
+    state = tfm.init_decode_state(arch, 1, 16, cfg)
+    assert sorted({pc.policy for pc in iter_policy_caches(state)}) == \
+        ["dms", "window"]
+
+
+def test_layer_map_decodes_end_to_end():
+    arch = get_smoke("gemma2-2b")
+    params = tfm.init_model(jax.random.PRNGKey(0), arch)
+    cfg = KVPolicyConfig(kind="vanilla", budget=8,
+                         layer_map={"attn": "tova"})
+    prompts = np.random.default_rng(2).integers(
+        3, arch.vocab_size, size=(1, 10)).astype(np.int32)
+    res = Engine(arch, params, cfg).generate(prompts, 4)
+    assert res.tokens.shape == (1, 4)
+    assert np.isfinite(res.meter.kv_reads)
+
+
+def test_layer_map_is_hashable():
+    cfg = KVPolicyConfig(kind="dms", layer_map={"attn_local": "window"})
+    assert isinstance(cfg.layer_map, tuple)
+    hash(cfg)  # jit-static requirement
+
+
+# -- keyformer ------------------------------------------------------------
+
+
+def test_keyformer_respects_budget_and_recency():
+    budget, recent = 8, 4
+    c = KeyformerCache.init(1, 1, budget + 1, 4, recent, tau=1.0)
+    k = jnp.ones((1, 1, 1, 4))
+    for i in range(24):
+        c = c.insert(k * (i + 1), k * (i + 1))
+        n = int(jnp.sum(c.valid))
+        w = jnp.ones((1, 1, budget + 1)) / max(n, 1)
+        c = c.accumulate_and_evict(w)
+    assert int(c.retained_tokens()[0, 0]) <= budget
+    pos = set(np.asarray(c.pos[0, 0])[np.asarray(c.valid[0, 0])].tolist())
+    # the recency window is always protected (Keyformer keeps recent + heavy)
+    assert {23 - i for i in range(recent)}.issubset(pos)
+
+
+def test_keyformer_noise_is_deterministic():
+    c1 = KeyformerCache.init(1, 1, 5, 4, 2, tau=1.0)
+    c2 = KeyformerCache.init(1, 1, 5, 4, 2, tau=1.0)
+    k = jnp.ones((1, 1, 1, 4))
+    w = jnp.full((1, 1, 5), 0.2)
+    for _ in range(8):
+        c1 = c1.insert(k, k).accumulate_and_evict(w)
+        c2 = c2.insert(k, k).accumulate_and_evict(w)
+    np.testing.assert_array_equal(np.asarray(c1.valid), np.asarray(c2.valid))
+    np.testing.assert_allclose(np.asarray(c1.score), np.asarray(c2.score))
+
+
+# -- prefill import (pending-ring path) -----------------------------------
+
+
+def _dms_stream(seed, t, b=1, h=2, dh=4, p_evict=0.4):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    k = jax.random.normal(ks[0], (t, b, h, 1, dh))
+    v = jax.random.normal(ks[1], (t, b, h, 1, dh))
+    a = jax.random.bernoulli(ks[2], p_evict, (t, b, h))
+    return k, v, a
+
+
+@pytest.mark.parametrize("seed,window", [(0, 3), (1, 5), (2, 2)])
+def test_from_prefill_pending_ring_matches_masked_decode(seed, window):
+    """Prefill-imported SlotDMSCache == MaskedDMSCache continued step-by-step:
+    decisions for tokens still inside the delay window must execute on
+    schedule via the imported pending ring (the ``alpha_bin is not None``
+    branch of ``from_prefill``)."""
+    t_pre, t_dec, b, h, dh = 12, 8, 1, 2, 4
+    total = t_pre + t_dec
+    k, v, a = _dms_stream(seed, total, b=b, h=h, dh=dh)
+
+    mc = MaskedDMSCache.init(b, h, total, dh, window)
+    for i in range(t_pre):
+        mc = mc.step(k[i], v[i], a[i])
+
+    # prefill outputs: full post-"RoPE" k/v, the retained map, raw alpha
+    k_full = jnp.concatenate([k[i] for i in range(t_pre)], axis=2)  # (B,H,T,Dh)
+    v_full = jnp.concatenate([v[i] for i in range(t_pre)], axis=2)
+    alpha_full = jnp.stack([a[i] for i in range(t_pre)], axis=2)    # (B,H,T)
+    written = (jnp.arange(total) < t_pre)[None, None]
+    retained = jnp.asarray(mc.valid_mask() & written)[:, :, :t_pre]
+    sc = SlotDMSCache.from_prefill(
+        k_full, v_full, jnp.arange(t_pre, dtype=jnp.int32), retained,
+        window, num_slots=t_pre + t_dec + 1, alpha_bin=alpha_full)
+
+    assert (mc.retained_tokens() == sc.retained_tokens()).all()
+    for i in range(t_pre, total):
+        mc = mc.step(k[i], v[i], a[i])
+        sc = sc.step(k[i], v[i], a[i])
+        assert (mc.retained_tokens() == sc.retained_tokens()).all(), i
+        for bb in range(b):
+            for hh in range(h):
+                mpos = set(np.where(np.asarray(mc.valid_mask()[bb, hh]))[0].tolist())
+                spos = set(np.asarray(sc.pos[bb, hh])[np.asarray(sc.valid[bb, hh])].tolist())
+                assert mpos == spos, (i, bb, hh)
+
+
+def test_dms_policy_prefill_import_via_protocol(tiny_arch):
+    """The same path through the public KVPolicy.prefill_import hook."""
+    pol = get_policy("dms")
+    b, h, dh, t = 1, tiny_arch.attn.num_kv_heads, tiny_arch.attn.head_dim, 10
+    cfg = KVPolicyConfig(kind="dms", cr=1.0)
+    k = jax.random.normal(jax.random.PRNGKey(0), (b, h, t, dh))
+    retained = jnp.ones((b, h, t), bool)
+    cache = pol.prefill_import(
+        tiny_arch, cfg, k, k, jnp.arange(t, dtype=jnp.int32), retained, None,
+        max_len=t + 6)
+    assert int(cache.length) == t
+    assert (cache.retained_tokens() == t).all()
+
+
+# -- config fixes ---------------------------------------------------------
+
+
+def test_cross_attention_param_count_counts_decoder_layers():
+    """Regression: `n += self.encoder_layers and ...` (boolean short-circuit)
+    undercounted encoder-decoder rooflines by the full cross-attn stack."""
+    arch = get_arch("seamless-m4t-large-v2")
+    assert arch.cross_attention and arch.encoder_layers
+    a = arch.attn
+    per_cross = (arch.d_model * a.num_heads * a.head_dim * 2
+                 + arch.d_model * a.num_kv_heads * a.head_dim * 2)
+    no_cross = dataclasses.replace(arch, cross_attention=False)
+    assert arch.param_count() - no_cross.param_count() == \
+        arch.num_layers * per_cross
