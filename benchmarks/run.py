@@ -12,6 +12,7 @@ Suites (↔ paper artifact):
     data_efficiency   Fig. 5 right (DMS vs immediate/DMC objective)
     cr_sweep          Table 1 (method × CR on needle task)
     pareto            Fig. 3 / Fig. 4 (accuracy vs budget frontiers)
+    continuous_batching  serving: scheduler vs lockstep, shared-prefill fork
 """
 from __future__ import annotations
 
@@ -28,8 +29,8 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
 
-    from benchmarks import (ablation_eviction, cr_profile, cr_sweep,
-                            data_efficiency, latency_model, pareto,
+    from benchmarks import (ablation_eviction, continuous_batching, cr_profile,
+                            cr_sweep, data_efficiency, latency_model, pareto,
                             roofline_table)
     suites = {
         "latency_model": latency_model.run,
@@ -39,6 +40,7 @@ def main(argv=None) -> int:
         "data_efficiency": data_efficiency.run,
         "cr_sweep": cr_sweep.run,
         "pareto": pareto.run,
+        "continuous_batching": continuous_batching.run,
     }
     if args.only:
         suites = {k: v for k, v in suites.items() if k == args.only}

@@ -43,7 +43,7 @@ class TOVACache:
     v: jnp.ndarray
     pos: jnp.ndarray     # (B, H, P)
     valid: jnp.ndarray   # (B, H, P)
-    length: jnp.ndarray  # ()
+    length: jnp.ndarray  # (B,) — per lane
 
     @staticmethod
     def init(batch, kv_heads, budget, head_dim, dtype=jnp.bfloat16):
@@ -51,7 +51,7 @@ class TOVACache:
         return TOVACache(z, z,
                          jnp.full((batch, kv_heads, budget), INVALID_POS, jnp.int32),
                          jnp.zeros((batch, kv_heads, budget), bool),
-                         jnp.zeros((), jnp.int32))
+                         jnp.zeros((batch,), jnp.int32))
 
     @property
     def budget(self) -> int:
@@ -65,7 +65,7 @@ class TOVACache:
         return TOVACache(
             k=jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k),
             v=jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v),
-            pos=jnp.where(hit, self.length, self.pos),
+            pos=jnp.where(hit, self.length[:, None, None], self.pos),
             valid=self.valid | hit,
             length=self.length + 1,
         )
@@ -105,7 +105,7 @@ class H2OCache:
     pos: jnp.ndarray
     valid: jnp.ndarray
     acc: jnp.ndarray       # (B, H, P) cumulative attention mass
-    length: jnp.ndarray
+    length: jnp.ndarray    # (B,) — per lane
     recent_window: int = dataclasses.field(metadata={"static": True})
 
     @staticmethod
@@ -116,7 +116,7 @@ class H2OCache:
                         jnp.full((batch, kv_heads, budget), INVALID_POS, jnp.int32),
                         jnp.zeros((batch, kv_heads, budget), bool),
                         jnp.zeros((batch, kv_heads, budget), jnp.float32),
-                        jnp.zeros((), jnp.int32), rw)
+                        jnp.zeros((batch,), jnp.int32), rw)
 
     @property
     def budget(self) -> int:
@@ -129,7 +129,7 @@ class H2OCache:
         return H2OCache(
             k=jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k),
             v=jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v),
-            pos=jnp.where(hit, self.length, self.pos),
+            pos=jnp.where(hit, self.length[:, None, None], self.pos),
             valid=self.valid | hit,
             acc=jnp.where(hit, 0.0, self.acc),
             length=self.length + 1,
@@ -142,7 +142,7 @@ class H2OCache:
         p = self.k.shape[2]
         acc = self.acc + jnp.where(self.valid, attn_weights.astype(jnp.float32), 0.0)
         over = jnp.sum(self.valid, axis=2) > self.budget
-        recent = self.pos >= (self.length - self.recent_window)
+        recent = self.pos >= (self.length - self.recent_window)[:, None, None]
         scores = jnp.where(self.valid & ~recent, acc, jnp.inf)
         any_evictable = jnp.any(jnp.isfinite(scores), axis=2)
         oldest = jnp.argmin(jnp.where(self.valid, self.pos, INVALID_POS), axis=2)
@@ -181,7 +181,7 @@ class QuestCache:
     v: jnp.ndarray
     kmin: jnp.ndarray     # (B, H, S/page, D)
     kmax: jnp.ndarray
-    length: jnp.ndarray
+    length: jnp.ndarray   # (B,) — per lane
     page_size: int = dataclasses.field(metadata={"static": True})
     top_pages: int = dataclasses.field(metadata={"static": True})
 
@@ -194,17 +194,21 @@ class QuestCache:
             z, z,
             jnp.full((batch, kv_heads, n_pages, head_dim), jnp.inf, jnp.float32),
             jnp.full((batch, kv_heads, n_pages, head_dim), -jnp.inf, jnp.float32),
-            jnp.zeros((), jnp.int32), page_size, top_pages)
+            jnp.zeros((batch,), jnp.int32), page_size, top_pages)
 
     def append(self, k_new, v_new) -> "QuestCache":
-        """k_new/v_new: (B, H, 1, D)."""
-        t = self.length
-        k = jax.lax.dynamic_update_slice_in_dim(self.k, k_new.astype(self.k.dtype), t, axis=2)
-        v = jax.lax.dynamic_update_slice_in_dim(self.v, v_new.astype(self.v.dtype), t, axis=2)
-        page = t // self.page_size
+        """k_new/v_new: (B, H, 1, D), written at each lane's own length."""
+        t = self.length                                     # (B,)
+
+        def upd(buf, new, off):
+            return jax.lax.dynamic_update_slice_in_dim(buf, new, off, axis=1)
+
+        k = jax.vmap(upd)(self.k, k_new.astype(self.k.dtype), t)
+        v = jax.vmap(upd)(self.v, v_new.astype(self.v.dtype), t)
+        page = t // self.page_size                          # (B,)
         kf = k_new[..., 0, :].astype(jnp.float32)
         n_pages = self.kmin.shape[2]
-        hit = (jnp.arange(n_pages) == page)[None, None, :, None]
+        hit = (jnp.arange(n_pages)[None, :] == page[:, None])[:, None, :, None]
         kmin = jnp.where(hit, jnp.minimum(self.kmin, kf[..., None, :]), self.kmin)
         kmax = jnp.where(hit, jnp.maximum(self.kmax, kf[..., None, :]), self.kmax)
         return QuestCache(k, v, kmin, kmax, t + 1, self.page_size, self.top_pages)
@@ -218,19 +222,20 @@ class QuestCache:
         qf = q.astype(jnp.float32)[..., None, :]
         ub = jnp.sum(jnp.maximum(qf * self.kmin, qf * self.kmax), axis=-1)  # (B,H,P)
         n_pages = self.kmin.shape[2]
-        live = (jnp.arange(n_pages) * self.page_size) < self.length
-        ub = jnp.where(live[None, None], ub, -jnp.inf)
+        live = (jnp.arange(n_pages)[None, :] * self.page_size) \
+            < self.length[:, None]                          # (B, n_pages)
+        ub = jnp.where(live[:, None], ub, -jnp.inf)
         k = min(self.top_pages, n_pages)
         thresh = jax.lax.top_k(ub, k)[0][..., -1:]
-        sel = (ub >= thresh) & live[None, None]
+        sel = (ub >= thresh) & live[:, None]
         return sel
 
     def token_mask_from_pages(self, page_mask: jnp.ndarray) -> jnp.ndarray:
         s = self.k.shape[2]
         token_pages = jnp.arange(s) // self.page_size
         tok = jnp.take(page_mask, token_pages, axis=2)
-        written = jnp.arange(s) < self.length
-        return tok & written[None, None]
+        written = jnp.arange(s)[None, None, :] < self.length[:, None, None]
+        return tok & written
 
     def positions(self):
         s = self.k.shape[2]
@@ -239,13 +244,13 @@ class QuestCache:
     def retained_tokens(self):
         # memory footprint is FULL — that is Quest's trade-off
         s = self.k.shape[2]
-        written = jnp.sum((jnp.arange(s) < self.length))
-        return jnp.broadcast_to(written, self.k.shape[:2])
+        written = jnp.minimum(self.length, s)               # (B,)
+        return jnp.broadcast_to(written[:, None], self.k.shape[:2])
 
     def reads_per_step(self):
         n_live_pages = jnp.minimum((self.length + self.page_size - 1) // self.page_size,
                                    self.top_pages)
-        return n_live_pages * self.page_size
+        return n_live_pages * self.page_size                # (B,)
 
 
 # ---------------------------------------------------------------------------
@@ -265,7 +270,7 @@ class DMCCache:
     v: jnp.ndarray
     z: jnp.ndarray        # (B, H, P) accumulation weights
     count: jnp.ndarray    # (B, H) number of live entries
-    length: jnp.ndarray
+    length: jnp.ndarray   # (B,) — per lane
 
     @staticmethod
     def init(batch, kv_heads, num_slots, head_dim):
@@ -273,7 +278,7 @@ class DMCCache:
         return DMCCache(z4, z4,
                         jnp.zeros((batch, kv_heads, num_slots), jnp.float32),
                         jnp.zeros((batch, kv_heads), jnp.int32),
-                        jnp.zeros((), jnp.int32))
+                        jnp.zeros((batch,), jnp.int32))
 
     def step(self, k_new, v_new, alpha, omega=None) -> "DMCCache":
         """alpha: (B, H) bool merge decision; omega: optional (B, H) importance

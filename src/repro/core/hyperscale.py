@@ -27,11 +27,16 @@ import numpy as np
 
 @dataclass(frozen=True)
 class ScalingConfig:
-    """One L-W-CR point of the scaling grid."""
+    """One L-W-CR point of the scaling grid.
+
+    ``eos_id`` enables EOS-driven early exit during serving: a chain that
+    emits it stops contributing KV reads and its lane is reclaimed (None =
+    decode the full budget, the paper's fixed-L accounting)."""
 
     max_len: int
     width: int
     cr: float = 1.0
+    eos_id: Optional[int] = None
 
     @property
     def label(self) -> str:
@@ -73,11 +78,25 @@ class BudgetMeter:
         self.peak_bytes = max(self.peak_bytes, float(nbytes))
 
     def merge(self, other: "BudgetMeter") -> "BudgetMeter":
+        """Concurrent merge: the two meters ran on co-resident lanes (parallel
+        chains / simultaneous requests), so peak memory adds."""
         return BudgetMeter(
             kv_reads=self.kv_reads + other.kv_reads,
             peak_tokens=self.peak_tokens + other.peak_tokens,  # parallel chains co-resident
             peak_bytes=self.peak_bytes + other.peak_bytes,
             steps=max(self.steps, other.steps),
+            generated_tokens=self.generated_tokens + other.generated_tokens,
+        )
+
+    def merge_sequential(self, other: "BudgetMeter") -> "BudgetMeter":
+        """Sequential merge: ``other`` ran *after* self on the same lanes
+        (e.g. a request's prefill phase then decode phase), so peak memory is
+        the max over time, not the sum — reads still integrate."""
+        return BudgetMeter(
+            kv_reads=self.kv_reads + other.kv_reads,
+            peak_tokens=max(self.peak_tokens, other.peak_tokens),
+            peak_bytes=max(self.peak_bytes, other.peak_bytes),
+            steps=self.steps + other.steps,
             generated_tokens=self.generated_tokens + other.generated_tokens,
         )
 

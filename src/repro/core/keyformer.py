@@ -37,7 +37,7 @@ class KeyformerCache:
     pos: jnp.ndarray     # (B, H, P) int32
     valid: jnp.ndarray   # (B, H, P) bool
     score: jnp.ndarray   # (B, H, P) f32 — accumulated regularised scores
-    length: jnp.ndarray  # ()
+    length: jnp.ndarray  # (B,) — per lane
     recent_window: int = dataclasses.field(metadata={"static": True})
     tau: float = dataclasses.field(metadata={"static": True}, default=1.0)
 
@@ -50,7 +50,7 @@ class KeyformerCache:
             jnp.full((batch, kv_heads, budget), INVALID_POS, jnp.int32),
             jnp.zeros((batch, kv_heads, budget), bool),
             jnp.zeros((batch, kv_heads, budget), jnp.float32),
-            jnp.zeros((), jnp.int32), recent_window, tau)
+            jnp.zeros((batch,), jnp.int32), recent_window, tau)
 
     @property
     def budget(self) -> int:
@@ -64,7 +64,7 @@ class KeyformerCache:
             self,
             k=jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k),
             v=jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v),
-            pos=jnp.where(hit, self.length, self.pos),
+            pos=jnp.where(hit, self.length[:, None, None], self.pos),
             valid=self.valid | hit,
             score=jnp.where(hit, 0.0, self.score),
             length=self.length + 1)
@@ -79,21 +79,29 @@ class KeyformerCache:
         """
         p = self.k.shape[2]
         w = attn_weights.astype(jnp.float32)
-        key = jax.random.fold_in(jax.random.PRNGKey(_NOISE_SEED), self.length)
-        # decorrelate the draw across layers (all caches share `length` at a
-        # given step): fold in a content-derived salt from this layer's weights
+        # Noise is derived PER LANE from (lane step, lane content): lanes are
+        # independent streams under continuous batching, so the draw must not
+        # see other lanes (batch invariance — a forked chain replays exactly
+        # the same noise as an independently-prefilled one).  The content
+        # salt decorrelates layers (all caches share `length` at a step).
+        base = jax.random.PRNGKey(_NOISE_SEED)
         salt = jax.lax.bitcast_convert_type(
-            jnp.sum(w).astype(jnp.float32), jnp.uint32)
-        key = jax.random.fold_in(key, salt)
-        u = jax.random.uniform(key, w.shape, minval=_SCORE_EPS,
-                               maxval=1.0 - _SCORE_EPS)
+            jnp.sum(w, axis=(1, 2)).astype(jnp.float32), jnp.uint32)  # (B,)
+
+        def draw(len_b, salt_b):
+            k = jax.random.fold_in(base, len_b)
+            k = jax.random.fold_in(k, salt_b)
+            return jax.random.uniform(k, w.shape[1:], minval=_SCORE_EPS,
+                                      maxval=1.0 - _SCORE_EPS)
+
+        u = jax.vmap(draw)(self.length, salt)
         gumbel = -jnp.log(-jnp.log(u))
         logits = jnp.where(self.valid, jnp.log(w + _SCORE_EPS) + gumbel, -jnp.inf)
         reg = jax.nn.softmax(logits / self.tau, axis=-1)
         score = self.score + jnp.where(self.valid, reg, 0.0)
 
         over = jnp.sum(self.valid, axis=2) > self.budget
-        recent = self.pos >= (self.length - self.recent_window)
+        recent = self.pos >= (self.length - self.recent_window)[:, None, None]
         cand = jnp.where(self.valid & ~recent, score, jnp.inf)
         any_evictable = jnp.any(jnp.isfinite(cand), axis=2)
         oldest = jnp.argmin(jnp.where(self.valid, self.pos, INVALID_POS), axis=2)

@@ -14,7 +14,10 @@ Two DMS cache implementations with identical attention semantics:
 All caches are registered pytrees and fully functional (update returns a new
 cache), so they pass through ``jax.jit`` / ``lax.scan`` / pjit unscathed.
 
-Layout: ``k, v``: (B, Hkv, P, Dh); per-slot metadata (B, Hkv, P).
+Layout: ``k, v``: (B, Hkv, P, Dh); per-slot metadata (B, Hkv, P); ``length``
+is **per lane** (B,) — batch rows are independent *lanes* that may sit at
+different sequence positions (continuous batching: staggered admission,
+chunked prefill, EOS early-exit all advance lanes independently).
 """
 from __future__ import annotations
 
@@ -69,24 +72,29 @@ def _tree_dataclass(cls):
 class VanillaCache:
     k: jnp.ndarray      # (B, Hkv, S, Dh)
     v: jnp.ndarray
-    length: jnp.ndarray  # () int32 — tokens written
+    length: jnp.ndarray  # (B,) int32 — tokens written, per lane
 
     @staticmethod
     def init(batch: int, kv_heads: int, max_len: int, head_dim: int, dtype=jnp.bfloat16):
         z = jnp.zeros((batch, kv_heads, max_len, head_dim), dtype)
-        return VanillaCache(z, z, jnp.zeros((), jnp.int32))
+        return VanillaCache(z, z, jnp.zeros((batch,), jnp.int32))
 
     def append(self, k_new: jnp.ndarray, v_new: jnp.ndarray) -> "VanillaCache":
-        """k_new, v_new: (B, Hkv, T_new, Dh) written at [length, length+T_new)."""
+        """k_new, v_new: (B, Hkv, T_new, Dh) written at [length, length+T_new)
+        of each lane (per-lane offsets: a vmapped dynamic-slice scatter)."""
         t_new = k_new.shape[2]
-        k = jax.lax.dynamic_update_slice_in_dim(self.k, k_new.astype(self.k.dtype), self.length, axis=2)
-        v = jax.lax.dynamic_update_slice_in_dim(self.v, v_new.astype(self.v.dtype), self.length, axis=2)
+
+        def upd(buf, new, off):
+            return jax.lax.dynamic_update_slice_in_dim(buf, new, off, axis=1)
+
+        k = jax.vmap(upd)(self.k, k_new.astype(self.k.dtype), self.length)
+        v = jax.vmap(upd)(self.v, v_new.astype(self.v.dtype), self.length)
         return VanillaCache(k, v, self.length + t_new)
 
     def valid_mask(self) -> jnp.ndarray:
-        # lazy (1, 1, S): broadcast happens inside the consumer's `where`
+        # lazy (B, 1, S): broadcast happens inside the consumer's `where`
         s = self.k.shape[2]
-        return (jnp.arange(s) < self.length)[None, None, :]
+        return jnp.arange(s)[None, None, :] < self.length[:, None, None]
 
     def positions(self) -> jnp.ndarray:
         s = self.k.shape[2]
@@ -94,7 +102,7 @@ class VanillaCache:
 
     def retained_tokens(self) -> jnp.ndarray:
         b, h = self.k.shape[:2]
-        return jnp.broadcast_to(self.length, (b, h))
+        return jnp.broadcast_to(self.length[:, None], (b, h))
 
 
 # ---------------------------------------------------------------------------
@@ -108,7 +116,7 @@ class MaskedDMSCache:
     v: jnp.ndarray
     retained: jnp.ndarray   # (B, Hkv, S) bool — False once evicted
     alpha: jnp.ndarray      # (B, Hkv, S) bool — recorded eviction decisions
-    length: jnp.ndarray     # () int32
+    length: jnp.ndarray     # (B,) int32 — per lane
     window: int = dataclasses.field(metadata={"static": True})
 
     @staticmethod
@@ -116,29 +124,31 @@ class MaskedDMSCache:
              window: int, dtype=jnp.bfloat16):
         z = jnp.zeros((batch, kv_heads, max_len, head_dim), dtype)
         f = jnp.zeros((batch, kv_heads, max_len), bool)
-        return MaskedDMSCache(z, z, f, f, jnp.zeros((), jnp.int32), window)
+        return MaskedDMSCache(z, z, f, f, jnp.zeros((batch,), jnp.int32), window)
 
     def step(self, k_new, v_new, alpha_new) -> "MaskedDMSCache":
         """Append ONE token per head; execute the eviction scheduled w steps ago.
 
         k_new/v_new: (B, Hkv, 1, Dh); alpha_new: (B, Hkv) bool.
         """
-        t = self.length
-        k = jax.lax.dynamic_update_slice_in_dim(self.k, k_new.astype(self.k.dtype), t, axis=2)
-        v = jax.lax.dynamic_update_slice_in_dim(self.v, v_new.astype(self.v.dtype), t, axis=2)
+        t = self.length                                     # (B,)
         s = self.k.shape[2]
         idx = jnp.arange(s)
-        retained = jnp.where(idx[None, None] == t, True, self.retained)
-        alpha = jnp.where(idx[None, None] == t, alpha_new[..., None], self.alpha)
+        at_t = idx[None, None, :] == t[:, None, None]       # (B, 1, S)
+        k = jnp.where(at_t[..., None], k_new.astype(self.k.dtype), self.k)
+        v = jnp.where(at_t[..., None], v_new.astype(self.v.dtype), self.v)
+        retained = jnp.where(at_t, True, self.retained)
+        alpha = jnp.where(at_t, alpha_new[..., None], self.alpha)
         # execute eviction of token t - w (if it was marked)
-        j = t - self.window
-        evict_now = (idx[None, None] == j) & alpha & (j >= 0)
+        j = t - self.window                                 # (B,)
+        evict_now = (idx[None, None, :] == j[:, None, None]) & alpha \
+            & (j >= 0)[:, None, None]
         retained = retained & ~evict_now
         return MaskedDMSCache(k, v, retained, alpha, t + 1, self.window)
 
     def valid_mask(self) -> jnp.ndarray:
         s = self.k.shape[2]
-        written = (jnp.arange(s) < self.length)[None, None]
+        written = jnp.arange(s)[None, None, :] < self.length[:, None, None]
         return self.retained & written
 
     def positions(self) -> jnp.ndarray:
@@ -176,7 +186,7 @@ class SlotDMSCache:
     free_count: jnp.ndarray   # (B, H) int32
     pending_slot: jnp.ndarray   # (B, H, w) int32
     pending_alpha: jnp.ndarray  # (B, H, w) bool
-    length: jnp.ndarray       # () int32 — logical tokens written
+    length: jnp.ndarray       # (B,) int32 — logical tokens written, per lane
     overflowed: jnp.ndarray   # (B, H) bool
     window: int = dataclasses.field(metadata={"static": True})
     # False = plain ring-buffer use (local-attention window cache): eviction
@@ -197,7 +207,7 @@ class SlotDMSCache:
             free_count=jnp.full((batch, kv_heads), p, jnp.int32),
             pending_slot=jnp.full((batch, kv_heads, window), -1, jnp.int32),
             pending_alpha=jnp.zeros((batch, kv_heads, window), bool),
-            length=jnp.zeros((), jnp.int32),
+            length=jnp.zeros((batch,), jnp.int32),
             overflowed=jnp.zeros((batch, kv_heads), bool),
             window=window,
             dms_active=dms_active,
@@ -212,14 +222,13 @@ class SlotDMSCache:
 
     def _execute_pending(self) -> "SlotDMSCache":
         """Execute the eviction decision made ``w`` steps ago (ring slot t mod w)."""
-        t = self.length
+        t = self.length                                     # (B,)
         w = self.window
-        ring_idx = jnp.mod(t, w)
-        slot = jnp.take_along_axis(self.pending_slot, ring_idx[None, None, None].repeat(
-            self.pending_slot.shape[0], 0).repeat(self.pending_slot.shape[1], 1), axis=2)[..., 0]
-        alpha = jnp.take_along_axis(self.pending_alpha, ring_idx[None, None, None].repeat(
-            self.pending_alpha.shape[0], 0).repeat(self.pending_alpha.shape[1], 1), axis=2)[..., 0]
-        do_evict = (t >= w) & alpha & (slot >= 0)
+        b, h = self.valid.shape[:2]
+        ring_idx = jnp.broadcast_to(jnp.mod(t, w)[:, None, None], (b, h, 1))
+        slot = jnp.take_along_axis(self.pending_slot, ring_idx, axis=2)[..., 0]
+        alpha = jnp.take_along_axis(self.pending_alpha, ring_idx, axis=2)[..., 0]
+        do_evict = (t >= w)[:, None] & alpha & (slot >= 0)
         # still-valid guard (overflow may have recycled it already)
         slot_c = jnp.clip(slot, 0, self.valid.shape[2] - 1)
         was_valid = jnp.take_along_axis(self.valid, slot_c[..., None], axis=2)[..., 0]
@@ -263,16 +272,16 @@ class SlotDMSCache:
         """
         cache = self._execute_pending()
         cache, slot = cache._allocate()
-        t = cache.length
+        t = cache.length                                                  # (B,)
         p_idx = jnp.arange(cache.valid.shape[2])
         hit = p_idx[None, None] == slot[..., None]                        # (B,H,P)
         k = jnp.where(hit[..., None], k_new.astype(cache.k.dtype), cache.k)
         v = jnp.where(hit[..., None], v_new.astype(cache.v.dtype), cache.v)
-        pos = jnp.where(hit, t, cache.pos)
+        pos = jnp.where(hit, t[:, None, None], cache.pos)
         valid = cache.valid | hit
-        ring_idx = jnp.mod(t, cache.window)
+        ring_idx = jnp.mod(t, cache.window)                               # (B,)
         w_idx = jnp.arange(cache.window)
-        ring_hit = w_idx[None, None] == ring_idx
+        ring_hit = w_idx[None, None, :] == ring_idx[:, None, None]        # (B,1,w)
         pending_slot = jnp.where(ring_hit, slot[..., None], cache.pending_slot)
         pending_alpha = jnp.where(ring_hit, alpha_new[..., None], cache.pending_alpha)
         return dataclasses.replace(
@@ -330,7 +339,7 @@ class SlotDMSCache:
             free_count=free_count.astype(jnp.int32),
             pending_slot=jnp.full((b, h, window), -1, jnp.int32),
             pending_alpha=jnp.zeros((b, h, window), bool),
-            length=jnp.asarray(t, jnp.int32),
+            length=jnp.full((b,), t, jnp.int32),
             overflowed=jnp.zeros((b, h), bool),
             window=window,
         )

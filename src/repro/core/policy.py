@@ -18,6 +18,14 @@ contract; every policy owns its full lifecycle:
 * ``prefill_import(...)`` — build the cache from full-attention prefill
   outputs (e.g. :meth:`SlotDMSCache.from_prefill`), including un-executed
   delayed-eviction decisions.
+* ``fork_cache(cache, width)`` / ``gather_cache(cache, src)`` — the
+  shared-prefill fork: prefill a prompt once, clone the cache pytree into W
+  hyper-scaling chains instead of re-prefilling W times (``fork_cache``
+  widens the batch; ``gather_cache`` is the in-place lane shuffle the
+  scheduler uses inside its fixed lane arena).
+* ``reclaim_cache(cache, reset_mask, fresh)`` — per-lane arena reset: lanes
+  where ``reset_mask`` is True return to the pristine ``fresh`` state (EOS
+  early-exit frees a lane's slots for the next admitted request).
 * ``metrics(cache)`` — the paper's two budget axes, policy-defined instead of
   engine-guessed: ``live_tokens`` (peak-memory axis), ``reads_tokens``
   (KV-reads axis; differs from live for Quest) and ``peak_bytes`` (physical
@@ -215,6 +223,45 @@ class KVPolicy:
         that run a dense prefill and import the result — policies without an
         import path raise."""
         raise NotImplementedError(f"{self.name}: no prefill import path")
+
+    # -- lane lifecycle (continuous batching / hyperscale fork) --------------
+
+    def fork_cache(self, cache: Any, width: int, *, axis: int = 0) -> Any:
+        """Clone every lane of ``cache`` into ``width`` adjacent lanes.
+
+        The shared-prefill fork: prefill once at batch B, fork to B·W chains
+        — forked chains see bitwise-identical cache contents, so their first
+        decode step matches W independent prefills while the prefill-phase
+        KV reads drop by W×.  The default tiles the lane axis of every array
+        leaf (all caches are lane-leading pytrees); policies with non-lane
+        state override.  ``axis`` selects the lane axis (1 for decode states
+        stacked over superblocks)."""
+        return jax.tree_util.tree_map(
+            lambda a: jnp.repeat(a, width, axis=axis), cache)
+
+    def gather_cache(self, cache: Any, src: jnp.ndarray, *,
+                     axis: int = 0) -> Any:
+        """Lane shuffle: new lane ``l`` takes old lane ``src[l]``'s state —
+        how the scheduler forks a prefilled lane into free lanes of a
+        fixed-size arena (``src`` is the identity except forked targets).
+        Same override point as :meth:`fork_cache` for policies whose state
+        is not purely lane-leading."""
+        return jax.tree_util.tree_map(
+            lambda a: jnp.take(a, src, axis=axis), cache)
+
+    def reclaim_cache(self, cache: Any, reset_mask: jnp.ndarray,
+                      fresh: Any, *, axis: int = 0) -> Any:
+        """Reset lanes where ``reset_mask`` (B,) is True to the pristine
+        ``fresh`` cache: the EOS-reclamation hook.  A reclaimed lane's arena
+        reads as empty (``live_tokens`` ≈ 0) and its free list is full, so
+        the scheduler can admit the next request into it."""
+
+        def sel(cur, init):
+            m = reset_mask.reshape((1,) * axis + (-1,)
+                                   + (1,) * (cur.ndim - axis - 1))
+            return jnp.where(m, init, cur)
+
+        return jax.tree_util.tree_map(sel, cache, fresh)
 
     # -- accounting ----------------------------------------------------------
 

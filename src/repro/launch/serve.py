@@ -1,9 +1,10 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> --policy dms``.
 
-Boots the engine with a smoke-scale model, serves a batch of synthetic
-requests, and prints the hyper-scaling budget metrics (KV reads / peak
-tokens) per request — the serving-side counterpart of the dry-run, runnable
-on CPU.
+Boots the engine with a smoke-scale model and serves synthetic requests
+through the continuous-batching scheduler: staggered arrivals, mixed prompt
+lengths, optional hyper-scaling width (shared-prefill fork) and EOS early
+exit.  Prints per-request budget metrics (prefill/decode KV reads, peak
+tokens) — the serving-side counterpart of the dry-run, runnable on CPU.
 """
 from __future__ import annotations
 
@@ -18,6 +19,7 @@ from repro.core.config import KVPolicyConfig
 from repro.core.policy import available_policies
 from repro.models import transformer as tfm
 from repro.serving.engine import Engine
+from repro.serving.scheduler import Request
 
 
 def main(argv=None):
@@ -26,26 +28,54 @@ def main(argv=None):
     ap.add_argument("--policy", default="dms",
                     choices=list(available_policies()))
     ap.add_argument("--cr", type=float, default=4.0)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--num-lanes", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max prompt length; --stagger mixes lengths")
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--width", type=int, default=1,
+                    help="hyper-scaling chains per request (shared prefill)")
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--stagger", action="store_true",
+                    help="staggered arrivals + mixed prompt lengths")
+    ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--use-kernel", action="store_true")
     args = ap.parse_args(argv)
 
     arch = get_smoke(args.arch)
     params = tfm.init_model(jax.random.PRNGKey(0), arch)
     policy = KVPolicyConfig(kind=args.policy, cr=args.cr, window=arch.dms.window)
-    engine = Engine(arch, params, policy, use_kernel=args.use_kernel)
-    prompts = np.random.default_rng(0).integers(
-        3, arch.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
-    res = engine.generate(prompts, args.max_new)
+    engine = Engine(arch, params, policy, use_kernel=args.use_kernel,
+                    chunk=args.chunk)
+
+    rng = np.random.default_rng(0)
+    max_len = args.prompt_len + args.max_new
+    sched = engine.scheduler(num_lanes=args.num_lanes, max_len=max_len)
+    for i in range(args.requests):
+        plen = (int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
+                if args.stagger else args.prompt_len)
+        sched.submit(Request(
+            uid=i,
+            prompt=rng.integers(3, arch.vocab_size, size=(plen,)).astype(np.int32),
+            max_new=args.max_new, width=args.width,
+            eos_id=args.eos_id, arrival=i if args.stagger else 0))
+    results = sched.run()
+
+    for r in sorted(results, key=lambda r: r.uid):
+        print(json.dumps({
+            "uid": r.uid, "chains": len(r.lengths),
+            "generated": r.lengths.tolist(),
+            "kv_reads": r.meter.kv_reads,
+            "kv_reads_prefill": r.prefill_meter.kv_reads,
+            "kv_reads_decode": r.decode_meter.kv_reads,
+            "peak_tokens": r.meter.peak_tokens,
+            "peak_bytes": r.meter.peak_bytes,
+            "ticks": [r.admitted_tick, r.finished_tick],
+        }))
     print(json.dumps({
         "policy": args.policy, "cr": args.cr,
-        "generated_shape": list(res.tokens.shape),
-        "kv_reads": res.meter.kv_reads,
-        "peak_tokens": res.meter.peak_tokens,
-        "peak_bytes": res.meter.peak_bytes,
-        "steps": res.meter.steps,
+        "requests": len(results), "lanes": args.num_lanes,
+        "scheduler_ticks": sched.ticks, "scheduler_steps": sched.steps,
     }))
 
 

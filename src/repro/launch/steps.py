@@ -75,7 +75,9 @@ def decode_input_specs(arch: ArchConfig, shape: ShapeConfig,
         lambda: tfm.init_decode_state(arch, b, s, policy))
     specs: Dict[str, Any] = {
         "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
-        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        # per-lane positions: production decode is continuous-batched, so the
+        # lowered step must accept lanes at different sequence positions
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
         "cache": cache,
     }
     e = enc_len_for(arch, s)

@@ -356,7 +356,7 @@ def decode_attention(
     arch: ArchConfig,
     *,
     layer_window: Optional[int] = None,
-    pos_t: Optional[jnp.ndarray] = None,   # scalar int32 current position
+    pos_t: Optional[jnp.ndarray] = None,   # scalar int32 OR per-lane (B,)
     use_kernel: bool = False,
     cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None,
 ) -> Tuple[jnp.ndarray, Any, Dict[str, Any]]:
@@ -365,6 +365,10 @@ def decode_attention(
     All policy behaviour (cache update, visibility, eviction, budget
     accounting) is dispatched through the KVPolicy registry keyed by the
     cache's static policy name — this function contains no per-policy code.
+
+    ``pos_t`` may be a scalar (lockstep batch) or a per-lane (B,) vector:
+    continuous batching runs lanes at different sequence positions (staggered
+    admission / chunked prefill), so RoPE and window masking are per lane.
 
     Returns (output (B,1,D), new_cache, aux).  aux["live_tokens"] feeds the
     hyper-scaling peak-memory axis; aux["reads_tokens"] the KV-reads axis
@@ -375,8 +379,9 @@ def decode_attention(
     dms = arch.dms
     q_raw, k_new, v_new = project_qkv(p, x_t, cfg, dtype)
     if pos_t is None:
-        pos_t = _cache_length(cache)
-    pos_arr = jnp.full((1,), pos_t, jnp.int32) if jnp.ndim(pos_t) == 0 else pos_t[:1]
+        pos_t = _cache_length(cache)                      # (B,) per lane
+    pos_lane = jnp.broadcast_to(jnp.asarray(pos_t, jnp.int32), (b,))
+    pos_arr = pos_lane[:, None]                           # (B, 1) for RoPE
 
     # cache is a PolicyCache (or None for encoder-memory cross-attention);
     # its static policy name is the only dispatch key
@@ -392,7 +397,8 @@ def decode_attention(
         q_raw = dms_lib.zero_borrowed_neuron(q_raw, cfg.num_kv_heads)
 
     if cfg.rope != "none":
-        rpos = jnp.broadcast_to(pos_arr, (3, 1)) if cfg.rope == "mrope" else pos_arr
+        rpos = (jnp.broadcast_to(pos_arr[None], (3, b, 1))
+                if cfg.rope == "mrope" else pos_arr)
         q = apply_rope(q_raw, rpos, cfg.rope_theta, cfg.rope, cfg.mrope_sections)
         k_new = apply_rope(k_new, rpos, cfg.rope_theta, cfg.rope, cfg.mrope_sections)
     else:
@@ -415,13 +421,13 @@ def decode_attention(
     if pol is None:
         raise TypeError(f"decode_attention needs a PolicyCache, got {type(cache)}")
 
-    pol_aux = {"alpha_bin": alpha_bin, "pos_t": pos_t, "attn_cfg": cfg,
+    pol_aux = {"alpha_bin": alpha_bin, "pos_t": pos_lane, "attn_cfg": cfg,
                "arch": arch, "dtype": dtype}
     inner, spec = pol.decode_update(cache.cache, q, k_new_c, v_new_c, pol_aux)
     out, w_group = _masked_decode(
         q, spec.k, spec.v, spec.visible, spec.positions,
-        window if spec.positions is not None else None, cfg, use_kernel, pos_t,
-        need_weights=spec.needs_weights)
+        window if spec.positions is not None else None, cfg, use_kernel,
+        pos_lane, need_weights=spec.needs_weights)
     if spec.needs_weights:
         inner = pol.post_attend(inner, w_group)
     cache = dataclasses.replace(cache, cache=inner)
@@ -435,7 +441,8 @@ def decode_attention(
 
 def _masked_decode(q, k, v, valid, pos, window, cfg, use_kernel,
                    pos_t=None, need_weights=False):
-    """q: (B,1,Hq,Dh); k/v: (B,Hkv,P,Dh); valid: (B,Hkv,P) bool.
+    """q: (B,1,Hq,Dh); k/v: (B,Hkv,P,Dh); valid: (B,Hkv,P) bool;
+    pos_t: per-lane (B,) current positions (or scalar).
 
     Local-window layers additionally hide slots with position <= t - window.
     Returns (out (B,1,Hq,Dh), group-summed weights (B,Hkv,P) or None).
@@ -445,7 +452,8 @@ def _masked_decode(q, k, v, valid, pos, window, cfg, use_kernel,
     g = hq // hkv
     vis = valid
     if window is not None and pos is not None and pos_t is not None:
-        vis = vis & (pos > (pos_t - window))
+        ptl = jnp.broadcast_to(jnp.asarray(pos_t, jnp.int32), (b,))
+        vis = vis & (pos > (ptl[:, None, None] - window))
     if use_kernel and not need_weights:
         from repro.kernels.dms_decode import ops as dkops
         out = dkops.dms_decode_attention(q, k, v, vis, logit_cap=cfg.logit_softcap)

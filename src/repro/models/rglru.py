@@ -127,5 +127,5 @@ def init_rglru_state(batch: int, d_model: int, cfg: RGLRUConfig) -> RGLRUState:
     return RGLRUState(
         jnp.zeros((batch, w), jnp.float32),
         jnp.zeros((batch, cfg.conv_kernel - 1, w), jnp.float32),
-        jnp.zeros((), jnp.int32),
+        jnp.zeros((batch,), jnp.int32),   # per-lane position (continuous batching)
     )

@@ -224,5 +224,5 @@ def init_ssd_state(batch: int, d_model: int, cfg: SSMConfig, dtype=jnp.float32) 
         jnp.zeros((batch, k1, di), dtype),
         jnp.zeros((batch, k1, gn), dtype),
         jnp.zeros((batch, k1, gn), dtype),
-        jnp.zeros((), jnp.int32),
+        jnp.zeros((batch,), jnp.int32),   # per-lane position (continuous batching)
     )

@@ -329,20 +329,94 @@ def init_decode_state(arch: ArchConfig, batch: int, max_len: int,
     return state
 
 
+# -- lane lifecycle over whole decode states --------------------------------
+#
+# Decode-state leaves are stacked over superblocks (axis 0) with the lane
+# (batch) axis at position 1.  PolicyCache nodes dispatch through their
+# policy's fork/reclaim lifecycle hooks; raw recurrent states (SSD / RG-LRU)
+# fork and reset generically.
+
+
+def _is_policy_cache(x) -> bool:
+    return isinstance(x, policy_lib.PolicyCache)
+
+
+def fork_decode_state(state: Dict[str, Any], width: int) -> Dict[str, Any]:
+    """Shared-prefill fork: clone every lane into ``width`` chains.
+
+    Prefill a prompt once, fork the whole decode state into W hyper-scaling
+    chains — forked chains carry bitwise-identical cache/recurrent state, so
+    step-0 decode logits match W independent prefills at 1/W of the
+    prefill-phase KV reads."""
+
+    def f(node):
+        if _is_policy_cache(node):
+            pol = policy_lib.get_policy(node.policy)
+            return dataclasses.replace(
+                node, cache=pol.fork_cache(node.cache, width, axis=1))
+        return jnp.repeat(node, width, axis=1)
+
+    return jax.tree_util.tree_map(f, state, is_leaf=_is_policy_cache)
+
+
+def reclaim_lanes(state: Dict[str, Any], reset_mask: jnp.ndarray,
+                  fresh: Dict[str, Any]) -> Dict[str, Any]:
+    """EOS reclamation: lanes where ``reset_mask`` (B,) is True return to the
+    pristine ``fresh`` state (arena empty, free list full, position 0)."""
+
+    def f(node, init):
+        if _is_policy_cache(node):
+            pol = policy_lib.get_policy(node.policy)
+            return dataclasses.replace(
+                node, cache=pol.reclaim_cache(node.cache, reset_mask,
+                                              init.cache, axis=1))
+        m = reset_mask.reshape((1, -1) + (1,) * (node.ndim - 2))
+        return jnp.where(m, init, node)
+
+    return jax.tree_util.tree_map(f, state, fresh, is_leaf=_is_policy_cache)
+
+
+def gather_lanes(state: Dict[str, Any], src: jnp.ndarray) -> Dict[str, Any]:
+    """Lane shuffle: new lane ``l`` takes old lane ``src[l]``'s full state.
+
+    This is how the scheduler forks a prefilled lane into W free lanes inside
+    a fixed-size batch (``src`` is the identity except forked targets).
+    PolicyCache nodes dispatch through :meth:`KVPolicy.gather_cache` — the
+    same override point as ``fork_cache`` for policies with non-lane state."""
+
+    def f(node):
+        if _is_policy_cache(node):
+            pol = policy_lib.get_policy(node.policy)
+            return dataclasses.replace(
+                node, cache=pol.gather_cache(node.cache, src, axis=1))
+        return jnp.take(node, src, axis=1)
+
+    return jax.tree_util.tree_map(f, state, is_leaf=_is_policy_cache)
+
+
 def decode_step(
     params: dict,
     token: jnp.ndarray,               # (B, 1) int32
     state: Dict[str, Any],
     arch: ArchConfig,
-    pos_t: jnp.ndarray,               # scalar int32
+    pos_t: jnp.ndarray,               # scalar int32 OR per-lane (B,)
     *,
     use_kernel: bool = False,
     scan_layers: bool = True,
     enc_out: Optional[jnp.ndarray] = None,
     enc_valid: Optional[jnp.ndarray] = None,
     embed_override: Optional[jnp.ndarray] = None,
+    active: Optional[jnp.ndarray] = None,   # (B,) bool — lane mask
 ) -> Tuple[jnp.ndarray, Dict[str, Any], Dict[str, Any]]:
-    """One decode step.  Returns (logits (B, V), new_state, aux)."""
+    """One decode step.  Returns (logits (B, V), new_state, aux).
+
+    Batch rows are independent *lanes*: ``pos_t`` may be per-lane and
+    ``active`` masks lanes out of the step entirely — an inactive lane's
+    cache/recurrent state is left untouched (the compute still runs, batched,
+    but the state write is discarded) and it contributes zero to the
+    ``reads_tokens`` budget axis.  This is what makes continuous batching
+    honest: finished or idle lanes neither mutate state nor inflate meters.
+    """
     x = (embed_override if embed_override is not None
          else embed_tokens(params, token, arch))
 
@@ -418,5 +492,25 @@ def decode_step(
             outs.append(y)
         (x, live, reads) = carry
         new_state = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *outs)
+    if active is not None:
+        new_state = lane_select(active, new_state, state)
+        reads = reads * active.astype(reads.dtype)
     logits = lm_logits(params, x, arch)[:, 0]
     return logits, new_state, {"live_tokens": live, "reads_tokens": reads}
+
+
+def lane_select(mask: jnp.ndarray, on_true: Any, on_false: Any) -> Any:
+    """Per-lane select over two decode-state pytrees.
+
+    Every array leaf of a decode state carries the batch (lane) axis at
+    position 1 — leaves are stacked over superblocks first (see
+    :func:`init_decode_state`) — so a (B,) bool mask broadcasts as
+    (1, B, 1, ...).  Used for: freezing inactive lanes' state, reclaiming
+    finished lanes back to a pristine arena, and scheduler lane admission.
+    """
+
+    def sel(a, b):
+        m = mask.reshape((1, -1) + (1,) * (a.ndim - 2))
+        return jnp.where(m, a, b)
+
+    return jax.tree_util.tree_map(sel, on_true, on_false)

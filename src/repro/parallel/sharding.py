@@ -161,8 +161,9 @@ def cache_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh,
     """Sharding for one decode-state leaf (stacked over superblocks: dim 0).
 
     Layouts: k/v (L,B,H,P,Dh); slot metadata (L,B,H,P); rings (L,B,H,w);
-    scalars (L,); ssd state (L,B,H,Dh,N); conv buffers (L,B,K-1,C);
-    rglru h (L,B,W).
+    per-lane lengths (L,B) — batch-sharded via the fallback (lanes advance
+    independently under continuous batching); ssd state (L,B,H,Dh,N);
+    conv buffers (L,B,K-1,C); rglru h (L,B,W).
     """
     tp = mesh.shape["model"]
     ba = batch_axes(mesh)

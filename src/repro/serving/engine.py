@@ -1,11 +1,18 @@
-"""Serving engine: prefill/decode split, DMS-compressed paged KV, continuous
-batching, and exact budget metering for inference-time hyper-scaling.
+"""Serving engine: scheduler-driven continuous batching, DMS-compressed
+paged KV, shared-prefill hyperscale fork, and exact budget metering.
 
 The engine is the production face of the paper: a request asks for W parallel
 chains of up to L tokens at compression CR; the engine provisions slot arenas
 of ``P ≈ L/CR + w`` per kv head (the physical memory saving), decodes with
 the compressed cache, and reports the two paper budget metrics (KV reads,
 peak tokens) measured from the real cache state.
+
+Generation runs on the :class:`~repro.serving.scheduler.Scheduler` lane
+arena: prompts prefill in T-chunks through the decode path (exact eviction
+semantics), hyperscale requests prefill **once** and fork the cache into W
+chains (:meth:`KVPolicy.fork_cache`), EOS exits early and reclaims the lane,
+and every request gets its own honest prefill/decode meters — a finished
+chain contributes zero KV reads.
 """
 from __future__ import annotations
 
@@ -21,6 +28,8 @@ from repro.core import policy as policy_lib
 from repro.core.config import ArchConfig, KVPolicyConfig
 from repro.core.hyperscale import BudgetMeter, ScalingConfig, majority_vote
 from repro.models import transformer as tfm
+from repro.serving.scheduler import (Request, RequestResult, Scheduler,
+                                     make_chunk_fn)
 
 
 @dataclass
@@ -28,6 +37,7 @@ class GenerationResult:
     tokens: np.ndarray            # (W, L_gen)
     meter: BudgetMeter
     answers: List[int] = field(default_factory=list)
+    requests: List[RequestResult] = field(default_factory=list)
 
 
 class Engine:
@@ -35,29 +45,32 @@ class Engine:
     mesh (see launch/serve.py)."""
 
     def __init__(self, arch: ArchConfig, params, policy: KVPolicyConfig,
-                 use_kernel: bool = False, temperature: float = 0.0):
+                 use_kernel: bool = False, temperature: float = 0.0,
+                 chunk: int = 8):
         self.arch = arch
         self.params = params
         self.policy = policy
         self.use_kernel = use_kernel
         self.temperature = temperature
-        self._decode_jit = jax.jit(self._decode_step)
+        self.chunk = chunk
+        # jitted once per Engine: the compile cache survives across Scheduler
+        # instances (per-request scheduling never retraces)
+        self._chunk_jit = jax.jit(make_chunk_fn(
+            arch, use_kernel=use_kernel, temperature=temperature))
+        self._gather_jit = jax.jit(tfm.gather_lanes)
+        self._reset_jit = jax.jit(self._reset_fn, static_argnames=("b", "ml"))
         self._prefill_jit = jax.jit(self._prefill, static_argnames=("t",))
+
+    def _reset_fn(self, state, mask, b, ml):
+        fresh = tfm.init_decode_state(self.arch, b, ml, self.policy)
+        return tfm.reclaim_lanes(state, mask, fresh)
 
     # -- jitted internals ------------------------------------------------
 
-    def _decode_step(self, params, token, state, pos, rng):
-        logits, state, aux = tfm.decode_step(
-            params, token, state, self.arch, pos, use_kernel=self.use_kernel)
-        if self.temperature > 0.0:
-            nxt = jax.random.categorical(rng, logits / self.temperature, axis=-1)
-        else:
-            nxt = jnp.argmax(logits, axis=-1)
-        return nxt[:, None].astype(jnp.int32), state, aux
-
     def _prefill(self, params, tokens, state, t):
-        # teacher-forced prefill through the decode path: exact cache-policy
-        # semantics (incl. TOVA/H2O eviction during prompt processing)
+        # reference per-token prefill through the decode path (exact cache-
+        # policy semantics); production serving uses the scheduler's chunked
+        # prefill — tests pin the two equivalent per policy
         def body(carry, tok_t):
             state, i = carry
             _, state, _ = tfm.decode_step(
@@ -69,57 +82,92 @@ class Engine:
             body, (state, jnp.zeros((), jnp.int32)), tokens.T)
         return state
 
+    def scheduler(self, num_lanes: int, max_len: int, *, seed: int = 0,
+                  chunk: Optional[int] = None) -> Scheduler:
+        """A lane arena bound to this engine's jitted step functions."""
+        return Scheduler(
+            self.arch, self.params, self.policy,
+            num_lanes=num_lanes, max_len=max_len,
+            chunk=chunk or self.chunk, chunk_jit=self._chunk_jit,
+            reset_jit=self._reset_jit, gather_jit=self._gather_jit,
+            use_kernel=self.use_kernel, temperature=self.temperature,
+            seed=seed)
+
     # -- public API -------------------------------------------------------
 
-    def generate(self, prompts: np.ndarray, max_new: int,
-                 seed: int = 0) -> GenerationResult:
-        """prompts: (B, T0) int32.  Continuous batch of B chains."""
+    def generate(self, prompts: np.ndarray, max_new: int, seed: int = 0,
+                 eos_id: Optional[int] = None) -> GenerationResult:
+        """prompts: (B, T0) int32 — B requests served concurrently, one lane
+        each.  With ``eos_id`` set, chains exit early: no further KV reads
+        are metered for a finished lane and its arena is reclaimed; output
+        rows are padded with ``eos_id`` past each chain's end."""
         b, t0 = prompts.shape
-        max_len = t0 + max_new
-        state = tfm.init_decode_state(self.arch, b, max_len, self.policy)
-        state = self._prefill_jit(self.params, jnp.asarray(prompts), state, t=t0)
-        tok = jnp.asarray(prompts[:, -1:])
+        sched = self.scheduler(b, t0 + max_new, seed=seed)
+        for i in range(b):
+            sched.submit(Request(uid=i, prompt=np.asarray(prompts[i]),
+                                 max_new=max_new, eos_id=eos_id))
+        results = {r.uid: r for r in sched.run()}
+        pad = eos_id if eos_id is not None else 0
+        tokens = np.stack([
+            _pad_chain(results[i].tokens[0], results[i].lengths[0],
+                       max_new, pad)
+            for i in range(b)])
         meter = BudgetMeter()
-        # physical arena bytes are static per policy/state — from metrics(),
-        # not engine guesses
-        meter.observe_peak_bytes(policy_lib.state_peak_bytes(state))
-        outs = []
-        rng = jax.random.PRNGKey(seed)
-        for i in range(max_new):
-            rng, sub = jax.random.split(rng)
-            tok, state, aux = self._decode_jit(
-                self.params, tok, state, jnp.asarray(t0 + i, jnp.int32), sub)
-            outs.append(np.asarray(tok[:, 0]))
-            live = np.asarray(aux["live_tokens"])       # (B,) summed over layers
-            reads = np.asarray(aux["reads_tokens"])     # KV-reads axis (≠ live
-            meter.observe_step([float(live.sum())],     # for e.g. Quest)
-                               new_tokens=b,
-                               reads_tokens_per_layer=[float(reads.sum())])
-        return GenerationResult(tokens=np.stack(outs, 1), meter=meter)
+        for i in range(b):            # concurrent requests: co-resident lanes
+            meter = meter.merge(results[i].meter)
+        return GenerationResult(tokens=tokens, meter=meter,
+                                requests=[results[i] for i in range(b)])
 
     def hyperscale_generate(self, prompt: np.ndarray, cfg: ScalingConfig,
                             seed: int = 0) -> GenerationResult:
-        """One problem, W parallel chains (paper L-W-CR scaling)."""
-        prompts = np.tile(prompt[None], (cfg.width, 1))
-        max_new = cfg.max_len - prompt.shape[0]
-        return self.generate(prompts, max_new, seed=seed)
+        """One problem, W parallel chains (paper L-W-CR scaling).
+
+        The prompt prefills ONCE; the cache then forks into W chains
+        (shared-prefill fork) — prefill-phase KV reads are W× lower than
+        re-prefilling per chain, and step-0 logits are bitwise identical."""
+        max_new = cfg.max_len - int(prompt.shape[0])
+        sched = self.scheduler(cfg.width, cfg.max_len, seed=seed)
+        sched.submit(Request(uid=0, prompt=np.asarray(prompt),
+                             max_new=max_new, width=cfg.width,
+                             eos_id=cfg.eos_id))
+        res = sched.run()[0]
+        return GenerationResult(tokens=res.tokens, meter=res.meter,
+                                requests=[res])
+
+
+def _pad_chain(chain: np.ndarray, length: int, max_new: int, pad: int
+               ) -> np.ndarray:
+    out = np.full((max_new,), pad, np.int32)
+    out[:length] = chain[:length]
+    return out
 
 
 def answer_from_chain(chain: np.ndarray, eq_token: int = 1) -> Optional[int]:
-    """First generated token is the answer in our synthetic tasks."""
-    return int(chain[0]) if len(chain) else None
+    """Extract the answer token from a generated chain.
+
+    Our synthetic tasks answer right after the last ``eq_token`` ("=") the
+    model emits; chains that never emit one answer with their first token
+    (prompts end in "=", so token 0 is the direct answer)."""
+    chain = np.asarray(chain)
+    if len(chain) == 0:
+        return None
+    eq_pos = np.where(chain[:-1] == eq_token)[0]
+    if len(eq_pos):
+        return int(chain[eq_pos[-1] + 1])
+    return int(chain[0])
 
 
 def evaluate_hyperscale(
     engine: Engine, prompts: np.ndarray, answers: np.ndarray,
-    cfg: ScalingConfig, seed: int = 0,
+    cfg: ScalingConfig, seed: int = 0, eq_token: int = 1,
 ) -> Dict[str, float]:
     """Accuracy + budget over an eval set for one L-W-CR point."""
     meter = BudgetMeter()
     hits = 0
     for i in range(len(prompts)):
         res = engine.hyperscale_generate(prompts[i], cfg, seed=seed + i)
-        votes = [answer_from_chain(res.tokens[w]) for w in range(cfg.width)]
+        votes = [answer_from_chain(res.tokens[w], eq_token=eq_token)
+                 for w in range(cfg.width)]
         pred = majority_vote([str(v) for v in votes if v is not None])
         hits += int(pred is not None and int(pred) == int(answers[i]))
         meter = meter.merge(res.meter)

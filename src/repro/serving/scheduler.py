@@ -1,0 +1,409 @@
+"""Continuous-batching scheduler: the serving engine's admission / prefill /
+fork / decode / reclaim lifecycle over a fixed arena of batch *lanes*.
+
+The paper's hyper-scaling claim is a serving-time claim — more chains per
+fixed KV budget — so the engine must actually serve: requests arrive over
+time with different prompt lengths and stop at different steps.  This module
+replaces the lockstep fixed batch with a real scheduler:
+
+* **Lanes.**  The decode state is provisioned once for ``num_lanes`` batch
+  rows.  Lanes are independent: each sits at its own sequence position
+  (per-lane ``length`` in every cache, per-lane ``pos_t`` through RoPE and
+  window masking) and is switched on/off per step by the ``active`` mask of
+  :func:`repro.models.transformer.decode_step`.
+* **Chunked prefill.**  Prompts are teacher-forced through the *decode* path
+  in fixed-size T-chunks (one ``lax.scan`` compiled per chunk size, not one
+  trace per prompt length), preserving exact per-policy eviction semantics —
+  TOVA/H2O/DMS evict mid-prompt exactly as a per-token loop would.  Decoding
+  lanes keep decoding inside the same chunk: prefill and decode interleave in
+  one jitted step, which is what makes the batching *continuous*.
+* **Shared-prefill fork.**  A width-W (hyper-scaling) request prefills its
+  prompt in ONE lane; the finished cache is then forked into W chains via
+  :meth:`KVPolicy.fork_cache` (`gather_lanes` inside the fixed batch).
+  Forked chains carry bitwise-identical state, so step-0 logits match W
+  independent prefills at 1/W of the prefill-phase KV reads.
+* **EOS reclamation.**  A chain that emits EOS (or hits its token budget)
+  goes inactive immediately — zero further KV reads — and its lane's arena
+  is reclaimed (:meth:`KVPolicy.reclaim_cache`) for the next queued request.
+* **Honest per-request metering.**  Each request owns two
+  :class:`BudgetMeter`\\ s (prefill phase / decode phase) fed only by its own
+  lanes' per-step ``live_tokens`` / ``reads_tokens``.  Finished lanes
+  contribute zero reads; idle lanes are never attributed to anyone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy as policy_lib
+from repro.core.hyperscale import BudgetMeter
+from repro.models import transformer as tfm
+
+
+@dataclass
+class Request:
+    """One serving request: a prompt and a generation budget.
+
+    ``width`` > 1 asks for W parallel hyper-scaling chains sharing one
+    prefill.  ``eos_id`` enables early exit (None = decode the full budget).
+    ``arrival`` delays admission until that scheduler tick (staggered-arrival
+    simulation for benchmarks/tests)."""
+
+    uid: int
+    prompt: np.ndarray            # (T0,) int32
+    max_new: int
+    width: int = 1
+    eos_id: Optional[int] = None
+    arrival: int = 0
+
+
+@dataclass
+class RequestResult:
+    uid: int
+    tokens: np.ndarray            # (W, max_new) int32, padded after EOS
+    lengths: np.ndarray           # (W,) generated tokens per chain (incl. EOS)
+    meter: BudgetMeter            # prefill + decode, sequential merge
+    prefill_meter: BudgetMeter
+    decode_meter: BudgetMeter
+    admitted_tick: int = 0
+    finished_tick: int = 0
+
+
+class _ReqState:
+    def __init__(self, req: Request, pad_id: int):
+        self.req = req
+        self.lanes: List[int] = []             # lane -> chain index by order
+        self.consumed = 0                      # prompt tokens prefetched
+        self.hold_logits: Optional[np.ndarray] = None
+        self.chains: List[List[int]] = [[] for _ in range(req.width)]
+        self.chain_done = [False] * req.width
+        self.prefill_meter = BudgetMeter()
+        self.decode_meter = BudgetMeter()
+        self.pad_id = pad_id
+        self.admitted_tick = 0
+
+    @property
+    def done(self) -> bool:
+        return bool(self.lanes) and all(self.chain_done)
+
+    def result(self, peak_bytes: float, finished_tick: int) -> RequestResult:
+        w, m = self.req.width, self.req.max_new
+        toks = np.full((w, m), self.pad_id, np.int32)
+        lens = np.zeros((w,), np.int32)
+        for c, chain in enumerate(self.chains):
+            lens[c] = len(chain)
+            toks[c, :len(chain)] = chain
+        for meter in (self.prefill_meter, self.decode_meter):
+            meter.observe_peak_bytes(peak_bytes)
+        return RequestResult(
+            uid=self.req.uid, tokens=toks, lengths=lens,
+            meter=self.prefill_meter.merge_sequential(self.decode_meter),
+            prefill_meter=self.prefill_meter, decode_meter=self.decode_meter,
+            admitted_tick=self.admitted_tick, finished_tick=finished_tick)
+
+
+def make_chunk_fn(arch, *, use_kernel: bool = False,
+                  temperature: float = 0.0) -> Callable:
+    """Build the jittable mixed prefill/decode chunk step.
+
+    One call advances every active lane ``chunk`` steps: prefill lanes
+    teacher-force their next prompt tokens (``feed`` / ``feed_valid``),
+    decode lanes sample autoregressively, finished/idle lanes are frozen by
+    the ``active`` mask.  Compiled once per (num_lanes, chunk) — admission,
+    prompt length, and EOS timing never retrace."""
+
+    def chunk_fn(params, state, feed, feed_valid, cur_tok, pos, decoding,
+                 finished, lane_eos, budget_left, rng):
+        # feed/feed_valid: (B, C); every other lane array: (B,)
+        def body(carry, xs):
+            state, cur_tok, pos, finished, emit_cnt, rng, last_logits = carry
+            tok_feed, fv = xs
+            prefill_now = fv & ~decoding & ~finished
+            decode_now = decoding & ~finished & (emit_cnt < budget_left)
+            active = prefill_now | decode_now
+            token = jnp.where(prefill_now, tok_feed, cur_tok)[:, None]
+            rng, sub = jax.random.split(rng)
+            logits, state, aux = tfm.decode_step(
+                params, token, state, arch, pos,
+                use_kernel=use_kernel, active=active)
+            if temperature > 0.0:
+                nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            nxt = nxt.astype(jnp.int32)
+            emitted = jnp.where(decode_now, nxt, -1)
+            cur_tok = jnp.where(decode_now, nxt, cur_tok)
+            finished = finished | (decode_now & (lane_eos >= 0)
+                                   & (nxt == lane_eos))
+            emit_cnt = emit_cnt + decode_now.astype(jnp.int32)
+            pos = pos + active.astype(jnp.int32)
+            last_logits = jnp.where(active[:, None], logits, last_logits)
+            return ((state, cur_tok, pos, finished, emit_cnt, rng, last_logits),
+                    (emitted, aux["live_tokens"], aux["reads_tokens"], active))
+
+        b = feed.shape[0]
+        carry0 = (state, cur_tok, pos, finished, jnp.zeros((b,), jnp.int32),
+                  rng, jnp.zeros((b, arch.padded_vocab), jnp.float32))
+        carry, ys = jax.lax.scan(body, carry0, (feed.T, feed_valid.T))
+        state, cur_tok, pos, finished, emit_cnt, rng, last_logits = carry
+        emitted, live, reads, act = ys                 # each (C, B)
+        return (state, cur_tok, pos, finished, emit_cnt, rng, last_logits,
+                emitted, live, reads, act)
+
+    return chunk_fn
+
+
+class Scheduler:
+    """Drives one lane arena to completion over a queue of requests.
+
+    The jitted step/reset/gather functions are owned by the caller (the
+    :class:`~repro.serving.engine.Engine`) so their compile caches persist
+    across Scheduler instances — per-request scheduling never retraces."""
+
+    def __init__(self, arch, params, policy, *, num_lanes: int, max_len: int,
+                 chunk: int = 8, chunk_jit=None, reset_jit=None,
+                 gather_jit=None, use_kernel: bool = False,
+                 temperature: float = 0.0, seed: int = 0, pad_id: int = 0):
+        self.arch, self.params, self.policy = arch, params, policy
+        self.num_lanes, self.max_len, self.chunk = num_lanes, max_len, chunk
+        self.pad_id = pad_id
+        self._chunk_jit = chunk_jit or jax.jit(make_chunk_fn(
+            arch, use_kernel=use_kernel, temperature=temperature))
+        self._reset_jit = reset_jit or jax.jit(self._reset_fn,
+                                               static_argnames=("b", "ml"))
+        self._gather_jit = gather_jit or jax.jit(tfm.gather_lanes)
+        self.temperature = temperature
+
+        self.state = tfm.init_decode_state(arch, num_lanes, max_len, policy)
+        self.peak_bytes = float(policy_lib.state_peak_bytes(self.state))
+        self.rng = jax.random.PRNGKey(seed)
+        self._host_rng = jax.random.PRNGKey(seed ^ 0x5EED0)
+
+        b = num_lanes
+        self.pos = np.zeros((b,), np.int32)
+        self.cur_tok = np.zeros((b,), np.int32)
+        self.decoding = np.zeros((b,), bool)
+        self.finished = np.zeros((b,), bool)
+        self.lane_eos = np.full((b,), -1, np.int32)
+        self.owner: List[Optional[_ReqState]] = [None] * b
+        self.chain_of = np.zeros((b,), np.int32)
+        self.queue: List[_ReqState] = []
+        self.active_reqs: List[_ReqState] = []
+        self.ticks = 0
+        self.steps = 0
+
+    def _reset_fn(self, state, mask, b, ml):
+        fresh = tfm.init_decode_state(self.arch, b, ml, self.policy)
+        return tfm.reclaim_lanes(state, mask, fresh)
+
+    # -- public ------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.width > self.num_lanes:
+            raise ValueError(
+                f"request width {req.width} > num_lanes {self.num_lanes}")
+        if len(req.prompt) == 0:
+            raise ValueError("empty prompt: nothing to sample from")
+        if len(req.prompt) + req.max_new > self.max_len:
+            raise ValueError("prompt + max_new exceeds scheduler max_len")
+        self.queue.append(_ReqState(req, self.pad_id))
+
+    def run(self) -> List[RequestResult]:
+        """Run the queue to completion; results in completion order."""
+        results: List[RequestResult] = []
+        while self.queue or self.active_reqs:
+            # fork before admitting: freed lanes must reach held hyperscale
+            # requests before new admissions can take them
+            self._fork_ready()
+            self._admit()
+            self._fork_ready()
+            if not any(o is not None for o in self.owner):
+                # nothing admitted yet (future arrivals only): advance time
+                self.ticks += 1
+                continue
+            self._tick(results)
+        return results
+
+    # -- lifecycle stages --------------------------------------------------
+
+    def _idle_lanes(self) -> List[int]:
+        return [l for l in range(self.num_lanes) if self.owner[l] is None]
+
+    def _admit(self) -> None:
+        """Admit queued requests into idle lanes — FIFO with skip-scan.
+
+        A width-W request occupies one prefill lane now and W-1 fork lanes
+        later; those W-1 are *reserved* at admission (``sum(width)`` over
+        admitted requests never exceeds ``num_lanes``), which makes the fork
+        wait in :meth:`_fork_ready` deadlock- and starvation-free: held
+        requests' lanes can never be re-admitted out from under them."""
+        # idle lanes are always pristine (fresh at construction; _tick
+        # reclaims every lane of a completing request, fork targets included;
+        # chunk steps never mutate inactive lanes) — no reset needed here
+        idle = self._idle_lanes()
+        while idle:
+            reserved = sum(r.req.width - len(r.lanes)
+                           for r in self.active_reqs)
+            nxt = next((r for r in self.queue
+                        if r.req.arrival <= self.ticks
+                        and r.req.width <= len(idle) - reserved), None)
+            if nxt is None:
+                break
+            self.queue.remove(nxt)
+            lane = idle.pop(0)
+            self.owner[lane] = nxt
+            self.chain_of[lane] = 0
+            nxt.lanes = [lane]
+            nxt.admitted_tick = self.ticks
+            self.active_reqs.append(nxt)
+            self.pos[lane] = 0
+            self.decoding[lane] = False
+            self.finished[lane] = False
+            self.lane_eos[lane] = -1 if nxt.req.eos_id is None else nxt.req.eos_id
+
+    def _fork_ready(self) -> None:
+        """hold → decode: fork prefilled lanes into W chains, sample token 0."""
+        for r in list(self.active_reqs):
+            if r.hold_logits is None or len(r.lanes) == r.req.width:
+                continue
+            need = r.req.width - 1
+            idle = self._idle_lanes()
+            if len(idle) < need:
+                continue                      # wait for lanes to free up
+            src = np.arange(self.num_lanes, dtype=np.int32)
+            for lane in idle[:need]:
+                src[lane] = r.lanes[0]
+                self.owner[lane] = r
+                self.chain_of[lane] = len(r.lanes)
+                r.lanes.append(lane)
+            self.state = self._gather_jit(self.state, jnp.asarray(src))
+            self.pos[r.lanes] = self.pos[r.lanes[0]]
+            self.lane_eos[r.lanes] = self.lane_eos[r.lanes[0]]
+            self._start_decode(r)
+        for r in list(self.active_reqs):      # width-1 fast path
+            if r.hold_logits is not None and len(r.lanes) == r.req.width \
+                    and not self.decoding[r.lanes].any():
+                self._start_decode(r)
+
+    def _start_decode(self, r: _ReqState) -> None:
+        """Sample each chain's first token from the shared prefill logits."""
+        w = len(r.lanes)
+        logits = jnp.asarray(r.hold_logits)[None].repeat(w, axis=0)
+        if self.temperature > 0.0:
+            self._host_rng, sub = jax.random.split(self._host_rng)
+            first = jax.random.categorical(sub, logits / self.temperature,
+                                           axis=-1)
+        else:
+            first = jnp.argmax(logits, axis=-1)
+        first = np.asarray(first, np.int32)
+        r.decode_meter.observe_step([0.0], new_tokens=w,
+                                    reads_tokens_per_layer=[0.0])
+        for c, lane in enumerate(r.lanes):
+            tok = int(first[c])
+            r.chains[c].append(tok)
+            self.cur_tok[lane] = tok
+            self.decoding[lane] = True
+            if (r.req.eos_id is not None and tok == r.req.eos_id) \
+                    or len(r.chains[c]) >= r.req.max_new:
+                self.finished[lane] = True
+        r.hold_logits = None
+
+    def _tick(self, results: List[RequestResult]) -> None:
+        b, c = self.num_lanes, self.chunk
+        feed = np.zeros((b, c), np.int32)
+        feed_valid = np.zeros((b, c), bool)
+        budget_left = np.zeros((b,), np.int32)
+        prefill_take: Dict[int, int] = {}
+        for lane in range(b):
+            r = self.owner[lane]
+            if r is None:
+                continue
+            if self.decoding[lane]:
+                budget_left[lane] = r.req.max_new - len(
+                    r.chains[self.chain_of[lane]])
+            elif r.hold_logits is None and lane == r.lanes[0]:
+                take = min(c, len(r.req.prompt) - r.consumed)
+                if take > 0:
+                    feed[lane, :take] = r.req.prompt[r.consumed:r.consumed + take]
+                    feed_valid[lane, :take] = True
+                    prefill_take[lane] = take
+
+        out = self._chunk_jit(
+            self.params, self.state, jnp.asarray(feed), jnp.asarray(feed_valid),
+            jnp.asarray(self.cur_tok), jnp.asarray(self.pos),
+            jnp.asarray(self.decoding), jnp.asarray(self.finished),
+            jnp.asarray(self.lane_eos), jnp.asarray(budget_left), self.rng)
+        (self.state, cur_tok, pos, finished, _, self.rng, last_logits,
+         emitted, live, reads, act) = out
+        self.cur_tok = np.array(cur_tok)       # writable host copies
+        self.pos = np.array(pos)
+        self.finished = np.array(finished)
+        emitted = np.asarray(emitted)          # (C, B)
+        live = np.asarray(live)
+        reads = np.asarray(reads)
+        act = np.asarray(act)
+        self.ticks += 1
+        self.steps += c
+
+        # per-request, per-step metering from this request's own lanes only
+        for r in self.active_reqs:
+            lanes = r.lanes
+            meter = (r.decode_meter if self.decoding[lanes[0]]
+                     else r.prefill_meter)
+            for t in range(c):
+                if not act[t, lanes].any():
+                    continue
+                meter.observe_step(
+                    [float(live[t, lanes].sum())],
+                    new_tokens=int((emitted[t, lanes] >= 0).sum()),
+                    reads_tokens_per_layer=[float(reads[t, lanes].sum())])
+
+        # prefill completion -> hold (host samples token 0 next tick)
+        ll = None
+        for lane, take in prefill_take.items():
+            r = self.owner[lane]
+            r.consumed += take
+            if r.consumed == len(r.req.prompt):
+                if ll is None:
+                    ll = np.asarray(last_logits)
+                r.hold_logits = ll[lane].copy()
+
+        # collect emitted tokens; EOS / budget exhaustion finishes chains
+        for lane in range(b):
+            r = self.owner[lane]
+            if r is None or not self.decoding[lane]:
+                continue
+            chain = r.chains[self.chain_of[lane]]
+            for t in range(c):
+                tok = emitted[t, lane]
+                if tok >= 0:
+                    chain.append(int(tok))
+            if self.finished[lane] or len(chain) >= r.req.max_new:
+                r.chain_done[self.chain_of[lane]] = True
+                self.finished[lane] = True
+
+        # reclaim lanes of completed requests
+        done = [r for r in self.active_reqs if r.done]
+        if done:
+            reclaim = np.zeros((b,), bool)
+            for r in done:
+                self.active_reqs.remove(r)
+                results.append(r.result(
+                    self.peak_bytes * len(r.lanes) / self.num_lanes,
+                    self.ticks))
+                for lane in r.lanes:
+                    self.owner[lane] = None
+                    reclaim[lane] = True
+                    self.decoding[lane] = False
+                    self.finished[lane] = False
+                    self.pos[lane] = 0
+            self._reset(reclaim)
+
+    def _reset(self, mask: np.ndarray) -> None:
+        self.state = self._reset_jit(self.state, jnp.asarray(mask),
+                                     b=self.num_lanes, ml=self.max_len)

@@ -1,0 +1,259 @@
+"""Continuous-batching scheduler: admission, chunked prefill, shared-prefill
+fork, EOS reclamation, and honest per-request budget metering.
+
+Acceptance criteria pinned here:
+* W=4 hyperscale: forked shared prefill produces bitwise-identical first
+  decode logits to W independent prefills, at ~4× lower prefill-phase reads.
+* An EOS-at-step-k chain contributes zero KV reads after step k (the
+  early-stopping batch regression).
+* Staggered arrivals with mixed prompt lengths all complete, with
+  per-request meters; lane reclaim is exact (a lane reused after EOS serves
+  the next request identically to a fresh arena).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.config import KVPolicyConfig
+from repro.core.hyperscale import ScalingConfig
+from repro.core.policy import available_policies
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine, answer_from_chain
+from repro.serving.scheduler import Request
+
+
+@pytest.fixture(scope="module")
+def tiny_arch():
+    arch = get_smoke("qwen-r1-1.5b")
+    return dataclasses.replace(
+        arch, dms=dataclasses.replace(arch.dms, window=4, target_cr=4.0))
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_arch):
+    return tfm.init_model(jax.random.PRNGKey(0), tiny_arch)
+
+
+def _prompt(n, seed=0, vocab=512):
+    return np.random.default_rng(seed).integers(3, vocab, size=(n,)).astype(np.int32)
+
+
+def _run_until_hold(sched):
+    """Drive a scheduler just past prefill: every admitted request holds its
+    last prefill logits, no decode step has run yet."""
+    sched._admit()
+    results = []
+    while any(r.hold_logits is None for r in sched.active_reqs):
+        sched._tick(results)
+    assert not results
+    return {r.req.uid: np.array(r.hold_logits) for r in sched.active_reqs}
+
+
+# -- shared-prefill fork ---------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", sorted(available_policies()))
+def test_fork_step0_logits_bitwise_match_tiled_prefill(tiny_arch, tiny_params,
+                                                       kind):
+    """Acceptance: for every registry policy, the shared prefill's step-0
+    logits equal W independent (tiled) prefills bitwise — forked chains start
+    from exactly the state W re-prefills would have built."""
+    w, t0 = 4, 16
+    prompt = _prompt(t0, seed=1, vocab=tiny_arch.vocab_size)
+    eng = Engine(tiny_arch, tiny_params,
+                 KVPolicyConfig(kind=kind, cr=2.0, budget=12,
+                                window=tiny_arch.dms.window))
+
+    shared = eng.scheduler(num_lanes=w, max_len=t0 + 8)
+    shared.submit(Request(uid=0, prompt=prompt, max_new=8, width=w))
+    fork_logits = _run_until_hold(shared)[0]
+
+    tiled = eng.scheduler(num_lanes=w, max_len=t0 + 8)
+    for i in range(w):
+        tiled.submit(Request(uid=i, prompt=prompt, max_new=8))
+    tiled_logits = _run_until_hold(tiled)
+
+    for i in range(w):
+        np.testing.assert_array_equal(fork_logits, tiled_logits[i]), kind
+
+
+def test_fork_prefill_reads_drop_by_width(tiny_arch, tiny_params):
+    """Acceptance: shared prefill meters ~W× fewer prefill-phase KV reads
+    than W independent prefills of the same prompt."""
+    w, t0 = 4, 16
+    prompt = _prompt(t0, seed=2, vocab=tiny_arch.vocab_size)
+    eng = Engine(tiny_arch, tiny_params, KVPolicyConfig(kind="dms", cr=2.0))
+
+    res_fork = eng.hyperscale_generate(prompt, ScalingConfig(t0 + 6, w))
+    res_tile = eng.generate(np.tile(prompt[None], (w, 1)), 6)
+    fork_pre = res_fork.requests[0].prefill_meter.kv_reads
+    tile_pre = sum(r.prefill_meter.kv_reads for r in res_tile.requests)
+    assert fork_pre == pytest.approx(tile_pre / w)
+    # and the generated chains are identical (greedy): the fork is exact
+    np.testing.assert_array_equal(res_fork.tokens, res_tile.tokens)
+
+
+def test_hyperscale_generate_uses_width_lanes(tiny_arch, tiny_params):
+    eng = Engine(tiny_arch, tiny_params, KVPolicyConfig(kind="vanilla"))
+    prompt = _prompt(10, seed=3, vocab=tiny_arch.vocab_size)
+    res = eng.hyperscale_generate(prompt, ScalingConfig(16, 4))
+    assert res.tokens.shape == (4, 6)
+    assert res.meter.generated_tokens == 24
+
+
+@pytest.mark.parametrize("kind", sorted(available_policies()))
+def test_fork_decode_state_equals_tiled_prefill_state(tiny_arch, tiny_params,
+                                                      kind):
+    """The standalone KVPolicy.fork_cache hook: prefill at B=1, fork the
+    whole decode state to W — every leaf must equal the state W tiled
+    prefills build (same contract the scheduler's lane gather relies on)."""
+    w, t0 = 3, 10
+    prompt = _prompt(t0, seed=8, vocab=tiny_arch.vocab_size)
+    cfg = KVPolicyConfig(kind=kind, cr=2.0, budget=12,
+                         window=tiny_arch.dms.window, quest_page_size=4)
+    eng = Engine(tiny_arch, tiny_params, cfg)
+
+    one = tfm.init_decode_state(tiny_arch, 1, t0 + 4, cfg)
+    one = eng._prefill_jit(eng.params, jnp.asarray(prompt[None]), one, t=t0)
+    forked = tfm.fork_decode_state(one, w)
+
+    tiled = tfm.init_decode_state(tiny_arch, w, t0 + 4, cfg)
+    tiled = eng._prefill_jit(eng.params,
+                             jnp.asarray(np.tile(prompt[None], (w, 1))),
+                             tiled, t=t0)
+
+    f_l, f_tree = jax.tree_util.tree_flatten(forked)
+    t_l, t_tree = jax.tree_util.tree_flatten(tiled)
+    assert f_tree == t_tree
+    for a, b in zip(f_l, t_l):
+        assert a.shape == b.shape, kind
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=kind)
+
+
+def test_concurrent_hyperscale_requests_do_not_deadlock(tiny_arch,
+                                                        tiny_params):
+    """Regression: greedy admission gave every width-W request one lane and
+    left none for their forks — all held forever.  Admission must reserve
+    fork capacity (sum of admitted widths <= num_lanes)."""
+    eng = Engine(tiny_arch, tiny_params, KVPolicyConfig(kind="vanilla"))
+    sched = eng.scheduler(num_lanes=4, max_len=20)
+    for i in range(3):
+        sched.submit(Request(uid=i,
+                             prompt=_prompt(8, seed=20 + i,
+                                            vocab=tiny_arch.vocab_size),
+                             max_new=5, width=2))
+    results = sched.run()
+    assert sorted(r.uid for r in results) == [0, 1, 2]
+    assert all(r.tokens.shape == (2, 5) for r in results)
+
+
+def test_empty_prompt_is_rejected(tiny_arch, tiny_params):
+    """Regression: a zero-length prompt never reached the hold transition
+    and hung run() forever — reject it at submit."""
+    eng = Engine(tiny_arch, tiny_params, KVPolicyConfig(kind="vanilla"))
+    sched = eng.scheduler(num_lanes=1, max_len=16)
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit(Request(uid=0, prompt=np.empty((0,), np.int32),
+                             max_new=4))
+
+
+# -- EOS handling ----------------------------------------------------------
+
+
+def test_eos_batch_reads_less_than_nonstopping(tiny_arch, tiny_params):
+    """Regression (the seed bug): finished chains kept decoding the full
+    max_new and inflating the meter.  An early-stopping batch must meter
+    strictly fewer kv_reads than a non-stopping one."""
+    eng = Engine(tiny_arch, tiny_params, KVPolicyConfig(kind="vanilla"))
+    prompts = np.stack([_prompt(12, seed=4, vocab=tiny_arch.vocab_size),
+                        _prompt(12, seed=5, vocab=tiny_arch.vocab_size)])
+    free = eng.generate(prompts, 10)
+    eos = int(free.tokens[0, 2])          # token lane 0 emits at step 2
+    stopped = eng.generate(prompts, 10, eos_id=eos)
+    assert stopped.meter.kv_reads < free.meter.kv_reads
+    r0 = stopped.requests[0]
+    assert int(r0.lengths[0]) < 10        # actually stopped early
+    # zero reads after step k: the stopped request's decode reads are capped
+    # by its generated length, the free request decoded all 10
+    assert r0.decode_meter.generated_tokens == int(r0.lengths[0])
+    assert stopped.requests[0].decode_meter.kv_reads \
+        < free.requests[0].decode_meter.kv_reads
+    # the unfinished lane is unaffected by its neighbour stopping
+    if int(stopped.requests[1].lengths[0]) == 10:
+        np.testing.assert_array_equal(stopped.tokens[1], free.tokens[1])
+
+
+def test_eos_lane_is_reclaimed_for_queued_request(tiny_arch, tiny_params):
+    """More requests than lanes: lanes freed by completion are reused, and a
+    request served on a reclaimed lane generates exactly what it would on a
+    fresh arena (the reclaim hook resets the slot arena completely)."""
+    eng = Engine(tiny_arch, tiny_params, KVPolicyConfig(kind="dms", cr=2.0))
+    prompts = [_prompt(n, seed=10 + n, vocab=tiny_arch.vocab_size)
+               for n in (9, 14, 6, 11)]
+    sched = eng.scheduler(num_lanes=2, max_len=32)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, prompt=p, max_new=5, arrival=i))
+    results = {r.uid: r for r in sched.run()}
+    assert sorted(results) == [0, 1, 2, 3]
+
+    for i, p in enumerate(prompts):
+        solo = eng.scheduler(num_lanes=1, max_len=32)
+        solo.submit(Request(uid=0, prompt=p, max_new=5))
+        np.testing.assert_array_equal(solo.run()[0].tokens,
+                                      results[i].tokens, err_msg=str(i))
+
+
+# -- mixed-arrival scheduling + per-request meters -------------------------
+
+
+def test_staggered_mixed_length_requests_all_complete(tiny_arch, tiny_params):
+    eng = Engine(tiny_arch, tiny_params, KVPolicyConfig(kind="window", cr=2.0))
+    lens = [7, 19, 5, 13, 10]
+    sched = eng.scheduler(num_lanes=3, max_len=40)
+    for i, n in enumerate(lens):
+        sched.submit(Request(
+            uid=i, prompt=_prompt(n, seed=i, vocab=tiny_arch.vocab_size),
+            max_new=6, arrival=2 * i))
+    results = sorted(sched.run(), key=lambda r: r.uid)
+    assert [r.uid for r in results] == list(range(len(lens)))
+    for r in results:
+        assert int(r.lengths[0]) == 6
+        # per-request metering: prefill steps cover this prompt, decode
+        # steps cover this generation — nobody pays for a neighbour
+        assert r.prefill_meter.kv_reads > 0
+        assert r.decode_meter.generated_tokens == 6
+        assert np.isfinite(r.meter.kv_reads)
+    # longer prompts must meter more prefill reads (per-request attribution)
+    by_len = sorted(results, key=lambda r: lens[r.uid])
+    pre = [r.prefill_meter.kv_reads for r in by_len]
+    assert pre == sorted(pre)
+
+
+def test_generate_meter_matches_lockstep_total(tiny_arch, tiny_params):
+    """Without EOS, generate() keeps the lockstep contract: every chain
+    decodes exactly max_new tokens and the merged meter covers all lanes."""
+    eng = Engine(tiny_arch, tiny_params, KVPolicyConfig(kind="vanilla"))
+    prompts = np.stack([_prompt(8, seed=6, vocab=tiny_arch.vocab_size)] * 3)
+    res = eng.generate(prompts, 7)
+    assert res.tokens.shape == (3, 7)
+    assert res.meter.generated_tokens == 21
+    assert res.meter.peak_tokens > 0 and res.meter.peak_bytes > 0
+
+
+# -- answer_from_chain (satellite bugfix) ----------------------------------
+
+
+def test_answer_from_chain_scans_for_eq_token():
+    # answer follows the last "=" the chain emits
+    assert answer_from_chain(np.array([5, 1, 9, 4]), eq_token=1) == 9
+    assert answer_from_chain(np.array([3, 1, 7, 1, 8]), eq_token=1) == 8
+    # no "=" anywhere -> first token (prompt already ended in "=")
+    assert answer_from_chain(np.array([6, 2, 3]), eq_token=1) == 6
+    # trailing "=" has no following token -> falls back to first token
+    assert answer_from_chain(np.array([4, 1]), eq_token=1) == 4
+    assert answer_from_chain(np.array([], dtype=np.int32)) is None
