@@ -13,6 +13,8 @@ Suites (↔ paper artifact):
     cr_sweep          Table 1 (method × CR on needle task)
     pareto            Fig. 3 / Fig. 4 (accuracy vs budget frontiers)
     continuous_batching  serving: scheduler vs lockstep, shared-prefill fork
+    prefix_cache      serving: cross-request radix prefix reuse (shared
+                      system prompt + multi-turn chat traces)
 """
 from __future__ import annotations
 
@@ -31,7 +33,7 @@ def main(argv=None) -> int:
 
     from benchmarks import (ablation_eviction, continuous_batching, cr_profile,
                             cr_sweep, data_efficiency, latency_model, pareto,
-                            roofline_table)
+                            prefix_cache, roofline_table)
     suites = {
         "latency_model": latency_model.run,
         "roofline_table": roofline_table.run,
@@ -41,6 +43,7 @@ def main(argv=None) -> int:
         "cr_sweep": cr_sweep.run,
         "pareto": pareto.run,
         "continuous_batching": continuous_batching.run,
+        "prefix_cache": prefix_cache.run,
     }
     if args.only:
         suites = {k: v for k, v in suites.items() if k == args.only}

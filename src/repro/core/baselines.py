@@ -27,7 +27,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.kv_cache import _tree_dataclass, INVALID_POS
+from repro.core.kv_cache import (LaneSliceable, _tree_dataclass,
+                                 INVALID_POS)
 
 NEG_INF = -1e30
 
@@ -38,7 +39,7 @@ NEG_INF = -1e30
 
 
 @_tree_dataclass
-class TOVACache:
+class TOVACache(LaneSliceable):
     k: jnp.ndarray       # (B, H, P, D)
     v: jnp.ndarray
     pos: jnp.ndarray     # (B, H, P)
@@ -99,7 +100,7 @@ class TOVACache:
 
 
 @_tree_dataclass
-class H2OCache:
+class H2OCache(LaneSliceable):
     k: jnp.ndarray
     v: jnp.ndarray
     pos: jnp.ndarray
@@ -170,7 +171,7 @@ class H2OCache:
 
 
 @_tree_dataclass
-class QuestCache:
+class QuestCache(LaneSliceable):
     """Full cache + per-page min/max key metadata.  Pages are contiguous.
 
     ``page_size`` and ``top_pages`` are static; the *reads* accounting (what
@@ -259,7 +260,7 @@ class QuestCache:
 
 
 @_tree_dataclass
-class DMCCache:
+class DMCCache(LaneSliceable):
     """Dynamic Memory Compression inference cache (Nawrot et al., 2024).
 
     α=1 ⇒ accumulate (k, v) into the most recent entry by weighted average

@@ -55,6 +55,7 @@ class BudgetMeter:
     """
 
     kv_reads: float = 0.0
+    kv_reads_saved: float = 0.0   # prefill reads avoided via prefix-cache hits
     peak_tokens: float = 0.0
     peak_bytes: float = 0.0       # physical arena bytes (static per state)
     steps: int = 0
@@ -77,11 +78,18 @@ class BudgetMeter:
     def observe_peak_bytes(self, nbytes: float):
         self.peak_bytes = max(self.peak_bytes, float(nbytes))
 
+    def observe_saved_reads(self, reads: float):
+        """Record prefill reads a prefix-cache hit avoided.  Kept on a
+        separate axis: ``kv_reads`` stays the honest paid-reads integral, and
+        ``kv_reads + kv_reads_saved`` is what a cold serve would have read."""
+        self.kv_reads_saved += float(reads)
+
     def merge(self, other: "BudgetMeter") -> "BudgetMeter":
         """Concurrent merge: the two meters ran on co-resident lanes (parallel
         chains / simultaneous requests), so peak memory adds."""
         return BudgetMeter(
             kv_reads=self.kv_reads + other.kv_reads,
+            kv_reads_saved=self.kv_reads_saved + other.kv_reads_saved,
             peak_tokens=self.peak_tokens + other.peak_tokens,  # parallel chains co-resident
             peak_bytes=self.peak_bytes + other.peak_bytes,
             steps=max(self.steps, other.steps),
@@ -94,6 +102,7 @@ class BudgetMeter:
         the max over time, not the sum — reads still integrate."""
         return BudgetMeter(
             kv_reads=self.kv_reads + other.kv_reads,
+            kv_reads_saved=self.kv_reads_saved + other.kv_reads_saved,
             peak_tokens=max(self.peak_tokens, other.peak_tokens),
             peak_bytes=max(self.peak_bytes, other.peak_bytes),
             steps=self.steps + other.steps,

@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import ArchConfig, KVPolicyConfig
-from repro.core.kv_cache import INVALID_POS, _tree_dataclass
+from repro.core.kv_cache import (INVALID_POS, LaneSliceable,
+                                 _tree_dataclass)
 from repro.core.policy import AttendSpec, KVPolicy, register_policy
 
 _SCORE_EPS = 1e-9
@@ -31,7 +32,7 @@ _NOISE_SEED = 0x5EED  # fixed: decode must be reproducible per (seed, step)
 
 
 @_tree_dataclass
-class KeyformerCache:
+class KeyformerCache(LaneSliceable):
     k: jnp.ndarray       # (B, H, P, D)
     v: jnp.ndarray
     pos: jnp.ndarray     # (B, H, P) int32

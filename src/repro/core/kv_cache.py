@@ -33,6 +33,37 @@ from repro.core.config import DMSConfig
 INVALID_POS = jnp.iinfo(jnp.int32).max
 
 
+class LaneSliceable:
+    """Per-lane snapshot/restore for lane-leading cache pytrees.
+
+    Every cache in this repo stores *all* of its per-lane state in array
+    leaves whose lane (batch) axis is leading (or at ``axis`` when the cache
+    is stacked over superblocks), so one lane's complete state at a token
+    boundary — arena contents, free lists, pending eviction rings, score
+    accumulators, page metadata — is exactly the width-1 slice of every leaf.
+    That is the invariant the cross-request prefix cache relies on: a slice
+    taken after prefilling L tokens, written back into a pristine lane,
+    continues bitwise-identically to a cold prefill of those L tokens.
+
+    Mixed into every cache class (``kv_cache`` / ``baselines`` /
+    ``keyformer``); a cache with non-lane-leading state must override both
+    methods together (the same override point as ``KVPolicy.fork_cache``).
+    """
+
+    def export_lane(self, lane, *, axis: int = 0):
+        """Width-1 slice of lane ``lane`` (traced int32 ok) of every leaf."""
+        return jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, lane, 1, axis=axis),
+            self)
+
+    def import_lane(self, snap, lane, *, axis: int = 0):
+        """Write a width-1 snapshot back into lane ``lane`` of every leaf."""
+        return jax.tree_util.tree_map(
+            lambda a, s: jax.lax.dynamic_update_slice_in_dim(
+                a, s.astype(a.dtype), lane, axis=axis),
+            self, snap)
+
+
 def _tree_dataclass(cls):
     """Dataclass + pytree registration; fields with metadata {'static': True}
     go into aux_data (hashable, not traced).  Children are keyed by field name
@@ -69,7 +100,7 @@ def _tree_dataclass(cls):
 
 
 @_tree_dataclass
-class VanillaCache:
+class VanillaCache(LaneSliceable):
     k: jnp.ndarray      # (B, Hkv, S, Dh)
     v: jnp.ndarray
     length: jnp.ndarray  # (B,) int32 — tokens written, per lane
@@ -111,7 +142,7 @@ class VanillaCache:
 
 
 @_tree_dataclass
-class MaskedDMSCache:
+class MaskedDMSCache(LaneSliceable):
     k: jnp.ndarray          # (B, Hkv, S, Dh)
     v: jnp.ndarray
     retained: jnp.ndarray   # (B, Hkv, S) bool — False once evicted
@@ -166,7 +197,7 @@ class MaskedDMSCache:
 
 
 @_tree_dataclass
-class SlotDMSCache:
+class SlotDMSCache(LaneSliceable):
     """Physically compacted cache: P slots per (batch, kv head).
 
     Allocation uses a ring free-list; the pending ring holds the last ``w``

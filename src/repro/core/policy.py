@@ -26,6 +26,12 @@ contract; every policy owns its full lifecycle:
 * ``reclaim_cache(cache, reset_mask, fresh)`` — per-lane arena reset: lanes
   where ``reset_mask`` is True return to the pristine ``fresh`` state (EOS
   early-exit frees a lane's slots for the next admitted request).
+* ``export_prefix(cache, lane)`` / ``import_prefix(cache, snap, lane)`` — the
+  cross-request prefix lifecycle: snapshot one lane's complete state at a
+  token boundary (everything needed to continue decoding, including pending
+  eviction rings and score accumulators) and restore it into a pristine lane
+  later, so even compressed/evicting caches can reuse a shared prompt prefix
+  across requests (see :mod:`repro.serving.prefix_cache`).
 * ``metrics(cache)`` — the paper's two budget axes, policy-defined instead of
   engine-guessed: ``live_tokens`` (peak-memory axis), ``reads_tokens``
   (KV-reads axis; differs from live for Quest) and ``peak_bytes`` (physical
@@ -248,6 +254,34 @@ class KVPolicy:
         is not purely lane-leading."""
         return jax.tree_util.tree_map(
             lambda a: jnp.take(a, src, axis=axis), cache)
+
+    # -- prefix lifecycle (cross-request radix prefix cache) -----------------
+
+    def export_prefix(self, cache: Any, lane, *, axis: int = 0) -> Any:
+        """Snapshot one lane's complete cache state at a token boundary.
+
+        Returns a width-1-lane pytree of the same structure as ``cache``
+        (static fields ride along), suitable for host storage in the
+        cross-request prefix cache and later re-import.  The contract: for a
+        lane that has consumed exactly the L prefix tokens, the snapshot holds
+        *everything* the policy needs to continue decoding — arena contents,
+        free lists, pending eviction rings, score accumulators, page metadata
+        — so ``import_prefix`` + suffix prefill is bitwise-equal to a cold
+        prefill of the full prompt.  All built-in caches keep their per-lane
+        state lane-leading (:class:`~repro.core.kv_cache.LaneSliceable`), so
+        the default is a pure lane slice; policies with non-lane state must
+        override both hooks together (same override point as
+        :meth:`fork_cache`).  ``lane`` may be a traced int32 scalar."""
+        return cache.export_lane(lane, axis=axis)
+
+    def import_prefix(self, cache: Any, snap: Any, lane, *, axis: int = 0
+                      ) -> Any:
+        """Restore an :meth:`export_prefix` snapshot into lane ``lane``.
+
+        The target lane must be pristine (just reclaimed/initialised); the
+        snapshot overwrites every leaf's lane slice, so the lane continues
+        exactly where the exporting request's prefill stood."""
+        return cache.import_lane(snap, lane, axis=axis)
 
     def reclaim_cache(self, cache: Any, reset_mask: jnp.ndarray,
                       fresh: Any, *, axis: int = 0) -> Any:

@@ -40,23 +40,30 @@ def main(argv=None):
                     help="staggered arrivals + mixed prompt lengths")
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                    help="cross-request radix prefix cache budget (0 = off)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens to "
+                         "every request (exercises the prefix cache)")
     args = ap.parse_args(argv)
 
     arch = get_smoke(args.arch)
     params = tfm.init_model(jax.random.PRNGKey(0), arch)
     policy = KVPolicyConfig(kind=args.policy, cr=args.cr, window=arch.dms.window)
     engine = Engine(arch, params, policy, use_kernel=args.use_kernel,
-                    chunk=args.chunk)
+                    chunk=args.chunk, prefix_cache_mb=args.prefix_cache_mb)
 
     rng = np.random.default_rng(0)
-    max_len = args.prompt_len + args.max_new
+    shared = rng.integers(3, arch.vocab_size,
+                          size=(args.shared_prefix,)).astype(np.int32)
+    max_len = args.shared_prefix + args.prompt_len + args.max_new
     sched = engine.scheduler(num_lanes=args.num_lanes, max_len=max_len)
     for i in range(args.requests):
         plen = (int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
                 if args.stagger else args.prompt_len)
+        own = rng.integers(3, arch.vocab_size, size=(plen,)).astype(np.int32)
         sched.submit(Request(
-            uid=i,
-            prompt=rng.integers(3, arch.vocab_size, size=(plen,)).astype(np.int32),
+            uid=i, prompt=np.concatenate([shared, own]),
             max_new=args.max_new, width=args.width,
             eos_id=args.eos_id, arrival=i if args.stagger else 0))
     results = sched.run()
@@ -67,6 +74,7 @@ def main(argv=None):
             "generated": r.lengths.tolist(),
             "kv_reads": r.meter.kv_reads,
             "kv_reads_prefill": r.prefill_meter.kv_reads,
+            "kv_reads_saved": r.prefill_meter.kv_reads_saved,
             "kv_reads_decode": r.decode_meter.kv_reads,
             "peak_tokens": r.meter.peak_tokens,
             "peak_bytes": r.meter.peak_bytes,
@@ -77,6 +85,8 @@ def main(argv=None):
         "requests": len(results), "lanes": args.num_lanes,
         "scheduler_ticks": sched.ticks, "scheduler_steps": sched.steps,
     }))
+    if engine.prefix_cache is not None:
+        print(json.dumps({"prefix_cache": engine.prefix_cache.stats()}))
 
 
 if __name__ == "__main__":

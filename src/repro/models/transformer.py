@@ -376,6 +376,59 @@ def reclaim_lanes(state: Dict[str, Any], reset_mask: jnp.ndarray,
     return jax.tree_util.tree_map(f, state, fresh, is_leaf=_is_policy_cache)
 
 
+def export_lane_state(state: Dict[str, Any], lane) -> Dict[str, Any]:
+    """Snapshot one lane's complete decode state (cross-request prefix cache).
+
+    Returns a width-1-lane pytree of the same structure: PolicyCache nodes
+    dispatch through :meth:`KVPolicy.export_prefix`, raw recurrent states
+    (SSD / RG-LRU) slice generically — a hybrid model's prefix snapshot
+    carries its recurrent state too.  ``lane`` may be a traced int32 scalar,
+    so one jit covers every lane."""
+
+    def f(node):
+        if _is_policy_cache(node):
+            pol = policy_lib.get_policy(node.policy)
+            return dataclasses.replace(
+                node, cache=pol.export_prefix(node.cache, lane, axis=1))
+        return jax.lax.dynamic_slice_in_dim(node, lane, 1, axis=1)
+
+    return jax.tree_util.tree_map(f, state, is_leaf=_is_policy_cache)
+
+
+def import_lane_state(state: Dict[str, Any], snap: Dict[str, Any],
+                      lane) -> Dict[str, Any]:
+    """Restore an :func:`export_lane_state` snapshot into lane ``lane``.
+
+    The lane must be pristine (reclaimed); after the import it sits exactly
+    where the exporting request's prefill stood, so chunk-prefilling only the
+    suffix is bitwise-equal to a cold full prefill."""
+
+    def f(node, s):
+        if _is_policy_cache(node):
+            pol = policy_lib.get_policy(node.policy)
+            return dataclasses.replace(
+                node, cache=pol.import_prefix(node.cache, s.cache, lane,
+                                              axis=1))
+        return jax.lax.dynamic_update_slice_in_dim(
+            node, s.astype(node.dtype), lane, axis=1)
+
+    return jax.tree_util.tree_map(f, state, snap, is_leaf=_is_policy_cache)
+
+
+def lane_state_signature(state: Dict[str, Any]) -> Tuple:
+    """Hashable shape signature of one lane's snapshot of ``state``.
+
+    Two decode states produce interchangeable prefix snapshots iff their
+    signatures match (same tree structure, same per-leaf shapes with the lane
+    axis collapsed, same dtypes) — the prefix cache keys its radix trees by
+    this, so snapshots from a scheduler with a different ``max_len``, policy
+    config, or arch are never imported into an incompatible arena."""
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    return (str(treedef),
+            tuple((a.shape[:1] + (1,) + a.shape[2:], str(jnp.dtype(a.dtype)))
+                  for a in leaves))
+
+
 def gather_lanes(state: Dict[str, Any], src: jnp.ndarray) -> Dict[str, Any]:
     """Lane shuffle: new lane ``l`` takes old lane ``src[l]``'s full state.
 

@@ -13,6 +13,12 @@ semantics), hyperscale requests prefill **once** and fork the cache into W
 chains (:meth:`KVPolicy.fork_cache`), EOS exits early and reclaims the lane,
 and every request gets its own honest prefill/decode meters — a finished
 chain contributes zero KV reads.
+
+With ``prefix_cache_mb > 0`` the engine owns a cross-request
+:class:`~repro.serving.prefix_cache.PrefixCache`: prompts sharing a prefix
+with earlier traffic (system prompts, few-shot headers, multi-turn chats)
+import the cached KV snapshot and prefill only their suffix — avoided reads
+land on the meters' ``kv_reads_saved`` axis, paid reads stay honest.
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ from repro.core import policy as policy_lib
 from repro.core.config import ArchConfig, KVPolicyConfig
 from repro.core.hyperscale import BudgetMeter, ScalingConfig, majority_vote
 from repro.models import transformer as tfm
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import (Request, RequestResult, Scheduler,
                                      make_chunk_fn)
 
@@ -40,19 +47,29 @@ class GenerationResult:
     requests: List[RequestResult] = field(default_factory=list)
 
 
+# Engine.scheduler's prefix_cache default: "use the engine's own cache".
+# A sentinel (not None) so callers can pass prefix_cache=None to get one
+# explicitly cold scheduler from a warm engine.
+_ENGINE_CACHE = object()
+
+
 class Engine:
     """Single-host engine; the same step functions lower onto the production
     mesh (see launch/serve.py)."""
 
     def __init__(self, arch: ArchConfig, params, policy: KVPolicyConfig,
                  use_kernel: bool = False, temperature: float = 0.0,
-                 chunk: int = 8):
+                 chunk: int = 8, prefix_cache_mb: float = 0.0):
         self.arch = arch
         self.params = params
         self.policy = policy
         self.use_kernel = use_kernel
         self.temperature = temperature
         self.chunk = chunk
+        # engine-owned so it persists across Scheduler instances: every
+        # served prompt seeds prefix reuse for all later traffic
+        self.prefix_cache = (PrefixCache(int(prefix_cache_mb * 2 ** 20))
+                             if prefix_cache_mb > 0 else None)
         # jitted once per Engine: the compile cache survives across Scheduler
         # instances (per-request scheduling never retraces)
         self._chunk_jit = jax.jit(make_chunk_fn(
@@ -60,6 +77,8 @@ class Engine:
         self._gather_jit = jax.jit(tfm.gather_lanes)
         self._reset_jit = jax.jit(self._reset_fn, static_argnames=("b", "ml"))
         self._prefill_jit = jax.jit(self._prefill, static_argnames=("t",))
+        self._export_jit = jax.jit(tfm.export_lane_state)
+        self._import_jit = jax.jit(tfm.import_lane_state)
 
     def _reset_fn(self, state, mask, b, ml):
         fresh = tfm.init_decode_state(self.arch, b, ml, self.policy)
@@ -83,15 +102,24 @@ class Engine:
         return state
 
     def scheduler(self, num_lanes: int, max_len: int, *, seed: int = 0,
-                  chunk: Optional[int] = None) -> Scheduler:
-        """A lane arena bound to this engine's jitted step functions."""
+                  chunk: Optional[int] = None,
+                  prefix_cache: Any = _ENGINE_CACHE) -> Scheduler:
+        """A lane arena bound to this engine's jitted step functions.
+
+        The engine's :class:`PrefixCache` (if any) rides along by default, so
+        prompts served by one scheduler seed prefix reuse in the next; pass
+        ``prefix_cache=None`` for an explicitly cold scheduler, or another
+        PrefixCache instance to override."""
+        if prefix_cache is _ENGINE_CACHE:
+            prefix_cache = self.prefix_cache
         return Scheduler(
             self.arch, self.params, self.policy,
             num_lanes=num_lanes, max_len=max_len,
             chunk=chunk or self.chunk, chunk_jit=self._chunk_jit,
             reset_jit=self._reset_jit, gather_jit=self._gather_jit,
             use_kernel=self.use_kernel, temperature=self.temperature,
-            seed=seed)
+            seed=seed, prefix_cache=prefix_cache,
+            export_jit=self._export_jit, import_jit=self._import_jit)
 
     # -- public API -------------------------------------------------------
 

@@ -1,0 +1,284 @@
+"""Cross-request radix prefix cache: reuse compressed KV across the stream.
+
+The scheduler's shared-prefill fork already amortises prefill *within* one
+request; this module extends reuse *across* the request stream — the dominant
+serving pattern (shared system prompts, few-shot headers, multi-turn chats)
+— multiplying the KV-reads savings that compression policies make possible.
+
+A host-side **radix tree over prompt token IDs** maps prefixes to per-lane
+decode-state snapshots taken at token boundaries
+(:func:`repro.models.transformer.export_lane_state`, dispatching through
+:meth:`KVPolicy.export_prefix`).  Unlike block-granular prefix caches for
+dense attention, a snapshot here is the policy's *complete* lane state —
+compacted arenas, free lists, pending eviction rings, score accumulators,
+page metadata — because for compressed/evicting policies the state after L
+tokens is **not** a truncation of the state after T > L tokens.  That makes
+reuse exact: importing a cached L-token snapshot and chunk-prefilling only
+the suffix is bitwise-equal to a cold full prefill (pinned per policy in
+``tests/test_prefix_cache.py``).
+
+Mechanics:
+
+* **Entries** live at radix-tree nodes (edges are compressed token runs;
+  insertion splits edges so every snapshot boundary is a node).  Each entry
+  holds the host-resident (numpy) snapshot, the boundary logits (predicting
+  token L — so a full-prompt hit can skip prefill *and* still sample token
+  0), and ``reads_cum``: the cumulative prefill ``reads_tokens`` a cold
+  prefill of this prefix costs, used to meter saved-vs-paid reads honestly.
+* **Lookup** walks the prompt and returns the deepest snapshot on its path;
+  hits refresh LRU recency.
+* **LRU byte budget**: entries account their true numpy bytes; inserting
+  past ``capacity_bytes`` evicts least-recently-used entries (and prunes
+  entry-less leaf nodes).  An over-budget snapshot is simply rejected — the
+  stream degrades to cold prefill, never to an error.
+* **Shape signatures**: snapshots are only interchangeable between decode
+  states with identical tree structure / leaf shapes / dtypes
+  (:func:`repro.models.transformer.lane_state_signature`).  One PrefixCache
+  keeps one radix tree per signature, so an engine can safely share a cache
+  across schedulers with different ``max_len`` without cross-importing.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def snapshot_nbytes(snapshot: Any) -> int:
+    """Host bytes of a snapshot pytree — shape-derived, so it works on
+    device arrays WITHOUT materializing them (the insert fast-reject path)."""
+    return int(sum(int(a.size) * np.dtype(a.dtype).itemsize
+                   for a in jax.tree_util.tree_leaves(snapshot)))
+
+
+def to_host(tree: Any) -> Any:
+    """Device→host: numpy leaves, releasing device buffers for storage."""
+    return jax.tree_util.tree_map(lambda a: np.asarray(a), jax.device_get(tree))
+
+
+@dataclass
+class PrefixHit:
+    """A lookup result: the deepest cached boundary on the prompt's path."""
+
+    length: int                   # prefix tokens covered
+    snapshot: Any                 # host pytree, lane axis width 1
+    logits: np.ndarray            # (V,) logits predicting token ``length``
+    reads_cum: float              # cold-prefill reads_tokens for this prefix
+
+
+@dataclass(eq=False)          # identity hash: entries key the LRU dict
+class _Entry:
+    snapshot: Any
+    logits: np.ndarray
+    reads_cum: float
+    nbytes: int
+
+
+class _Node:
+    __slots__ = ("edge", "children", "entry")
+
+    def __init__(self, edge: np.ndarray):
+        self.edge = edge                       # tokens from parent to here
+        self.children: Dict[int, _Node] = {}   # keyed by first edge token
+        self.entry: Optional[_Entry] = None
+
+
+def _common_len(a: np.ndarray, b: np.ndarray) -> int:
+    n = min(len(a), len(b))
+    neq = np.nonzero(a[:n] != b[:n])[0]
+    return int(neq[0]) if len(neq) else n
+
+
+class PrefixCache:
+    """Radix tree of per-policy KV snapshots under an LRU byte budget.
+
+    Thread-unsafe by design (the scheduler is single-threaded host code).
+    Intended to be owned by the :class:`~repro.serving.engine.Engine` so it
+    persists across Scheduler instances — that is what makes it
+    *cross-request*: every served prompt seeds reuse for all later traffic.
+    """
+
+    def __init__(self, capacity_bytes: int):
+        self.capacity_bytes = int(capacity_bytes)
+        self._roots: Dict[Tuple, _Node] = {}   # one tree per shape signature
+        # recency order: least-recently-used first; maps entry -> its node so
+        # eviction pops in O(1) instead of scanning the whole tree
+        self._lru: "collections.OrderedDict[_Entry, _Node]" = \
+            collections.OrderedDict()
+        self.total_bytes = 0
+        # stats — surfaced by launch/serve and the prefix_cache benchmark
+        self.lookups = 0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.lookup_tokens = 0
+        self.inserts = 0
+        self.insert_rejects = 0
+        self.evictions = 0
+
+    # -- public ------------------------------------------------------------
+
+    def _walk(self, signature: Tuple, tokens: np.ndarray
+              ) -> Iterator[Tuple[int, _Node]]:
+        """Yield (depth, node) for every node whose path is a prefix of
+        ``tokens`` — the one radix descent all public reads share."""
+        node = self._roots.get(signature)
+        depth = 0
+        while node is not None:
+            yield depth, node
+            rest = tokens[depth:]
+            if len(rest) == 0:
+                return
+            child = node.children.get(int(rest[0]))
+            if child is None or _common_len(child.edge, rest) < len(child.edge):
+                return                     # tokens diverge inside the edge
+            node = child
+            depth += len(child.edge)
+
+    def lookup(self, signature: Tuple, prompt: np.ndarray
+               ) -> Optional[PrefixHit]:
+        """Deepest cached boundary along ``prompt``; refreshes its recency.
+
+        Never returns a boundary past ``len(prompt)`` (a hit covering the
+        whole prompt is valid: its stored logits stand in for prefill)."""
+        prompt = np.asarray(prompt)
+        self.lookups += 1
+        self.lookup_tokens += len(prompt)
+        best = None
+        for depth, node in self._walk(signature, prompt):
+            if node.entry is not None and depth > 0:
+                best = (depth, node.entry)
+        if best is None:
+            return None
+        depth, entry = best
+        self._lru.move_to_end(entry)
+        self.hits += 1
+        self.hit_tokens += depth
+        return PrefixHit(length=depth, snapshot=entry.snapshot,
+                         logits=entry.logits, reads_cum=entry.reads_cum)
+
+    def covered(self, signature: Tuple, tokens: np.ndarray) -> int:
+        """Deepest cached boundary along ``tokens`` WITHOUT touching stats or
+        recency — the scheduler's "is exporting this boundary useful?" probe."""
+        best = 0
+        for depth, node in self._walk(signature, np.asarray(tokens)):
+            if node.entry is not None:
+                best = depth
+        return best
+
+    def insert(self, signature: Tuple, tokens: np.ndarray, snapshot: Any,
+               logits: np.ndarray, reads_cum: float) -> bool:
+        """Store a snapshot for the boundary ``len(tokens)``.
+
+        No-op if that exact boundary already holds an entry.  Evicts LRU
+        entries to fit; rejects (False) a snapshot larger than the whole
+        budget — the caller falls back to cold prefill, never errors."""
+        tokens = np.asarray(tokens, np.int32)
+        if len(tokens) == 0:
+            return False
+        if self.covered(signature, tokens) == len(tokens):
+            return False                   # first writer wins (same prefix)
+        # both rejects are shape-only: no device sync / host copy wasted
+        nbytes = snapshot_nbytes(snapshot) + int(np.asarray(logits).nbytes)
+        if nbytes > self.capacity_bytes:
+            self.insert_rejects += 1
+            return False
+        snapshot = to_host(snapshot)
+        node = self._node_for(signature, tokens)
+        # np.array (not asarray): own the boundary row, don't pin the whole
+        # per-tick (B, V) logits buffer alive via a view
+        node.entry = _Entry(snapshot=snapshot, logits=np.array(logits),
+                            reads_cum=float(reads_cum), nbytes=nbytes)
+        self._lru[node.entry] = node
+        self.total_bytes += nbytes
+        self.inserts += 1
+        self._evict_to_fit(keep=node.entry)
+        return True
+
+    def touch(self, signature: Tuple, tokens: np.ndarray) -> None:
+        """Refresh recency of every boundary along ``tokens`` — the EOS
+        reclamation hook: a finishing request offers its prompt's prefix
+        chain back to the tree as recently-useful."""
+        for _, node in self._walk(signature, np.asarray(tokens)):
+            if node.entry is not None:
+                self._lru.move_to_end(node.entry)
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "lookups": self.lookups,
+            "hits": self.hits,
+            "hit_rate": self.hits / max(self.lookups, 1),
+            "hit_tokens": self.hit_tokens,
+            "lookup_tokens": self.lookup_tokens,
+            "token_hit_rate": self.hit_tokens / max(self.lookup_tokens, 1),
+            "inserts": self.inserts,
+            "insert_rejects": self.insert_rejects,
+            "evictions": self.evictions,
+            "entries": self._count_entries(),
+            "bytes": self.total_bytes,
+            "capacity_bytes": self.capacity_bytes,
+        }
+
+    # -- internals ----------------------------------------------------------
+
+    def _node_for(self, signature: Tuple, tokens: np.ndarray) -> _Node:
+        """Walk/extend/split the tree so ``tokens`` ends exactly at a node."""
+        root = self._roots.setdefault(signature,
+                                      _Node(np.empty((0,), np.int32)))
+        node, depth = root, 0
+        while depth < len(tokens):
+            rest = tokens[depth:]
+            child = node.children.get(int(rest[0]))
+            if child is None:
+                child = _Node(np.array(rest, np.int32))
+                node.children[int(rest[0])] = child
+                return child
+            m = _common_len(child.edge, rest)
+            if m < len(child.edge):
+                # split the edge at m: node -> mid -> child
+                mid = _Node(np.array(child.edge[:m], np.int32))
+                child.edge = np.array(child.edge[m:], np.int32)
+                mid.children[int(child.edge[0])] = child
+                node.children[int(rest[0])] = mid
+                child = mid
+            node = child
+            depth += m
+        return node
+
+    def _count_entries(self) -> int:
+        return len(self._lru)
+
+    def _evict_to_fit(self, keep: Optional[_Entry] = None) -> None:
+        evicted = False
+        while self.total_bytes > self.capacity_bytes and self._lru:
+            entry, node = next(iter(self._lru.items()))   # LRU head
+            if entry is keep:
+                if len(self._lru) == 1:
+                    break                  # only the fresh insert left
+                self._lru.move_to_end(entry)
+                continue
+            del self._lru[entry]
+            node.entry = None
+            self.total_bytes -= entry.nbytes
+            self.evictions += 1
+            evicted = True
+        if evicted:
+            self._prune()
+
+    def _prune(self) -> None:
+        """Drop entry-less leaf chains so dead paths don't accumulate: one
+        pass over each tree, children before parents (reversed BFS order)."""
+        for root in self._roots.values():
+            order = [(None, None, root)]
+            i = 0
+            while i < len(order):
+                _, _, node = order[i]
+                for key, c in node.children.items():
+                    order.append((node, key, c))
+                i += 1
+            for parent, key, node in reversed(order):
+                if parent is not None and node.entry is None \
+                        and not node.children:
+                    del parent.children[key]

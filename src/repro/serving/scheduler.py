@@ -25,6 +25,14 @@ replaces the lockstep fixed batch with a real scheduler:
 * **EOS reclamation.**  A chain that emits EOS (or hits its token budget)
   goes inactive immediately — zero further KV reads — and its lane's arena
   is reclaimed (:meth:`KVPolicy.reclaim_cache`) for the next queued request.
+* **Cross-request prefix reuse.**  With a
+  :class:`~repro.serving.prefix_cache.PrefixCache` attached, admission looks
+  up the longest cached prefix of the prompt, imports its snapshot into the
+  lane (:meth:`KVPolicy.import_prefix`) and chunk-prefills only the suffix;
+  prefill exports a snapshot at each new chunk boundary, and EOS reclamation
+  offers the finished prompt's prefix chain back to the tree (LRU refresh).
+  A full-prompt hit skips prefill entirely — the cached boundary logits
+  stand in for the hold-state sample.
 * **Honest per-request metering.**  Each request owns two
   :class:`BudgetMeter`\\ s (prefill phase / decode phase) fed only by its own
   lanes' per-step ``live_tokens`` / ``reads_tokens``.  Finished lanes
@@ -43,6 +51,7 @@ import numpy as np
 from repro.core import policy as policy_lib
 from repro.core.hyperscale import BudgetMeter
 from repro.models import transformer as tfm
+from repro.serving.prefix_cache import PrefixCache
 
 
 @dataclass
@@ -168,7 +177,9 @@ class Scheduler:
     def __init__(self, arch, params, policy, *, num_lanes: int, max_len: int,
                  chunk: int = 8, chunk_jit=None, reset_jit=None,
                  gather_jit=None, use_kernel: bool = False,
-                 temperature: float = 0.0, seed: int = 0, pad_id: int = 0):
+                 temperature: float = 0.0, seed: int = 0, pad_id: int = 0,
+                 prefix_cache: Optional[PrefixCache] = None,
+                 export_jit=None, import_jit=None):
         self.arch, self.params, self.policy = arch, params, policy
         self.num_lanes, self.max_len, self.chunk = num_lanes, max_len, chunk
         self.pad_id = pad_id
@@ -177,9 +188,20 @@ class Scheduler:
         self._reset_jit = reset_jit or jax.jit(self._reset_fn,
                                                static_argnames=("b", "ml"))
         self._gather_jit = gather_jit or jax.jit(tfm.gather_lanes)
+        self.prefix_cache = prefix_cache
+        self._export_jit = export_jit or jax.jit(tfm.export_lane_state)
+        self._import_jit = import_jit or jax.jit(tfm.import_lane_state)
         self.temperature = temperature
 
         self.state = tfm.init_decode_state(arch, num_lanes, max_len, policy)
+        self.signature = tfm.lane_state_signature(self.state)
+        # per-boundary snapshot bytes are shape-derived and constant for this
+        # arena; knowing them up front lets _export_prefix skip the jitted
+        # export + device→host copy entirely when no snapshot can ever fit
+        self._snap_nbytes = int(sum(
+            (int(a.size) // int(a.shape[1])) * np.dtype(a.dtype).itemsize
+            for a in jax.tree_util.tree_leaves(self.state))) \
+            + int(arch.padded_vocab) * 4                  # + fp32 logits row
         self.peak_bytes = float(policy_lib.state_peak_bytes(self.state))
         self.rng = jax.random.PRNGKey(seed)
         self._host_rng = jax.random.PRNGKey(seed ^ 0x5EED0)
@@ -265,6 +287,58 @@ class Scheduler:
             self.decoding[lane] = False
             self.finished[lane] = False
             self.lane_eos[lane] = -1 if nxt.req.eos_id is None else nxt.req.eos_id
+            self._import_prefix(nxt, lane)
+
+    def _import_prefix(self, r: _ReqState, lane: int) -> None:
+        """Longest-cached-prefix import: the lane resumes at token boundary L
+        and chunked prefill feeds only ``prompt[L:]``.  The avoided prefill
+        reads go on the request's *saved* axis (``kv_reads`` stays the honest
+        paid integral); a full-prompt hit skips prefill entirely, with the
+        cached boundary logits standing in as the hold-state sample."""
+        if self.prefix_cache is None:
+            return
+        hit = self.prefix_cache.lookup(self.signature, r.req.prompt)
+        if hit is None:
+            return
+        self.state = self._import_jit(self.state, hit.snapshot,
+                                      jnp.int32(lane))
+        self.pos[lane] = hit.length
+        r.consumed = hit.length
+        r.prefill_meter.observe_saved_reads(hit.reads_cum)
+        if hit.length == len(r.req.prompt):
+            r.hold_logits = np.asarray(hit.logits).copy()
+
+    def _want_prefix_export(self, r: _ReqState) -> bool:
+        """Gate the per-chunk snapshot export on pure host checks, so the
+        skip paths (no cache, over-budget snapshot, boundary already in the
+        tree) cost no device sync at all."""
+        if self.prefix_cache is None:
+            return False
+        if self._snap_nbytes > self.prefix_cache.capacity_bytes:
+            return False                   # can never fit: skip the export
+        prefix = r.req.prompt[:r.consumed]
+        return self.prefix_cache.covered(self.signature, prefix) != r.consumed
+
+    def _export_prefix(self, r: _ReqState, lane: int,
+                       logits: np.ndarray) -> None:
+        """Offer the just-prefilled boundary ``prompt[:consumed]`` to the
+        radix tree.  ``reads_cum`` is what a cold prefill of this prefix
+        reads — the request's own paid prefill reads plus whatever its own
+        admission-time import saved (the invariant holds recursively, so hits
+        on hits stay honest).  ``logits`` predict the boundary token, letting
+        a later full-prompt hit skip prefill entirely.
+
+        Each export is one jitted lane slice + device→host copy of the
+        whole per-lane arena (snapshots are complete states, O(arena) bytes
+        regardless of boundary depth) — the price of exact mid-prompt reuse
+        for evicting policies.  The LRU byte budget bounds what unshared
+        prompts can occupy; coarser boundary policies (stride > chunk,
+        promote-on-second-miss) are a ROADMAP item."""
+        prefix = r.req.prompt[:r.consumed]
+        snap = self._export_jit(self.state, jnp.int32(lane))
+        reads_cum = r.prefill_meter.kv_reads_saved + r.prefill_meter.kv_reads
+        self.prefix_cache.insert(self.signature, prefix, snap, logits,
+                                 reads_cum)
 
     def _fork_ready(self) -> None:
         """hold → decode: fork prefilled lanes into W chains, sample token 0."""
@@ -372,6 +446,10 @@ class Scheduler:
                 if ll is None:
                     ll = np.asarray(last_logits)
                 r.hold_logits = ll[lane].copy()
+            if self._want_prefix_export(r):
+                if ll is None:
+                    ll = np.asarray(last_logits)
+                self._export_prefix(r, lane, ll[lane])
 
         # collect emitted tokens; EOS / budget exhaustion finishes chains
         for lane in range(b):
@@ -393,6 +471,10 @@ class Scheduler:
             reclaim = np.zeros((b,), bool)
             for r in done:
                 self.active_reqs.remove(r)
+                if self.prefix_cache is not None:
+                    # EOS reclamation offers the finished prompt's prefix
+                    # chain back to the tree (LRU recency refresh)
+                    self.prefix_cache.touch(self.signature, r.req.prompt)
                 results.append(r.result(
                     self.peak_bytes * len(r.lanes) / self.num_lanes,
                     self.ticks))

@@ -1,3 +1,4 @@
+import dataclasses
 import os
 import sys
 
@@ -8,6 +9,9 @@ import jax
 import numpy as np
 import pytest
 
+from repro.configs import get_smoke
+from repro.models import transformer as tfm
+
 
 @pytest.fixture
 def rng():
@@ -17,3 +21,19 @@ def rng():
 @pytest.fixture
 def nprng():
     return np.random.default_rng(0)
+
+
+# One tiny model shared by every suite (registry / scheduler / prefix-cache /
+# system): session-scoped so params init once, with the DMS knobs every suite
+# needs (short delay window, CPU-scale CR ramp for the retrofit test).
+@pytest.fixture(scope="session")
+def tiny_arch():
+    arch = get_smoke("qwen-r1-1.5b")
+    return dataclasses.replace(
+        arch, dms=dataclasses.replace(arch.dms, window=4, target_cr=4.0,
+                                      steps_per_cr_unit=5))
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_arch):
+    return tfm.init_model(jax.random.PRNGKey(0), tiny_arch)

@@ -33,16 +33,7 @@ BUILTINS = {"vanilla", "dms", "dms_masked", "tova", "h2o", "quest", "dmc",
             "window", "keyformer"}
 
 
-@pytest.fixture(scope="module")
-def tiny_arch():
-    arch = get_smoke("qwen-r1-1.5b")
-    return dataclasses.replace(
-        arch, dms=dataclasses.replace(arch.dms, window=4, target_cr=4.0))
-
-
-@pytest.fixture(scope="module")
-def tiny_params(tiny_arch):
-    return tfm.init_model(jax.random.PRNGKey(0), tiny_arch)
+# tiny_arch / tiny_params come from tests/conftest.py (shared tiny model)
 
 
 # -- registry ------------------------------------------------------------

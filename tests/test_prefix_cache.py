@@ -1,0 +1,279 @@
+"""Cross-request radix prefix cache: exactness, radix/LRU mechanics, and
+honest saved-vs-paid metering.
+
+Acceptance criteria pinned here:
+* for EVERY registered policy, importing a cached L-token prefix snapshot and
+  chunk-prefilling only the suffix produces step-0 logits bitwise-equal to a
+  cold full prefill (the compressed state at a boundary is complete:
+  pending eviction rings, score accumulators, page metadata included),
+* a full-prompt hit skips prefill entirely and still generates identically,
+* eviction under a tiny byte budget falls back to cold prefill correctly
+  (same outputs, zero saved reads),
+* per-request meters stay honest: paid + saved == what a cold serve reads.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import KVPolicyConfig
+from repro.core.policy import available_policies
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine
+from repro.serving.prefix_cache import PrefixCache, snapshot_nbytes
+from repro.serving.scheduler import Request
+
+
+def _prompt(n, seed=0, vocab=512):
+    return np.random.default_rng(seed).integers(3, vocab, size=(n,)).astype(np.int32)
+
+
+def _policy_cfg(kind, window):
+    return KVPolicyConfig(kind=kind, cr=2.0, budget=12, window=window,
+                          quest_page_size=4)
+
+
+def _serve_one(eng, prompt, max_new, max_len):
+    sched = eng.scheduler(num_lanes=1, max_len=max_len)
+    sched.submit(Request(uid=0, prompt=prompt, max_new=max_new))
+    return sched.run()[0]
+
+
+# -- the tentpole acceptance: bitwise equivalence per policy ----------------
+
+
+@pytest.mark.parametrize("kind", sorted(available_policies()))
+def test_prefix_import_suffix_prefill_bitwise_equals_cold(tiny_arch,
+                                                          tiny_params, kind):
+    """Serve A = prefix(16) + suffix_a, then B = prefix(16) + suffix_b warm.
+    B must hit the chunk-aligned 16-token boundary A exported, and generate
+    EXACTLY what a cold serve of B generates — for every policy, including
+    the evicting ones whose mid-prompt state is not a truncation."""
+    t_pre, max_new = 16, 5
+    prefix = _prompt(t_pre, seed=1, vocab=tiny_arch.vocab_size)
+    pa = np.concatenate([prefix, _prompt(7, seed=2, vocab=tiny_arch.vocab_size)])
+    pb = np.concatenate([prefix, _prompt(9, seed=3, vocab=tiny_arch.vocab_size)])
+    cfg = _policy_cfg(kind, tiny_arch.dms.window)
+    max_len = len(pb) + max_new
+
+    warm = Engine(tiny_arch, tiny_params, cfg, chunk=8, prefix_cache_mb=64)
+    ra = _serve_one(warm, pa, max_new, max_len)
+    rb = _serve_one(warm, pb, max_new, max_len)
+    assert rb.prefill_meter.kv_reads_saved > 0, kind       # actually hit
+
+    cold = Engine(tiny_arch, tiny_params, cfg, chunk=8)
+    ca = _serve_one(cold, pa, max_new, max_len)
+    cb = _serve_one(cold, pb, max_new, max_len)
+
+    np.testing.assert_array_equal(ra.tokens, ca.tokens, err_msg=kind)
+    np.testing.assert_array_equal(rb.tokens, cb.tokens, err_msg=kind)
+    # honest metering: paid + saved == cold paid, exactly
+    assert rb.prefill_meter.kv_reads + rb.prefill_meter.kv_reads_saved \
+        == pytest.approx(cb.prefill_meter.kv_reads), kind
+
+
+@pytest.mark.parametrize("kind", sorted(available_policies()))
+def test_prefix_import_state_bitwise_equals_cold_state(tiny_arch, tiny_params,
+                                                       kind):
+    """Stronger than logits: after the suffix prefill, EVERY leaf of the
+    imported lane's decode state equals the cold-prefill state bitwise."""
+    t_pre = 16
+    prefix = _prompt(t_pre, seed=4, vocab=tiny_arch.vocab_size)
+    pa = np.concatenate([prefix, _prompt(5, seed=5, vocab=tiny_arch.vocab_size)])
+    pb = np.concatenate([prefix, _prompt(6, seed=6, vocab=tiny_arch.vocab_size)])
+    cfg = _policy_cfg(kind, tiny_arch.dms.window)
+    max_len = len(pb) + 4
+
+    def state_after_prefill(eng, prompt):
+        sched = eng.scheduler(num_lanes=1, max_len=max_len)
+        sched.submit(Request(uid=0, prompt=prompt, max_new=4))
+        sched._admit()
+        results = []
+        while sched.active_reqs[0].hold_logits is None:
+            sched._tick(results)
+        return sched.state
+
+    warm = Engine(tiny_arch, tiny_params, cfg, chunk=8, prefix_cache_mb=64)
+    _serve_one(warm, pa, 4, max_len)                      # seeds the tree
+    got = state_after_prefill(warm, pb)
+    assert warm.prefix_cache.hits > 0, kind
+
+    ref = state_after_prefill(Engine(tiny_arch, tiny_params, cfg, chunk=8), pb)
+    g_l, g_tree = jax.tree_util.tree_flatten(got)
+    r_l, r_tree = jax.tree_util.tree_flatten(ref)
+    assert g_tree == r_tree
+    for a, b in zip(g_l, r_l):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=kind)
+
+
+def test_full_prompt_hit_skips_prefill_entirely(tiny_arch, tiny_params):
+    """Resubmitting an already-served prompt pays ZERO prefill reads: the
+    cached boundary logits stand in for the hold-state sample."""
+    cfg = _policy_cfg("dms", tiny_arch.dms.window)
+    p = _prompt(19, seed=7, vocab=tiny_arch.vocab_size)
+    warm = Engine(tiny_arch, tiny_params, cfg, chunk=8, prefix_cache_mb=64)
+    r1 = _serve_one(warm, p, 5, len(p) + 5)
+    r2 = _serve_one(warm, p, 5, len(p) + 5)
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+    assert r2.prefill_meter.kv_reads == 0.0
+    assert r2.prefill_meter.kv_reads_saved \
+        == pytest.approx(r1.prefill_meter.kv_reads)
+
+
+def test_hyperscale_fork_composes_with_prefix_hit(tiny_arch, tiny_params):
+    """A width-W request admitted onto a prefix hit forks the imported state:
+    every chain matches the cold hyperscale serve."""
+    from repro.core.hyperscale import ScalingConfig
+    cfg = _policy_cfg("dms", tiny_arch.dms.window)
+    p = _prompt(16, seed=8, vocab=tiny_arch.vocab_size)
+    warm = Engine(tiny_arch, tiny_params, cfg, chunk=8, prefix_cache_mb=64)
+    sched = warm.scheduler(num_lanes=4, max_len=24)
+    sched.submit(Request(uid=0, prompt=p, max_new=6))
+    sched.run()
+    sched2 = warm.scheduler(num_lanes=4, max_len=24)
+    sched2.submit(Request(uid=1, prompt=p, max_new=6, width=4))
+    r = sched2.run()[0]
+    assert r.prefill_meter.kv_reads == 0.0                # full hit
+    cold = Engine(tiny_arch, tiny_params, cfg, chunk=8)
+    ref = cold.hyperscale_generate(p, ScalingConfig(24, 4))
+    np.testing.assert_array_equal(r.tokens, ref.tokens[:, :6])
+
+
+def test_tiny_budget_evicts_and_falls_back_to_cold(tiny_arch, tiny_params):
+    """A byte budget too small for any snapshot must behave exactly like no
+    cache: every insert rejected, zero hits, identical generations."""
+    cfg = _policy_cfg("dms", tiny_arch.dms.window)
+    eng = Engine(tiny_arch, tiny_params, cfg, chunk=8)
+    eng.prefix_cache = PrefixCache(capacity_bytes=64)     # < any snapshot
+    p1 = _prompt(17, seed=9, vocab=tiny_arch.vocab_size)
+    r1 = _serve_one(eng, p1, 4, len(p1) + 4)
+    r2 = _serve_one(eng, p1, 4, len(p1) + 4)              # would be a hit
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+    assert r2.prefill_meter.kv_reads_saved == 0.0
+    st = eng.prefix_cache.stats()
+    assert st["hits"] == 0 and st["entries"] == 0
+    # the scheduler skips the export outright (shape-derived snapshot bytes
+    # can never fit), so nothing is even offered to the tree
+    assert st["inserts"] == 0 and st["bytes"] == 0
+
+    cold = Engine(tiny_arch, tiny_params, cfg, chunk=8)
+    c = _serve_one(cold, p1, 4, len(p1) + 4)
+    np.testing.assert_array_equal(r2.tokens, c.tokens)
+    assert r2.prefill_meter.kv_reads == pytest.approx(c.prefill_meter.kv_reads)
+
+
+def test_lru_eviction_keeps_recently_used_prefix(tiny_arch, tiny_params):
+    """With room for ~one prompt's snapshots, serving prompt A, then A again
+    (recency refresh), then B must evict B-or-A by recency — a third serve of
+    A must still hit if A was more recently used than the evicted boundary."""
+    cfg = _policy_cfg("vanilla", tiny_arch.dms.window)
+    eng = Engine(tiny_arch, tiny_params, cfg, chunk=8)
+    pa = _prompt(16, seed=10, vocab=tiny_arch.vocab_size)
+    pb = _prompt(16, seed=11, vocab=tiny_arch.vocab_size)
+    # size the budget from a real snapshot: fits A's two boundaries plus one
+    r = _serve_one(Engine(tiny_arch, tiny_params, cfg, chunk=8,
+                          prefix_cache_mb=64), pa, 4, 20)
+    probe = Engine(tiny_arch, tiny_params, cfg, chunk=8, prefix_cache_mb=64)
+    _serve_one(probe, pa, 4, 20)
+    per_entry = probe.prefix_cache.total_bytes / max(
+        probe.prefix_cache.stats()["entries"], 1)
+    eng.prefix_cache = PrefixCache(capacity_bytes=int(per_entry * 3.5))
+    _serve_one(eng, pa, 4, 20)                            # A: 2-3 boundaries
+    _serve_one(eng, pa, 4, 20)                            # touch A (LRU head)
+    _serve_one(eng, pb, 4, 20)                            # B forces eviction
+    assert eng.prefix_cache.evictions > 0
+    r3 = _serve_one(eng, pa, 4, 20)
+    assert r3.prefill_meter.kv_reads_saved > 0            # A survived LRU
+    np.testing.assert_array_equal(r3.tokens, r.tokens)
+
+
+# -- radix tree unit tests --------------------------------------------------
+
+
+def _mk(tokens):
+    return np.asarray(tokens, np.int32)
+
+
+def _dummy_snap(nbytes=64):
+    return {"x": np.zeros((nbytes // 8,), np.float64)}
+
+
+SIG = ("t", ((1,), "f32"))
+
+
+def _insert(pc, tokens, reads=1.0, nbytes=64):
+    return pc.insert(SIG, _mk(tokens), _dummy_snap(nbytes),
+                     np.zeros((4,), np.float32), reads)
+
+
+def test_radix_lookup_returns_deepest_boundary():
+    pc = PrefixCache(1 << 20)
+    assert _insert(pc, [1, 2, 3, 4], reads=4.0)
+    assert _insert(pc, [1, 2, 3, 4, 5, 6], reads=6.0)
+    hit = pc.lookup(SIG, _mk([1, 2, 3, 4, 5, 6, 7, 8]))
+    assert hit.length == 6 and hit.reads_cum == 6.0
+    hit = pc.lookup(SIG, _mk([1, 2, 3, 4, 5, 9]))
+    assert hit.length == 4 and hit.reads_cum == 4.0       # diverges after 4
+    assert pc.lookup(SIG, _mk([2, 2, 3])) is None
+    assert pc.lookup(("other",), _mk([1, 2, 3, 4])) is None   # signature gate
+
+
+def test_radix_edge_split_on_divergence():
+    pc = PrefixCache(1 << 20)
+    assert _insert(pc, [5, 6, 7, 8])
+    assert _insert(pc, [5, 6, 9])                         # splits the edge
+    assert pc.lookup(SIG, _mk([5, 6, 7, 8, 1])).length == 4
+    assert pc.lookup(SIG, _mk([5, 6, 9, 1])).length == 3
+    assert pc.covered(SIG, _mk([5, 6])) == 0              # no entry at split
+    assert _insert(pc, [5, 6])                            # boundary at split
+    assert pc.covered(SIG, _mk([5, 6])) == 2
+
+
+def test_radix_never_returns_boundary_past_prompt():
+    pc = PrefixCache(1 << 20)
+    assert _insert(pc, [3, 3, 3, 3, 3, 3])
+    assert pc.lookup(SIG, _mk([3, 3, 3])) is None         # entry is deeper
+    assert _insert(pc, [3, 3])
+    assert pc.lookup(SIG, _mk([3, 3, 3])).length == 2
+
+
+def test_radix_duplicate_insert_is_noop():
+    pc = PrefixCache(1 << 20)
+    assert _insert(pc, [1, 2], reads=2.0)
+    assert not _insert(pc, [1, 2], reads=99.0)
+    assert pc.lookup(SIG, _mk([1, 2])).reads_cum == 2.0
+    assert pc.stats()["entries"] == 1
+
+
+def test_lru_evicts_least_recently_used_first():
+    pc = PrefixCache(capacity_bytes=3 * 80)               # snap 64 + logits 16
+    _insert(pc, [1, 1])
+    _insert(pc, [2, 2])
+    _insert(pc, [3, 3])
+    pc.lookup(SIG, _mk([1, 1]))                           # refresh [1,1]
+    _insert(pc, [4, 4])                                   # evicts [2,2]
+    assert pc.lookup(SIG, _mk([2, 2])) is None
+    assert pc.lookup(SIG, _mk([1, 1])) is not None
+    assert pc.lookup(SIG, _mk([4, 4])) is not None
+    assert pc.evictions == 1
+    assert pc.total_bytes <= pc.capacity_bytes
+
+
+def test_byte_accounting_tracks_entries():
+    pc = PrefixCache(1 << 20)
+    snap = _dummy_snap(128)
+    logits = np.zeros((4,), np.float32)
+    want = snapshot_nbytes(snap) + logits.nbytes
+    pc.insert(SIG, _mk([7]), snap, logits, 1.0)
+    assert pc.total_bytes == want
+    pc.insert(SIG, _mk([7, 8]), snap, logits, 2.0)
+    assert pc.total_bytes == 2 * want
+    assert pc.stats()["bytes"] == pc.total_bytes
+
+
+def test_oversized_snapshot_rejected():
+    pc = PrefixCache(capacity_bytes=16)
+    assert not _insert(pc, [1, 2, 3], nbytes=1024)
+    assert pc.stats()["insert_rejects"] == 1
+    assert pc.total_bytes == 0

@@ -10,14 +10,11 @@ Acceptance criteria pinned here:
   per-request meters; lane reclaim is exact (a lane reused after EOS serves
   the next request identically to a fresh arena).
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_smoke
 from repro.core.config import KVPolicyConfig
 from repro.core.hyperscale import ScalingConfig
 from repro.core.policy import available_policies
@@ -26,16 +23,7 @@ from repro.serving.engine import Engine, answer_from_chain
 from repro.serving.scheduler import Request
 
 
-@pytest.fixture(scope="module")
-def tiny_arch():
-    arch = get_smoke("qwen-r1-1.5b")
-    return dataclasses.replace(
-        arch, dms=dataclasses.replace(arch.dms, window=4, target_cr=4.0))
-
-
-@pytest.fixture(scope="module")
-def tiny_params(tiny_arch):
-    return tfm.init_model(jax.random.PRNGKey(0), tiny_arch)
+# tiny_arch / tiny_params come from tests/conftest.py (shared tiny model)
 
 
 def _prompt(n, seed=0, vocab=512):

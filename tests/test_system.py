@@ -12,7 +12,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_smoke
 from repro.core.config import DMSConfig, KVPolicyConfig
 from repro.data.pipeline import DataConfig
 from repro.models import transformer as tfm
@@ -20,12 +19,8 @@ from repro.serving.engine import Engine
 from repro.train.loop import TrainConfig, train
 
 
-@pytest.fixture(scope="module")
-def tiny_arch():
-    arch = get_smoke("llama32-1b")
-    return dataclasses.replace(
-        arch, dms=dataclasses.replace(arch.dms, window=4, target_cr=4.0,
-                                      steps_per_cr_unit=5))
+# tiny_arch comes from tests/conftest.py — one shared tiny model across the
+# registry / scheduler / prefix-cache / system suites
 
 
 def test_retrofit_increases_alpha_and_tracks_teacher(tiny_arch):
@@ -50,10 +45,10 @@ def test_pretrain_loss_decreases(tiny_arch):
     assert hist[-1]["ce"] < hist[0]["ce"] - 0.1
 
 
-def test_engine_budget_shrinks_with_dms(tiny_arch):
+def test_engine_budget_shrinks_with_dms(tiny_arch, tiny_params):
     """Paper core claim, measured: DMS reduces both KV reads and peak tokens
     vs vanilla for the same generation length."""
-    params = tfm.init_model(jax.random.PRNGKey(0), tiny_arch)
+    params = tiny_params
     prompts = np.random.default_rng(0).integers(3, tiny_arch.vocab_size,
                                                 size=(2, 24)).astype(np.int32)
     res_v = Engine(tiny_arch, params, KVPolicyConfig(kind="vanilla")
@@ -65,8 +60,8 @@ def test_engine_budget_shrinks_with_dms(tiny_arch):
     assert res_v.tokens.shape == res_d.tokens.shape == (2, 16)
 
 
-def test_engine_policies_run(tiny_arch):
-    params = tfm.init_model(jax.random.PRNGKey(0), tiny_arch)
+def test_engine_policies_run(tiny_arch, tiny_params):
+    params = tiny_params
     prompts = np.random.default_rng(0).integers(3, tiny_arch.vocab_size,
                                                 size=(1, 12)).astype(np.int32)
     for kind in ["vanilla", "dms", "tova", "h2o", "quest", "dmc"]:
