@@ -9,6 +9,20 @@ from typing import Callable, Dict, List
 
 ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
+# --check mode: suites still compute and emit everything, but save_json
+# captures payloads here instead of overwriting the baselines they are about
+# to be compared against (see benchmarks.run --check)
+_CHECK = {"enabled": False}
+CAPTURED: Dict[str, dict] = {}
+
+#: metric keys never compared against baselines: wall-clock is machine-local
+SKIP_KEY_TOKENS = ("us_", "_us", "wall")
+
+
+def set_check_mode(enabled: bool) -> None:
+    _CHECK["enabled"] = bool(enabled)
+    CAPTURED.clear()
+
 
 def emit(name: str, us_per_call: float, derived: Dict) -> str:
     """CSV row per the harness contract: name,us_per_call,derived."""
@@ -18,8 +32,55 @@ def emit(name: str, us_per_call: float, derived: Dict) -> str:
 
 
 def save_json(name: str, payload) -> None:
+    if _CHECK["enabled"]:
+        CAPTURED[name] = payload
+        return
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
     (ARTIFACTS / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def _skip_key(key: str) -> bool:
+    k = key.lower()
+    return any(tok in k for tok in SKIP_KEY_TOKENS)
+
+
+def compare_to_baseline(name: str, fresh, baseline, rtol: float = 0.1,
+                        _path: str = "") -> List[str]:
+    """Recursively compare a fresh metrics payload against its recorded
+    baseline.  Numeric leaves must agree within ``rtol`` (wall-clock keys
+    are skipped); added or removed keys are reported too, so metric-schema
+    drift forces a deliberate baseline re-record.  Returns human-readable
+    problem strings (empty == regression-free)."""
+    problems: List[str] = []
+    loc = f"{name}{_path}"
+    if isinstance(baseline, dict) or isinstance(fresh, dict):
+        if not (isinstance(baseline, dict) and isinstance(fresh, dict)):
+            return [f"{loc}: structure changed "
+                    f"({type(baseline).__name__} -> {type(fresh).__name__})"]
+        for key in sorted(set(baseline) | set(fresh)):
+            if _skip_key(key):
+                continue
+            if key not in fresh:
+                problems.append(f"{loc}.{key}: missing from fresh run")
+            elif key not in baseline:
+                problems.append(f"{loc}.{key}: not in baseline "
+                                "(re-record artifacts/bench)")
+            else:
+                problems += compare_to_baseline(name, fresh[key],
+                                                baseline[key], rtol=rtol,
+                                                _path=f"{_path}.{key}")
+        return problems
+    if isinstance(baseline, bool) or isinstance(fresh, bool) \
+            or not isinstance(baseline, (int, float)) \
+            or not isinstance(fresh, (int, float)):
+        if fresh != baseline:
+            problems.append(f"{loc}: {baseline!r} -> {fresh!r}")
+        return problems
+    tol = rtol * max(abs(baseline), 1e-12)
+    if abs(fresh - baseline) > tol:
+        problems.append(
+            f"{loc}: {baseline!r} -> {fresh!r} (|Δ| > {rtol:.0%})")
+    return problems
 
 
 def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -2,7 +2,18 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract).
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME] [--check]
+
+``--check`` is regression mode: suites run as usual but their saved metric
+payloads are captured (baselines under ``artifacts/bench`` are NOT
+overwritten) and compared against those baselines with tolerances —
+wall-clock keys are skipped, everything else (saved-reads identities,
+hit-path byte-traffic counters, hit rates) must agree within ``--rtol``.
+Exit 1 on drift; with ``--only`` a missing baseline is also a failure
+(the explicit gate must not be vacuous), a full sweep skips suites whose
+baselines aren't committed.  Re-record a baseline by running the suite
+WITHOUT ``--check`` and committing the JSON (only
+``artifacts/bench/prefix_cache.json`` is git-tracked today).
 
 Suites (↔ paper artifact):
     latency_model     Appendix G / Fig. 7 (TPU re-derivation)
@@ -14,7 +25,8 @@ Suites (↔ paper artifact):
     pareto            Fig. 3 / Fig. 4 (accuracy vs budget frontiers)
     continuous_batching  serving: scheduler vs lockstep, shared-prefill fork
     prefix_cache      serving: cross-request radix prefix reuse (shared
-                      system prompt + multi-turn chat traces)
+                      system prompt, two-tier hot path, single-shot export
+                      gating, multi-turn chat traces)
 """
 from __future__ import annotations
 
@@ -29,8 +41,14 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="reduced step counts (CI mode)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="compare fresh metrics against artifacts/bench "
+                         "baselines instead of overwriting them")
+    ap.add_argument("--rtol", type=float, default=0.1,
+                    help="relative tolerance for --check comparisons")
     args = ap.parse_args(argv)
 
+    from benchmarks import common
     from benchmarks import (ablation_eviction, continuous_batching, cr_profile,
                             cr_sweep, data_efficiency, latency_model, pareto,
                             prefix_cache, roofline_table)
@@ -47,6 +65,7 @@ def main(argv=None) -> int:
     }
     if args.only:
         suites = {k: v for k, v in suites.items() if k == args.only}
+    common.set_check_mode(args.check)
     failed = []
     for name, fn in suites.items():
         t0 = time.time()
@@ -60,6 +79,35 @@ def main(argv=None) -> int:
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         return 1
+    if args.check:
+        import json
+        problems = []
+        compared = 0
+        for name, payload in sorted(common.CAPTURED.items()):
+            base_path = common.ARTIFACTS / f"{name}.json"
+            if not base_path.exists():
+                # with --only the caller explicitly asked to gate THIS
+                # suite: a vacuously-green gate is worse than a red one.
+                # A full sweep just skips suites with no committed baseline.
+                if args.only:
+                    problems.append(f"{name}: no baseline at {base_path} "
+                                    "(run without --check to record it)")
+                else:
+                    print(f"# check: no baseline for {name} — skipped",
+                          file=sys.stderr)
+                continue
+            baseline = json.loads(base_path.read_text())
+            problems += common.compare_to_baseline(name, payload, baseline,
+                                                   rtol=args.rtol)
+            compared += 1
+        if problems:
+            print("# CHECK FAILED:", file=sys.stderr)
+            for p in problems:
+                print(f"#   {p}", file=sys.stderr)
+            return 1
+        print(f"# check OK: {compared} suite payload(s) within "
+              f"rtol={args.rtol} of artifacts/bench baselines",
+              file=sys.stderr)
     return 0
 
 

@@ -283,6 +283,31 @@ class KVPolicy:
         exactly where the exporting request's prefill stood."""
         return cache.import_lane(snap, lane, axis=axis)
 
+    def import_slab(self, slab: Any, snap: Any, slot, *, axis: int = 0
+                    ) -> Any:
+        """Device-side variant of :meth:`import_prefix` for the hot-tier
+        snapshot slab: write a width-1 snapshot into storage slot ``slot``.
+
+        The slab is *storage*, not a decode cache — it is ``slots`` stacked
+        copies of whatever pytree :meth:`export_prefix` returns (see
+        :func:`repro.models.transformer.init_snapshot_slab`), so the default
+        is a pure ``dynamic_update_slice`` on the snapshot's own leaves.
+        Runs jitted with both operands device-resident: a deferred export
+        costs zero host↔device bytes.  A policy whose ``export_prefix``
+        snapshot is not a width-1-lane pytree must override this pair
+        alongside the prefix pair."""
+        return jax.tree_util.tree_map(
+            lambda d, s: jax.lax.dynamic_update_slice_in_dim(
+                d, s.astype(d.dtype), slot, axis=axis), slab, snap)
+
+    def export_slab(self, slab: Any, slot, *, axis: int = 0) -> Any:
+        """Device-side variant of :meth:`export_prefix`: fetch the snapshot
+        stored in slab slot ``slot`` (the zero-copy hot-hit path — the
+        result feeds :meth:`import_prefix` device-to-device)."""
+        return jax.tree_util.tree_map(
+            lambda d: jax.lax.dynamic_slice_in_dim(d, slot, 1, axis=axis),
+            slab)
+
     def reclaim_cache(self, cache: Any, reset_mask: jnp.ndarray,
                       fresh: Any, *, axis: int = 0) -> Any:
         """Reset lanes where ``reset_mask`` (B,) is True to the pristine

@@ -41,7 +41,19 @@ def main(argv=None):
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
-                    help="cross-request radix prefix cache budget (0 = off)")
+                    help="cross-request radix prefix cache host budget "
+                         "(0 = off)")
+    ap.add_argument("--prefix-cache-device-mb", type=float, default=0.0,
+                    help="device-resident hot-tier slab budget: hot hits "
+                         "import device-to-device (zero host bytes), exports "
+                         "defer host materialization to demotion (0 = cold "
+                         "tier only)")
+    ap.add_argument("--export-policy", default="always",
+                    choices=["always", "second-miss"],
+                    help="boundary export gating: 'always' exports every new "
+                         "chunk boundary; 'second-miss' exports only "
+                         "boundaries earlier traffic missed on (unshared "
+                         "prompts export nothing)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens to "
                          "every request (exercises the prefix cache)")
@@ -51,7 +63,9 @@ def main(argv=None):
     params = tfm.init_model(jax.random.PRNGKey(0), arch)
     policy = KVPolicyConfig(kind=args.policy, cr=args.cr, window=arch.dms.window)
     engine = Engine(arch, params, policy, use_kernel=args.use_kernel,
-                    chunk=args.chunk, prefix_cache_mb=args.prefix_cache_mb)
+                    chunk=args.chunk, prefix_cache_mb=args.prefix_cache_mb,
+                    prefix_cache_device_mb=args.prefix_cache_device_mb,
+                    export_policy=args.export_policy)
 
     rng = np.random.default_rng(0)
     shared = rng.integers(3, arch.vocab_size,

@@ -415,6 +415,58 @@ def import_lane_state(state: Dict[str, Any], snap: Dict[str, Any],
     return jax.tree_util.tree_map(f, state, snap, is_leaf=_is_policy_cache)
 
 
+def init_snapshot_slab(snap: Dict[str, Any], slots: int) -> Dict[str, Any]:
+    """Pre-allocate a device slab holding ``slots`` lane snapshots.
+
+    ``snap`` is an :func:`export_lane_state` exemplar (lane axis width 1,
+    position 1 on every leaf); the slab is the same pytree with the lane
+    axis widened to ``slots`` — pure storage for the prefix cache's hot
+    tier, written/read by :func:`store_lane_snapshot` /
+    :func:`fetch_lane_snapshot` without ever leaving the device."""
+
+    def f(a):
+        return jnp.zeros(a.shape[:1] + (int(slots),) + a.shape[2:], a.dtype)
+
+    return jax.tree_util.tree_map(f, snap)
+
+
+def store_lane_snapshot(slab: Dict[str, Any], snap: Dict[str, Any],
+                        slot) -> Dict[str, Any]:
+    """Write a width-1 snapshot into slab slot ``slot`` — the device-side
+    half of a *deferred* export: the freshly exported device snapshot is
+    copied device-to-device into the slab and only materialized to host if
+    the hot tier later demotes it.  PolicyCache nodes dispatch through
+    :meth:`KVPolicy.import_slab`; raw recurrent state updates generically.
+    ``slot`` may be a traced int32 scalar, so one jit covers every slot."""
+
+    def f(node, s):
+        if _is_policy_cache(node):
+            pol = policy_lib.get_policy(node.policy)
+            return dataclasses.replace(
+                node, cache=pol.import_slab(node.cache, s.cache, slot,
+                                            axis=1))
+        return jax.lax.dynamic_update_slice_in_dim(
+            node, s.astype(node.dtype), slot, axis=1)
+
+    return jax.tree_util.tree_map(f, slab, snap, is_leaf=_is_policy_cache)
+
+
+def fetch_lane_snapshot(slab: Dict[str, Any], slot) -> Dict[str, Any]:
+    """Read the snapshot in slab slot ``slot`` — the zero-copy hot-hit path:
+    the returned device pytree feeds :func:`import_lane_state` directly, so
+    a hot prefix hit moves no host↔device bytes at all (dispatches through
+    :meth:`KVPolicy.export_slab`)."""
+
+    def f(node):
+        if _is_policy_cache(node):
+            pol = policy_lib.get_policy(node.policy)
+            return dataclasses.replace(
+                node, cache=pol.export_slab(node.cache, slot, axis=1))
+        return jax.lax.dynamic_slice_in_dim(node, slot, 1, axis=1)
+
+    return jax.tree_util.tree_map(f, slab, is_leaf=_is_policy_cache)
+
+
 def lane_state_signature(state: Dict[str, Any]) -> Tuple:
     """Hashable shape signature of one lane's snapshot of ``state``.
 

@@ -59,7 +59,9 @@ class Engine:
 
     def __init__(self, arch: ArchConfig, params, policy: KVPolicyConfig,
                  use_kernel: bool = False, temperature: float = 0.0,
-                 chunk: int = 8, prefix_cache_mb: float = 0.0):
+                 chunk: int = 8, prefix_cache_mb: float = 0.0,
+                 prefix_cache_device_mb: float = 0.0,
+                 export_policy: str = "always"):
         self.arch = arch
         self.params = params
         self.policy = policy
@@ -67,9 +69,15 @@ class Engine:
         self.temperature = temperature
         self.chunk = chunk
         # engine-owned so it persists across Scheduler instances: every
-        # served prompt seeds prefix reuse for all later traffic
-        self.prefix_cache = (PrefixCache(int(prefix_cache_mb * 2 ** 20))
-                             if prefix_cache_mb > 0 else None)
+        # served prompt seeds prefix reuse for all later traffic.
+        # prefix_cache_device_mb buys the device-resident hot tier (zero-copy
+        # hit path, deferred exports); export_policy="second-miss" stops
+        # unshared prompts from exporting at all.
+        self.prefix_cache = (
+            PrefixCache(int(prefix_cache_mb * 2 ** 20),
+                        int(prefix_cache_device_mb * 2 ** 20),
+                        export_policy=export_policy)
+            if prefix_cache_mb > 0 or prefix_cache_device_mb > 0 else None)
         # jitted once per Engine: the compile cache survives across Scheduler
         # instances (per-request scheduling never retraces)
         self._chunk_jit = jax.jit(make_chunk_fn(

@@ -17,39 +17,82 @@ reuse exact: importing a cached L-token snapshot and chunk-prefilling only
 the suffix is bitwise-equal to a cold full prefill (pinned per policy in
 ``tests/test_prefix_cache.py``).
 
+Storage is **two-tier**, and both directions of the hot path are
+device-resident:
+
+* **Hot tier** — a pre-allocated per-signature **device slab** holding the K
+  most-recently-used snapshots (K = device budget / per-entry bytes, capped
+  at ``max_hot_slots`` per signature).  An
+  insert writes the lane's freshly exported device snapshot straight into a
+  slab slot (one jitted ``dynamic_update_slice`` — the export is *deferred*:
+  nothing is synced to host, the decode scan never stalls on PCIe).  A hot
+  hit fetches the slot and lane-inserts it into the arena device-to-device:
+  **zero host↔device snapshot bytes** on the whole hit path.
+* **Cold tier** — the host numpy LRU.  Eviction from the hot tier *demotes*:
+  only then is the deferred snapshot materialised to host (the one d2h copy
+  it will ever pay).  A cold hit *promotes* back into a slab slot (one h2d
+  copy) so repeats of that prefix go device-resident again.
+
+Every tier transition is metered (``h2d_bytes`` / ``d2h_bytes`` /
+``d2d_bytes``; small boundary-logits syncs land on ``aux_sync_bytes``), so
+``benchmarks/prefix_cache.py`` can assert the hit path's zero-copy claim
+from counters rather than trust.
+
+**Miss-driven exports** (``export_policy="second-miss"``): lookups record
+miss depths along the prompt's path in the radix tree; a boundary reports
+``want_export`` only once **two** lookups have asked for it — i.e. only
+after earlier traffic proved the prefix is shared.  Single-shot unshared
+prompts export *nothing* (the seed behaviour, ``"always"``, exported one
+O(arena) snapshot per prefill chunk).
+
 Mechanics:
 
 * **Entries** live at radix-tree nodes (edges are compressed token runs;
   insertion splits edges so every snapshot boundary is a node).  Each entry
-  holds the host-resident (numpy) snapshot, the boundary logits (predicting
-  token L — so a full-prompt hit can skip prefill *and* still sample token
-  0), and ``reads_cum``: the cumulative prefill ``reads_tokens`` a cold
-  prefill of this prefix costs, used to meter saved-vs-paid reads honestly.
+  holds the snapshot (a slab slot when hot, a host numpy pytree when cold),
+  the boundary logits (predicting token L — so a full-prompt hit can skip
+  prefill *and* still sample token 0), and ``reads_cum``: the cumulative
+  prefill ``reads_tokens`` a cold prefill of this prefix costs, used to
+  meter saved-vs-paid reads honestly.
 * **Lookup** walks the prompt and returns the deepest snapshot on its path;
-  hits refresh LRU recency.
-* **LRU byte budget**: entries account their true numpy bytes; inserting
-  past ``capacity_bytes`` evicts least-recently-used entries (and prunes
-  entry-less leaf nodes).  An over-budget snapshot is simply rejected — the
-  stream degrades to cold prefill, never to an error.
+  hits refresh LRU recency (hot and cold recency share one order).
+* **LRU byte budget**: cold entries account their true numpy bytes;
+  inserting past ``capacity_bytes`` evicts least-recently-used *cold*
+  entries (pruning entry-less nodes along the evicted path only, via parent
+  links).  A snapshot too large for every tier is simply rejected — the
+  stream degrades to cold prefill, never to an error.  Likewise a device
+  budget too small for even one snapshot just means the hot tier stays
+  empty: everything rides the cold tier as before.
 * **Shape signatures**: snapshots are only interchangeable between decode
   states with identical tree structure / leaf shapes / dtypes
   (:func:`repro.models.transformer.lane_state_signature`).  One PrefixCache
-  keeps one radix tree per signature, so an engine can safely share a cache
-  across schedulers with different ``max_len`` without cross-importing.
+  keeps one radix tree (and one device slab) per signature, so an engine can
+  safely share a cache across schedulers with different ``max_len`` without
+  cross-importing.
 """
 from __future__ import annotations
 
 import collections
 from dataclasses import dataclass
-from typing import Any, Dict, Iterator, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro.models import transformer as tfm
+
+EXPORT_POLICIES = ("always", "second-miss")
+
+#: ghost-path budget: miss-depth records are int32 token runs hanging off the
+#: radix tree; past this many recorded tokens per signature the records reset
+#: (forgetting miss history is always safe — it only delays future exports).
+MISS_RECORD_TOKENS = 1 << 16
+
 
 def snapshot_nbytes(snapshot: Any) -> int:
     """Host bytes of a snapshot pytree — shape-derived, so it works on
-    device arrays WITHOUT materializing them (the insert fast-reject path)."""
+    device arrays WITHOUT materializing them (the insert fast-reject path
+    and the deferred-export hot tier)."""
     return int(sum(int(a.size) * np.dtype(a.dtype).itemsize
                    for a in jax.tree_util.tree_leaves(snapshot)))
 
@@ -59,31 +102,66 @@ def to_host(tree: Any) -> Any:
     return jax.tree_util.tree_map(lambda a: np.asarray(a), jax.device_get(tree))
 
 
+def _is_device(a) -> bool:
+    return not isinstance(a, np.ndarray)
+
+
+# the hot-tier slab primitives.  Donation lets XLA update the slab in place
+# (no O(slab) copy per insert); CPU ignores donation, so gate it to keep
+# test logs clean.  The backend probe is LAZY — merely importing serving
+# modules must not initialize the jax platform (CUDA-after-fork, late
+# jax.config platform selection).
+_SLAB_FETCH = jax.jit(tfm.fetch_lane_snapshot)
+_SLAB_STORE_CACHE: list = []
+
+
+def _slab_store():
+    if not _SLAB_STORE_CACHE:
+        try:
+            donate = (0,) if jax.default_backend() in ("gpu", "tpu") else ()
+        except Exception:                             # pragma: no cover
+            donate = ()
+        _SLAB_STORE_CACHE.append(
+            jax.jit(tfm.store_lane_snapshot, donate_argnums=donate))
+    return _SLAB_STORE_CACHE[0]
+
+
 @dataclass
 class PrefixHit:
-    """A lookup result: the deepest cached boundary on the prompt's path."""
+    """A lookup result: the deepest cached boundary on the prompt's path.
+
+    ``snapshot`` is a device pytree for hot-tier hits (import it straight
+    into the arena — zero host bytes) and a host numpy pytree for cold hits
+    (the jitted import pays the one h2d copy)."""
 
     length: int                   # prefix tokens covered
-    snapshot: Any                 # host pytree, lane axis width 1
-    logits: np.ndarray            # (V,) logits predicting token ``length``
+    snapshot: Any                 # lane-axis-width-1 pytree (device or host)
+    logits: Any                   # (V,) logits predicting token ``length``
     reads_cum: float              # cold-prefill reads_tokens for this prefix
+    tier: str = "cold"            # which tier served this hit
 
 
 @dataclass(eq=False)          # identity hash: entries key the LRU dict
 class _Entry:
-    snapshot: Any
-    logits: np.ndarray
+    signature: Tuple
     reads_cum: float
-    nbytes: int
+    nbytes: int                   # snapshot + logits bytes (host-equivalent)
+    snap_nbytes: int              # snapshot bytes only (slab accounting)
+    tier: str = "cold"            # "hot" (slab slot) | "cold" (host numpy)
+    slot: int = -1                # hot-tier slab slot
+    snapshot: Any = None          # host pytree when cold, None when hot
+    logits: Any = None            # device row while deferred, numpy when cold
 
 
 class _Node:
-    __slots__ = ("edge", "children", "entry")
+    __slots__ = ("edge", "children", "entry", "parent", "misses")
 
-    def __init__(self, edge: np.ndarray):
+    def __init__(self, edge: np.ndarray, parent: Optional["_Node"] = None):
         self.edge = edge                       # tokens from parent to here
         self.children: Dict[int, _Node] = {}   # keyed by first edge token
         self.entry: Optional[_Entry] = None
+        self.parent = parent                   # None only at the root
+        self.misses = 0                        # lookups that wanted past here
 
 
 def _common_len(a: np.ndarray, b: np.ndarray) -> int:
@@ -92,8 +170,28 @@ def _common_len(a: np.ndarray, b: np.ndarray) -> int:
     return int(neq[0]) if len(neq) else n
 
 
+class _HotTier:
+    """Per-signature device slab: K pre-allocated snapshot slots.
+
+    The slab is one decode-snapshot-shaped pytree whose lane axis holds K
+    slots; store/fetch are the jitted device-side copies
+    (:func:`repro.models.transformer.store_lane_snapshot` /
+    :func:`fetch_lane_snapshot`, dispatching through
+    :meth:`KVPolicy.import_slab` / :meth:`export_slab`)."""
+
+    __slots__ = ("slab", "free", "used")
+
+    def __init__(self, exemplar_snap: Any, slots: int):
+        self.slab = tfm.init_snapshot_slab(exemplar_snap, slots)
+        self.free: List[int] = list(range(slots))
+        # hot-entry recency, least-recent first (the demotion order)
+        self.used: "collections.OrderedDict[_Entry, int]" = \
+            collections.OrderedDict()
+
+
 class PrefixCache:
-    """Radix tree of per-policy KV snapshots under an LRU byte budget.
+    """Radix tree of per-policy KV snapshots: device-slab hot tier over a
+    host LRU cold tier, under separate byte budgets.
 
     Thread-unsafe by design (the scheduler is single-threaded host code).
     Intended to be owned by the :class:`~repro.serving.engine.Engine` so it
@@ -101,22 +199,50 @@ class PrefixCache:
     *cross-request*: every served prompt seeds reuse for all later traffic.
     """
 
-    def __init__(self, capacity_bytes: int):
+    def __init__(self, capacity_bytes: int, device_capacity_bytes: int = 0,
+                 export_policy: str = "always", max_hot_slots: int = 32):
+        if export_policy not in EXPORT_POLICIES:
+            raise ValueError(f"export_policy {export_policy!r} not in "
+                             f"{EXPORT_POLICIES}")
         self.capacity_bytes = int(capacity_bytes)
+        self.device_capacity_bytes = int(device_capacity_bytes)
+        self.export_policy = export_policy
+        #: per-signature slab slot cap: bounds eager device allocation and
+        #: keeps budget available for later signatures (see _ensure_hot)
+        self.max_hot_slots = int(max_hot_slots)
         self._roots: Dict[Tuple, _Node] = {}   # one tree per shape signature
+        self._hot: Dict[Tuple, Optional[_HotTier]] = {}   # None = can't fit
+        self._device_bytes = 0                 # slab bytes actually allocated
         # recency order: least-recently-used first; maps entry -> its node so
-        # eviction pops in O(1) instead of scanning the whole tree
+        # eviction pops in O(1) instead of scanning the whole tree.  Hot and
+        # cold entries share one recency order (a demoted entry keeps its
+        # true age); budget eviction skips hot entries (the slab is not host
+        # memory), hot-slot demotion uses the per-tier order in _HotTier.
         self._lru: "collections.OrderedDict[_Entry, _Node]" = \
             collections.OrderedDict()
-        self.total_bytes = 0
+        self.total_bytes = 0                   # cold (host) bytes only
+        self._miss_tokens: Dict[Tuple, int] = {}
         # stats — surfaced by launch/serve and the prefix_cache benchmark
         self.lookups = 0
         self.hits = 0
+        self.hot_hits = 0
         self.hit_tokens = 0
         self.lookup_tokens = 0
         self.inserts = 0
+        self.hot_inserts = 0
         self.insert_rejects = 0
         self.evictions = 0
+        self.promotions = 0
+        self.demotions = 0
+        # byte-traffic counters: the benchmark's zero-copy assertions read
+        # these instead of trusting the implementation
+        self.h2d_bytes = 0          # snapshot bytes host→device (promotions,
+        #                             and cold-hit imports shipped by jit)
+        self.d2h_bytes = 0          # snapshot bytes device→host (demotions,
+        #                             immediate materialization w/o hot tier)
+        self.d2d_bytes = 0          # device-resident slab stores + fetches
+        self.aux_sync_bytes = 0     # small boundary-logits rows synced on
+        #                             full-prompt hot hits (O(V), not O(arena))
 
     # -- public ------------------------------------------------------------
 
@@ -142,7 +268,14 @@ class PrefixCache:
         """Deepest cached boundary along ``prompt``; refreshes its recency.
 
         Never returns a boundary past ``len(prompt)`` (a hit covering the
-        whole prompt is valid: its stored logits stand in for prefill)."""
+        whole prompt is valid: its stored logits stand in for prefill).
+
+        Under ``export_policy="second-miss"`` a lookup also *records* the
+        prompt's path as a miss depth — the signal ``want_export`` later
+        consults — so this is where "earlier traffic asked for this
+        boundary" gets written down.  A hot hit hands back the device-slab
+        slice (zero host↔device snapshot bytes); a cold hit promotes the
+        entry into the slab (one h2d copy) when a slab exists."""
         prompt = np.asarray(prompt)
         self.lookups += 1
         self.lookup_tokens += len(prompt)
@@ -150,51 +283,120 @@ class PrefixCache:
         for depth, node in self._walk(signature, prompt):
             if node.entry is not None and depth > 0:
                 best = (depth, node.entry)
+        if self.export_policy == "second-miss" and (
+                best is None or best[0] < len(prompt)):
+            self._record_miss(signature, prompt)
         if best is None:
             return None
         depth, entry = best
         self._lru.move_to_end(entry)
         self.hits += 1
         self.hit_tokens += depth
+        if entry.tier == "cold":
+            self._promote(entry)
+        if entry.tier == "hot":
+            hot = self._hot[signature]
+            hot.used.move_to_end(entry)
+            self.hot_hits += 1
+            snap = _SLAB_FETCH(hot.slab, np.int32(entry.slot))
+            self.d2d_bytes += entry.snap_nbytes
+            if depth == len(prompt) and _is_device(entry.logits):
+                # full-prompt hit: the caller will materialize the boundary
+                # logits row to sample token 0 — O(V), not O(arena)
+                self.aux_sync_bytes += snapshot_nbytes(entry.logits)
+            return PrefixHit(length=depth, snapshot=snap, logits=entry.logits,
+                             reads_cum=entry.reads_cum, tier="hot")
+        # cold hit without a usable slab: the caller's jitted import ships
+        # the host snapshot up — that copy is this hit's h2d traffic
+        self.h2d_bytes += entry.snap_nbytes
         return PrefixHit(length=depth, snapshot=entry.snapshot,
-                         logits=entry.logits, reads_cum=entry.reads_cum)
+                         logits=entry.logits, reads_cum=entry.reads_cum,
+                         tier="cold")
 
     def covered(self, signature: Tuple, tokens: np.ndarray) -> int:
         """Deepest cached boundary along ``tokens`` WITHOUT touching stats or
-        recency — the scheduler's "is exporting this boundary useful?" probe."""
+        recency."""
         best = 0
         for depth, node in self._walk(signature, np.asarray(tokens)):
             if node.entry is not None:
                 best = depth
         return best
 
+    def can_store(self, nbytes: int) -> bool:
+        """Could a snapshot of ``nbytes`` ever be stored in either tier?
+        Shape-only — the scheduler's "skip the export outright" fast gate."""
+        return nbytes <= max(self.capacity_bytes, self.device_capacity_bytes)
+
+    def want_export(self, signature: Tuple, tokens: np.ndarray) -> bool:
+        """Should the scheduler export the boundary ``len(tokens)``?
+
+        One radix descent: False if that exact boundary already holds an
+        entry; under ``"second-miss"`` additionally require that at least
+        two lookups asked for this prefix (``misses >= 2`` — the requesting
+        lookup itself contributes one, so the gate opens exactly when
+        *earlier* traffic wanted it too)."""
+        tokens = np.asarray(tokens)
+        node, exact = self._descend_to(signature, tokens)
+        if exact and node.entry is not None:
+            return False                       # boundary already cached
+        if self.export_policy == "always":
+            return True
+        return node is not None and node.misses >= 2
+
     def insert(self, signature: Tuple, tokens: np.ndarray, snapshot: Any,
-               logits: np.ndarray, reads_cum: float) -> bool:
+               logits: Any, reads_cum: float) -> bool:
         """Store a snapshot for the boundary ``len(tokens)``.
 
-        No-op if that exact boundary already holds an entry.  Evicts LRU
-        entries to fit; rejects (False) a snapshot larger than the whole
-        budget — the caller falls back to cold prefill, never errors."""
+        ``snapshot`` may be a *device* pytree: with a hot tier it is slotted
+        into the slab as-is (deferred export — no host sync; materialization
+        happens lazily on demotion), otherwise it is materialized to host
+        now.  No-op if that exact boundary already holds an entry.  Evicts
+        LRU cold entries to fit; rejects (False) a snapshot larger than
+        every tier — the caller falls back to cold prefill, never errors.
+        One radix descent total (the coverage probe is folded into
+        :meth:`_node_for`)."""
         tokens = np.asarray(tokens, np.int32)
         if len(tokens) == 0:
             return False
-        if self.covered(signature, tokens) == len(tokens):
-            return False                   # first writer wins (same prefix)
         # both rejects are shape-only: no device sync / host copy wasted
-        nbytes = snapshot_nbytes(snapshot) + int(np.asarray(logits).nbytes)
-        if nbytes > self.capacity_bytes:
+        snap_nb = snapshot_nbytes(snapshot)
+        nbytes = snap_nb + snapshot_nbytes(logits)
+        hot = self._ensure_hot(signature, snapshot, nbytes)
+        if hot is None and nbytes > self.capacity_bytes:
             self.insert_rejects += 1
             return False
-        snapshot = to_host(snapshot)
         node = self._node_for(signature, tokens)
-        # np.array (not asarray): own the boundary row, don't pin the whole
-        # per-tick (B, V) logits buffer alive via a view
-        node.entry = _Entry(snapshot=snapshot, logits=np.array(logits),
-                            reads_cum=float(reads_cum), nbytes=nbytes)
-        self._lru[node.entry] = node
+        if node.entry is not None:
+            return False                   # first writer wins (same prefix)
+        entry = _Entry(signature=signature, reads_cum=float(reads_cum),
+                       nbytes=nbytes, snap_nbytes=snap_nb)
+        if hot is not None:
+            # attach the entry BEFORE acquiring a slot: a full slab demotes
+            # its LRU occupant, whose eviction chain prunes dead radix paths
+            # — the fresh (still entry-less) node must not look dead, and a
+            # hot-tagged entry is invisible to the host-budget eviction
+            entry.tier, entry.logits = "hot", logits
+            node.entry = entry
+            self._lru[entry] = node
+            slot = self._acquire_slot(signature, hot)
+            hot.slab = _slab_store()(hot.slab, snapshot, np.int32(slot))
+            self.d2d_bytes += snap_nb
+            entry.slot = slot
+            hot.used[entry] = slot
+            self.hot_inserts += 1
+            self.inserts += 1
+            return True
+        if any(_is_device(a) for a in jax.tree_util.tree_leaves(snapshot)):
+            self.d2h_bytes += snap_nb          # immediate materialization
+        entry.snapshot = to_host(snapshot)
+        # np.array (not asarray): own the boundary row, don't pin the
+        # whole per-tick (B, V) logits buffer alive via a view
+        entry.logits = np.array(np.asarray(logits))
         self.total_bytes += nbytes
+        node.entry = entry
+        self._lru[entry] = node
         self.inserts += 1
-        self._evict_to_fit(keep=node.entry)
+        self._evict_to_fit(keep=entry)
         return True
 
     def touch(self, signature: Tuple, tokens: np.ndarray) -> None:
@@ -204,81 +406,245 @@ class PrefixCache:
         for _, node in self._walk(signature, np.asarray(tokens)):
             if node.entry is not None:
                 self._lru.move_to_end(node.entry)
+                if node.entry.tier == "hot":
+                    self._hot[node.entry.signature].used.move_to_end(node.entry)
 
     def stats(self) -> Dict[str, Any]:
+        hot_entries = sum(len(h.used) for h in self._hot.values()
+                          if h is not None)
         return {
             "lookups": self.lookups,
             "hits": self.hits,
+            "hot_hits": self.hot_hits,
             "hit_rate": self.hits / max(self.lookups, 1),
             "hit_tokens": self.hit_tokens,
             "lookup_tokens": self.lookup_tokens,
             "token_hit_rate": self.hit_tokens / max(self.lookup_tokens, 1),
             "inserts": self.inserts,
+            "hot_inserts": self.hot_inserts,
             "insert_rejects": self.insert_rejects,
             "evictions": self.evictions,
+            "promotions": self.promotions,
+            "demotions": self.demotions,
             "entries": self._count_entries(),
+            "hot_entries": hot_entries,
             "bytes": self.total_bytes,
             "capacity_bytes": self.capacity_bytes,
+            "device_bytes": self._device_bytes,
+            "device_capacity_bytes": self.device_capacity_bytes,
+            "h2d_bytes": self.h2d_bytes,
+            "d2h_bytes": self.d2h_bytes,
+            "d2d_bytes": self.d2d_bytes,
+            "aux_sync_bytes": self.aux_sync_bytes,
         }
+
+    def traffic(self) -> Dict[str, int]:
+        """Just the byte-traffic counters — benchmark delta probes."""
+        return {"h2d_bytes": self.h2d_bytes, "d2h_bytes": self.d2h_bytes,
+                "d2d_bytes": self.d2d_bytes,
+                "aux_sync_bytes": self.aux_sync_bytes}
+
+    # -- hot tier ----------------------------------------------------------
+
+    def _ensure_hot(self, signature: Tuple, snapshot: Any,
+                    entry_nb: int) -> Optional[_HotTier]:
+        """The signature's slab, allocating it on first use: K slots from
+        the remaining device budget, capped at ``max_hot_slots`` so one
+        arena geometry can't hog the budget an engine-shared cache needs
+        for later signatures.  ``entry_nb`` includes the O(V) boundary
+        logits row each hot entry keeps device-resident alongside its slab
+        slot, so device residency stays inside ``device_capacity_bytes``.
+        None when no slot can ever fit — the degraded-to-cold path, never
+        an error."""
+        if signature in self._hot:
+            return self._hot[signature]
+        slots = 0
+        if entry_nb > 0:
+            slots = min(
+                (self.device_capacity_bytes - self._device_bytes) // entry_nb,
+                self.max_hot_slots)
+        if slots <= 0:
+            self._hot[signature] = None
+            return None
+        tier = _HotTier(snapshot, int(slots))
+        self._hot[signature] = tier
+        self._device_bytes += int(slots) * entry_nb
+        return tier
+
+    def _acquire_slot(self, signature: Tuple, hot: _HotTier) -> int:
+        """A free slab slot, demoting the least-recently-used hot entry
+        (device→host, the deferred export's one materialization) if full."""
+        if hot.free:
+            return hot.free.pop()
+        victim = next(iter(hot.used))          # hot-LRU head
+        self._demote(victim, self._lru[victim])
+        return hot.free.pop()
+
+    def _promote(self, entry: _Entry) -> None:
+        """Cold hit → hot: copy the host snapshot into a slab slot (one h2d)
+        so repeats of this prefix go fully device-resident."""
+        hot = self._hot.get(entry.signature)
+        if hot is None:
+            return
+        slot = self._acquire_slot(entry.signature, hot)
+        hot.slab = _slab_store()(hot.slab, entry.snapshot, np.int32(slot))
+        self.h2d_bytes += entry.snap_nbytes
+        self.total_bytes -= entry.nbytes       # leaves the host tier
+        entry.tier, entry.slot, entry.snapshot = "hot", slot, None
+        hot.used[entry] = slot
+        hot.used.move_to_end(entry)            # it was just used
+        self.promotions += 1
+
+    def _demote(self, entry: _Entry, node: _Node) -> None:
+        """Hot-tier eviction: materialize the deferred snapshot to host (the
+        one d2h copy) and hand the entry to the cold LRU; an entry too large
+        for the host budget is dropped outright."""
+        hot = self._hot[entry.signature]
+        snap = _SLAB_FETCH(hot.slab, np.int32(entry.slot))
+        entry.snapshot = to_host(snap)
+        self.d2h_bytes += entry.snap_nbytes
+        if _is_device(entry.logits):
+            self.aux_sync_bytes += snapshot_nbytes(entry.logits)
+        entry.logits = np.array(np.asarray(entry.logits))
+        hot.free.append(entry.slot)
+        del hot.used[entry]
+        entry.tier, entry.slot = "cold", -1
+        self.total_bytes += entry.nbytes
+        self.demotions += 1
+        if entry.nbytes > self.capacity_bytes:
+            self._drop(entry, node)
+        else:
+            self._evict_to_fit()
 
     # -- internals ----------------------------------------------------------
 
-    def _node_for(self, signature: Tuple, tokens: np.ndarray) -> _Node:
-        """Walk/extend/split the tree so ``tokens`` ends exactly at a node."""
+    def _descend_to(self, signature: Tuple, tokens: np.ndarray
+                    ) -> Tuple[Optional[_Node], bool]:
+        """Walk to position ``len(tokens)``: returns (node, exact) where
+        ``node`` covers that position (None if the path leaves the tree) and
+        ``exact`` means the position lands on the node itself rather than
+        inside its edge.  A mid-edge node's ``misses`` still counts every
+        recorded prompt through it, which is what ``want_export`` needs."""
+        node = self._roots.get(signature)
+        if node is None:
+            return None, False
+        depth, n = 0, len(tokens)
+        while depth < n:
+            rest = tokens[depth:]
+            child = node.children.get(int(rest[0]))
+            if child is None:
+                return None, False
+            m = _common_len(child.edge, rest)
+            if m < len(child.edge):
+                if depth + m == n:             # ends inside the edge
+                    return child, False
+                return None, False             # diverges inside the edge
+            node = child
+            depth += len(child.edge)
+        return node, True
+
+    def _record_miss(self, signature: Tuple, prompt: np.ndarray) -> None:
+        """Write the missed prompt's path into the tree (ghost nodes are just
+        token runs — no snapshots) and bump ``misses`` along it.  Bounded:
+        past :data:`MISS_RECORD_TOKENS` recorded tokens the signature's miss
+        history resets (only ever delays future exports)."""
+        used = self._miss_tokens.get(signature, 0)
+        if used > MISS_RECORD_TOKENS:
+            self._reset_misses(signature)
+            used = 0
+        self._miss_tokens[signature] = used + len(prompt)
+        self._node_for(signature, np.asarray(prompt, np.int32),
+                       bump_misses=True)
+
+    def _reset_misses(self, signature: Tuple) -> None:
+        """Clear miss history: zero counters and prune ghost-only chains.
+        One full-tree pass, amortised over MISS_RECORD_TOKENS lookups."""
+        root = self._roots.get(signature)
+        if root is None:
+            return
+        stack, order = [root], []
+        while stack:
+            node = stack.pop()
+            node.misses = 0
+            order.append(node)
+            stack.extend(node.children.values())
+        for node in reversed(order):
+            self._prune_path(node)
+        self._miss_tokens[signature] = 0
+
+    def _node_for(self, signature: Tuple, tokens: np.ndarray,
+                  bump_misses: bool = False) -> _Node:
+        """Walk/extend/split the tree so ``tokens`` ends exactly at a node —
+        ONE descent, also serving as insert's coverage probe (the returned
+        node's ``entry`` says whether the boundary is already cached).  With
+        ``bump_misses`` every node on the path counts one more lookup that
+        wanted it (edge splits inherit the pass-through count)."""
         root = self._roots.setdefault(signature,
                                       _Node(np.empty((0,), np.int32)))
         node, depth = root, 0
+        if bump_misses:
+            root.misses += 1
         while depth < len(tokens):
             rest = tokens[depth:]
             child = node.children.get(int(rest[0]))
             if child is None:
-                child = _Node(np.array(rest, np.int32))
+                child = _Node(np.array(rest, np.int32), parent=node)
                 node.children[int(rest[0])] = child
+                if bump_misses:
+                    child.misses += 1
                 return child
             m = _common_len(child.edge, rest)
             if m < len(child.edge):
-                # split the edge at m: node -> mid -> child
-                mid = _Node(np.array(child.edge[:m], np.int32))
+                # split the edge at m: node -> mid -> child; mid inherits the
+                # pass-through miss count (every recorded path through child
+                # also passed mid)
+                mid = _Node(np.array(child.edge[:m], np.int32), parent=node)
+                mid.misses = child.misses
                 child.edge = np.array(child.edge[m:], np.int32)
                 mid.children[int(child.edge[0])] = child
+                child.parent = mid
                 node.children[int(rest[0])] = mid
                 child = mid
             node = child
             depth += m
+            if bump_misses:
+                node.misses += 1
         return node
 
     def _count_entries(self) -> int:
         return len(self._lru)
 
-    def _evict_to_fit(self, keep: Optional[_Entry] = None) -> None:
-        evicted = False
-        while self.total_bytes > self.capacity_bytes and self._lru:
-            entry, node = next(iter(self._lru.items()))   # LRU head
-            if entry is keep:
-                if len(self._lru) == 1:
-                    break                  # only the fresh insert left
-                self._lru.move_to_end(entry)
-                continue
-            del self._lru[entry]
-            node.entry = None
-            self.total_bytes -= entry.nbytes
-            self.evictions += 1
-            evicted = True
-        if evicted:
-            self._prune()
+    def _drop(self, entry: _Entry, node: _Node) -> None:
+        """Remove a cold entry entirely and prune its now-dead path."""
+        del self._lru[entry]
+        node.entry = None
+        self.total_bytes -= entry.nbytes
+        self.evictions += 1
+        self._prune_path(node)
 
-    def _prune(self) -> None:
-        """Drop entry-less leaf chains so dead paths don't accumulate: one
-        pass over each tree, children before parents (reversed BFS order)."""
-        for root in self._roots.values():
-            order = [(None, None, root)]
-            i = 0
-            while i < len(order):
-                _, _, node = order[i]
-                for key, c in node.children.items():
-                    order.append((node, key, c))
-                i += 1
-            for parent, key, node in reversed(order):
-                if parent is not None and node.entry is None \
-                        and not node.children:
-                    del parent.children[key]
+    def _evict_to_fit(self, keep: Optional[_Entry] = None) -> None:
+        """Evict least-recently-used COLD entries until the host budget
+        holds.  Hot entries are skipped — the slab is device memory with its
+        own (pre-allocated) budget; they only hit the host ledger on
+        demotion."""
+        while self.total_bytes > self.capacity_bytes:
+            victim = None
+            for entry in self._lru:            # LRU head first
+                if entry.tier == "cold" and entry is not keep:
+                    victim = entry
+                    break
+            if victim is None:
+                break                  # only hot entries / the fresh insert
+            self._drop(victim, self._lru[victim])
+
+    def _prune_path(self, node: _Node) -> None:
+        """Drop entry-less childless nodes walking UP from ``node`` via
+        parent links — O(depth), not O(whole tree).  Ghost nodes carrying
+        live miss records (``misses > 0``) survive until the miss-history
+        reset; the root always survives."""
+        while (node.parent is not None and node.entry is None
+               and not node.children and node.misses == 0):
+            parent = node.parent
+            del parent.children[int(node.edge[0])]
+            node.parent = None
+            node = parent

@@ -28,9 +28,13 @@ replaces the lockstep fixed batch with a real scheduler:
 * **Cross-request prefix reuse.**  With a
   :class:`~repro.serving.prefix_cache.PrefixCache` attached, admission looks
   up the longest cached prefix of the prompt, imports its snapshot into the
-  lane (:meth:`KVPolicy.import_prefix`) and chunk-prefills only the suffix;
-  prefill exports a snapshot at each new chunk boundary, and EOS reclamation
-  offers the finished prompt's prefix chain back to the tree (LRU refresh).
+  lane (:meth:`KVPolicy.import_prefix`) — device-to-device when the boundary
+  sits in the cache's hot tier — and chunk-prefills only the suffix; prefill
+  offers a snapshot at chunk boundaries the cache's export policy asks for
+  (all of them under ``"always"``, only prefixes earlier traffic missed on
+  under ``"second-miss"``), deferred into the device slab when one exists;
+  EOS reclamation offers the finished prompt's prefix chain back to the
+  tree (LRU refresh).
   A full-prompt hit skips prefill entirely — the cached boundary logits
   stand in for the hold-state sample.
 * **Honest per-request metering.**  Each request owns two
@@ -51,6 +55,7 @@ import numpy as np
 from repro.core import policy as policy_lib
 from repro.core.hyperscale import BudgetMeter
 from repro.models import transformer as tfm
+from repro.serving import prefix_cache as prefix_cache_lib
 from repro.serving.prefix_cache import PrefixCache
 
 
@@ -196,12 +201,13 @@ class Scheduler:
         self.state = tfm.init_decode_state(arch, num_lanes, max_len, policy)
         self.signature = tfm.lane_state_signature(self.state)
         # per-boundary snapshot bytes are shape-derived and constant for this
-        # arena; knowing them up front lets _export_prefix skip the jitted
-        # export + device→host copy entirely when no snapshot can ever fit
-        self._snap_nbytes = int(sum(
-            (int(a.size) // int(a.shape[1])) * np.dtype(a.dtype).itemsize
-            for a in jax.tree_util.tree_leaves(self.state))) \
-            + int(arch.padded_vocab) * 4                  # + fp32 logits row
+        # arena (every state leaf is lane-proportional, so whole-state bytes
+        # divide exactly by num_lanes); knowing them up front lets
+        # _export_prefix skip the jitted export entirely when no snapshot
+        # can ever fit in either tier
+        self._snap_nbytes = (prefix_cache_lib.snapshot_nbytes(self.state)
+                             // num_lanes
+                             + int(arch.padded_vocab) * 4)  # + fp32 logits row
         self.peak_bytes = float(policy_lib.state_peak_bytes(self.state))
         self.rng = jax.random.PRNGKey(seed)
         self._host_rng = jax.random.PRNGKey(seed ^ 0x5EED0)
@@ -291,10 +297,14 @@ class Scheduler:
 
     def _import_prefix(self, r: _ReqState, lane: int) -> None:
         """Longest-cached-prefix import: the lane resumes at token boundary L
-        and chunked prefill feeds only ``prompt[L:]``.  The avoided prefill
-        reads go on the request's *saved* axis (``kv_reads`` stays the honest
-        paid integral); a full-prompt hit skips prefill entirely, with the
-        cached boundary logits standing in as the hold-state sample."""
+        and chunked prefill feeds only ``prompt[L:]``.  A hot-tier hit hands
+        back a device-resident slab slice, so the jitted lane insert below is
+        device-to-device — zero host↔device snapshot bytes; a cold hit ships
+        its host snapshot up through the same jit (and promotes).  The
+        avoided prefill reads go on the request's *saved* axis (``kv_reads``
+        stays the honest paid integral); a full-prompt hit skips prefill
+        entirely, with the cached boundary logits standing in as the
+        hold-state sample."""
         if self.prefix_cache is None:
             return
         hit = self.prefix_cache.lookup(self.signature, r.req.prompt)
@@ -311,16 +321,16 @@ class Scheduler:
     def _want_prefix_export(self, r: _ReqState) -> bool:
         """Gate the per-chunk snapshot export on pure host checks, so the
         skip paths (no cache, over-budget snapshot, boundary already in the
-        tree) cost no device sync at all."""
+        tree, no earlier traffic asked under ``second-miss``) cost no device
+        sync at all — one radix descent total (``want_export``)."""
         if self.prefix_cache is None:
             return False
-        if self._snap_nbytes > self.prefix_cache.capacity_bytes:
+        if not self.prefix_cache.can_store(self._snap_nbytes):
             return False                   # can never fit: skip the export
         prefix = r.req.prompt[:r.consumed]
-        return self.prefix_cache.covered(self.signature, prefix) != r.consumed
+        return self.prefix_cache.want_export(self.signature, prefix)
 
-    def _export_prefix(self, r: _ReqState, lane: int,
-                       logits: np.ndarray) -> None:
+    def _export_prefix(self, r: _ReqState, lane: int, logits) -> None:
         """Offer the just-prefilled boundary ``prompt[:consumed]`` to the
         radix tree.  ``reads_cum`` is what a cold prefill of this prefix
         reads — the request's own paid prefill reads plus whatever its own
@@ -328,12 +338,15 @@ class Scheduler:
         on hits stay honest).  ``logits`` predict the boundary token, letting
         a later full-prompt hit skip prefill entirely.
 
-        Each export is one jitted lane slice + device→host copy of the
-        whole per-lane arena (snapshots are complete states, O(arena) bytes
-        regardless of boundary depth) — the price of exact mid-prompt reuse
-        for evicting policies.  The LRU byte budget bounds what unshared
-        prompts can occupy; coarser boundary policies (stride > chunk,
-        promote-on-second-miss) are a ROADMAP item."""
+        The export is *deferred*: one jitted lane slice hands the cache a
+        device snapshot (and an unsynced device logits row).  With a hot
+        tier the snapshot goes straight into the device slab — zero
+        host↔device bytes, no stall of the decode scan — and is only
+        materialized to host if the hot tier later demotes it.  Without a
+        hot tier the cache materializes immediately (the seed behaviour).
+        ``second-miss`` export gating (see :meth:`_want_prefix_export`)
+        bounds how often this O(arena) copy happens at all: cold unshared
+        prompts export nothing."""
         prefix = r.req.prompt[:r.consumed]
         snap = self._export_jit(self.state, jnp.int32(lane))
         reads_cum = r.prefill_meter.kv_reads_saved + r.prefill_meter.kv_reads
@@ -447,9 +460,9 @@ class Scheduler:
                     ll = np.asarray(last_logits)
                 r.hold_logits = ll[lane].copy()
             if self._want_prefix_export(r):
-                if ll is None:
-                    ll = np.asarray(last_logits)
-                self._export_prefix(r, lane, ll[lane])
+                # deferred export: the device logits row rides along unsynced
+                # (ll materialization above is only for prefill completion)
+                self._export_prefix(r, lane, last_logits[lane])
 
         # collect emitted tokens; EOS / budget exhaustion finishes chains
         for lane in range(b):

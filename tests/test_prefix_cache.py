@@ -1,14 +1,22 @@
-"""Cross-request radix prefix cache: exactness, radix/LRU mechanics, and
-honest saved-vs-paid metering.
+"""Cross-request radix prefix cache: exactness, radix/LRU mechanics, the
+two-tier (device slab / host LRU) machinery, and honest saved-vs-paid
+metering.
 
 Acceptance criteria pinned here:
 * for EVERY registered policy, importing a cached L-token prefix snapshot and
   chunk-prefilling only the suffix produces step-0 logits bitwise-equal to a
   cold full prefill (the compressed state at a boundary is complete:
-  pending eviction rings, score accumulators, page metadata included),
+  pending eviction rings, score accumulators, page metadata included) —
+  through BOTH tiers: cold-only and with the device-resident hot slab,
+* hot-hit / demote-then-cold-hit / promote round-trips are bitwise-equal to
+  cold prefill per policy, and hot hits move zero host↔device snapshot
+  bytes (asserted from the cache's traffic counters),
+* ``export_policy="second-miss"`` exports exactly the boundaries a repeated
+  prefix asked for — and nothing at all on single-shot unshared traffic,
 * a full-prompt hit skips prefill entirely and still generates identically,
 * eviction under a tiny byte budget falls back to cold prefill correctly
-  (same outputs, zero saved reads),
+  (same outputs, zero saved reads), and a device slab too small for one
+  snapshot degrades to the cold tier — never an error,
 * per-request meters stay honest: paid + saved == what a cold serve reads.
 """
 import jax
@@ -42,13 +50,16 @@ def _serve_one(eng, prompt, max_new, max_len):
 # -- the tentpole acceptance: bitwise equivalence per policy ----------------
 
 
+@pytest.mark.parametrize("device_mb", [0, 64], ids=["cold-tier", "hot-tier"])
 @pytest.mark.parametrize("kind", sorted(available_policies()))
 def test_prefix_import_suffix_prefill_bitwise_equals_cold(tiny_arch,
-                                                          tiny_params, kind):
+                                                          tiny_params, kind,
+                                                          device_mb):
     """Serve A = prefix(16) + suffix_a, then B = prefix(16) + suffix_b warm.
     B must hit the chunk-aligned 16-token boundary A exported, and generate
     EXACTLY what a cold serve of B generates — for every policy, including
-    the evicting ones whose mid-prompt state is not a truncation."""
+    the evicting ones whose mid-prompt state is not a truncation; through
+    both the host cold tier and the device-slab hot tier."""
     t_pre, max_new = 16, 5
     prefix = _prompt(t_pre, seed=1, vocab=tiny_arch.vocab_size)
     pa = np.concatenate([prefix, _prompt(7, seed=2, vocab=tiny_arch.vocab_size)])
@@ -56,10 +67,16 @@ def test_prefix_import_suffix_prefill_bitwise_equals_cold(tiny_arch,
     cfg = _policy_cfg(kind, tiny_arch.dms.window)
     max_len = len(pb) + max_new
 
-    warm = Engine(tiny_arch, tiny_params, cfg, chunk=8, prefix_cache_mb=64)
+    warm = Engine(tiny_arch, tiny_params, cfg, chunk=8, prefix_cache_mb=64,
+                  prefix_cache_device_mb=device_mb)
     ra = _serve_one(warm, pa, max_new, max_len)
     rb = _serve_one(warm, pb, max_new, max_len)
     assert rb.prefill_meter.kv_reads_saved > 0, kind       # actually hit
+    if device_mb:
+        st = warm.prefix_cache.stats()
+        assert st["hot_hits"] > 0, kind                    # via the slab
+        # hot path is device-resident: zero host↔device snapshot bytes
+        assert st["h2d_bytes"] == 0 and st["d2h_bytes"] == 0, (kind, st)
 
     cold = Engine(tiny_arch, tiny_params, cfg, chunk=8)
     ca = _serve_one(cold, pa, max_new, max_len)
@@ -72,11 +89,13 @@ def test_prefix_import_suffix_prefill_bitwise_equals_cold(tiny_arch,
         == pytest.approx(cb.prefill_meter.kv_reads), kind
 
 
+@pytest.mark.parametrize("device_mb", [0, 64], ids=["cold-tier", "hot-tier"])
 @pytest.mark.parametrize("kind", sorted(available_policies()))
 def test_prefix_import_state_bitwise_equals_cold_state(tiny_arch, tiny_params,
-                                                       kind):
+                                                       kind, device_mb):
     """Stronger than logits: after the suffix prefill, EVERY leaf of the
-    imported lane's decode state equals the cold-prefill state bitwise."""
+    imported lane's decode state equals the cold-prefill state bitwise —
+    whether the snapshot came back from the host tier or the device slab."""
     t_pre = 16
     prefix = _prompt(t_pre, seed=4, vocab=tiny_arch.vocab_size)
     pa = np.concatenate([prefix, _prompt(5, seed=5, vocab=tiny_arch.vocab_size)])
@@ -93,10 +112,13 @@ def test_prefix_import_state_bitwise_equals_cold_state(tiny_arch, tiny_params,
             sched._tick(results)
         return sched.state
 
-    warm = Engine(tiny_arch, tiny_params, cfg, chunk=8, prefix_cache_mb=64)
+    warm = Engine(tiny_arch, tiny_params, cfg, chunk=8, prefix_cache_mb=64,
+                  prefix_cache_device_mb=device_mb)
     _serve_one(warm, pa, 4, max_len)                      # seeds the tree
     got = state_after_prefill(warm, pb)
     assert warm.prefix_cache.hits > 0, kind
+    if device_mb:
+        assert warm.prefix_cache.hot_hits > 0, kind
 
     ref = state_after_prefill(Engine(tiny_arch, tiny_params, cfg, chunk=8), pb)
     g_l, g_tree = jax.tree_util.tree_flatten(got)
@@ -188,6 +210,132 @@ def test_lru_eviction_keeps_recently_used_prefix(tiny_arch, tiny_params):
     np.testing.assert_array_equal(r3.tokens, r.tokens)
 
 
+# -- two-tier machinery (device slab hot tier / host cold tier) -------------
+
+
+def _entry_nbytes(eng, max_len):
+    """Per-boundary entry bytes (snapshot + logits row) for this arena
+    geometry — shape-derived via a throwaway scheduler, no serving needed."""
+    sched = eng.scheduler(num_lanes=1, max_len=max_len)
+    return sched._snap_nbytes
+
+
+@pytest.mark.parametrize("kind", sorted(available_policies()))
+def test_hot_roundtrip_demote_promote_bitwise(tiny_arch, tiny_params, kind):
+    """A ONE-slot slab forces every tier transition: each boundary insert
+    demotes its predecessor (deferred export materialized d2h), later serves
+    take cold hits that promote (h2d) and then hit hot (d2d) — and every
+    serve stays bitwise-equal to a cold prefill, for every policy."""
+    cfg = _policy_cfg(kind, tiny_arch.dms.window)
+    prefix = _prompt(16, seed=20, vocab=tiny_arch.vocab_size)
+    pa = np.concatenate([prefix, _prompt(7, seed=21, vocab=tiny_arch.vocab_size)])
+    pb = np.concatenate([prefix, _prompt(9, seed=22, vocab=tiny_arch.vocab_size)])
+    pc8 = np.concatenate([prefix[:8], _prompt(6, seed=23,
+                                              vocab=tiny_arch.vocab_size)])
+    max_new, max_len = 5, len(pb) + 5
+
+    warm = Engine(tiny_arch, tiny_params, cfg, chunk=8, prefix_cache_mb=64)
+    entry_nb = _entry_nbytes(warm, max_len)
+    snap_nb = entry_nb - tiny_arch.padded_vocab * 4       # sans logits row
+    warm.prefix_cache = PrefixCache(
+        64 * 2 ** 20, device_capacity_bytes=entry_nb + entry_nb // 2)
+    ra = _serve_one(warm, pa, max_new, max_len)
+    st = warm.prefix_cache.stats()
+    # boundaries 8 / 16 / 23: all deferred into the slab, two demoted out
+    assert st["hot_inserts"] == 3 and st["demotions"] == 2, (kind, st)
+    assert st["d2h_bytes"] == 2 * snap_nb, (kind, st)
+    rb = _serve_one(warm, pb, max_new, max_len)   # cold hit @16 → promote
+    rc = _serve_one(warm, pc8, max_new, max_len)  # cold hit @8 → promote
+    st = warm.prefix_cache.stats()
+    assert st["promotions"] >= 2 and st["hot_hits"] >= 2, (kind, st)
+
+    cold = Engine(tiny_arch, tiny_params, cfg, chunk=8)
+    for r, p in ((ra, pa), (rb, pb), (rc, pc8)):
+        c = _serve_one(cold, p, max_new, max_len)
+        np.testing.assert_array_equal(r.tokens, c.tokens, err_msg=kind)
+        assert r.prefill_meter.kv_reads + r.prefill_meter.kv_reads_saved \
+            == pytest.approx(c.prefill_meter.kv_reads), kind
+
+
+def test_full_prompt_hot_hit_zero_snapshot_bytes(tiny_arch, tiny_params):
+    """Resubmitting a served prompt with a hot tier: the full-prompt hit is
+    served from the slab with ZERO host↔device snapshot bytes — only the
+    O(V) boundary-logits row syncs (metered separately on aux_sync_bytes)."""
+    cfg = _policy_cfg("dms", tiny_arch.dms.window)
+    p = _prompt(19, seed=7, vocab=tiny_arch.vocab_size)
+    warm = Engine(tiny_arch, tiny_params, cfg, chunk=8, prefix_cache_mb=64,
+                  prefix_cache_device_mb=64)
+    r1 = _serve_one(warm, p, 5, len(p) + 5)
+    r2 = _serve_one(warm, p, 5, len(p) + 5)
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+    assert r2.prefill_meter.kv_reads == 0.0
+    st = warm.prefix_cache.stats()
+    assert st["hot_hits"] == 1 and st["h2d_bytes"] == 0 \
+        and st["d2h_bytes"] == 0, st
+    assert st["aux_sync_bytes"] == tiny_arch.padded_vocab * 4, st
+
+
+def test_tiny_device_slab_degrades_to_cold_tier(tiny_arch, tiny_params):
+    """A device budget too small for even one snapshot must behave exactly
+    like the cold-tier-only cache: no slab, no hot traffic, hits still served
+    from host — never an error."""
+    cfg = _policy_cfg("dms", tiny_arch.dms.window)
+    prefix = _prompt(16, seed=24, vocab=tiny_arch.vocab_size)
+    pa = np.concatenate([prefix, _prompt(5, seed=25, vocab=tiny_arch.vocab_size)])
+    pb = np.concatenate([prefix, _prompt(6, seed=26, vocab=tiny_arch.vocab_size)])
+    max_len = len(pb) + 4
+    warm = Engine(tiny_arch, tiny_params, cfg, chunk=8, prefix_cache_mb=64,
+                  prefix_cache_device_mb=128 / 2 ** 20)    # 128 B < snapshot
+    ra = _serve_one(warm, pa, 4, max_len)
+    rb = _serve_one(warm, pb, 4, max_len)
+    assert rb.prefill_meter.kv_reads_saved > 0            # cold tier hit
+    st = warm.prefix_cache.stats()
+    assert st["hot_inserts"] == 0 and st["hot_hits"] == 0, st
+    assert st["device_bytes"] == 0 and st["promotions"] == 0, st
+    cold = Engine(tiny_arch, tiny_params, cfg, chunk=8)
+    np.testing.assert_array_equal(rb.tokens,
+                                  _serve_one(cold, pb, 4, max_len).tokens)
+
+
+def test_second_miss_exports_exactly_what_traffic_asked(tiny_arch,
+                                                        tiny_params):
+    """`export_policy="second-miss"`: single-shot unshared prompts export
+    NOTHING; a repeated prefix exports exactly the shared chunk boundaries
+    the first request missed on — and nothing deeper."""
+    cfg = _policy_cfg("dms", tiny_arch.dms.window)
+    eng = Engine(tiny_arch, tiny_params, cfg, chunk=8, prefix_cache_mb=64,
+                 export_policy="second-miss")
+    max_len = 28
+    for s in range(3):                                    # unshared singles
+        _serve_one(eng, _prompt(20, seed=30 + s,
+                                vocab=tiny_arch.vocab_size), 4, max_len)
+    assert eng.prefix_cache.inserts == 0                  # zero exports
+
+    prefix = _prompt(16, seed=40, vocab=tiny_arch.vocab_size)
+    p1 = np.concatenate([prefix, _prompt(6, seed=41,
+                                         vocab=tiny_arch.vocab_size)])
+    p2 = np.concatenate([prefix, _prompt(7, seed=42,
+                                         vocab=tiny_arch.vocab_size)])
+    p3 = np.concatenate([prefix, _prompt(5, seed=43,
+                                         vocab=tiny_arch.vocab_size)])
+    _serve_one(eng, p1, 4, max_len)
+    assert eng.prefix_cache.inserts == 0                  # first miss: record
+    _serve_one(eng, p2, 4, max_len)
+    # second miss: exports exactly the shared boundaries 8 and 16 — p2's own
+    # deeper boundaries were only ever asked for once
+    assert eng.prefix_cache.inserts == 2
+    sig = eng.scheduler(num_lanes=1, max_len=max_len).signature
+    assert eng.prefix_cache.covered(sig, prefix) == 16
+    assert eng.prefix_cache.covered(sig, p2) == 16
+    r3 = _serve_one(eng, p3, 4, max_len)                  # now a real hit
+    assert r3.prefill_meter.kv_reads_saved > 0
+    cold = Engine(tiny_arch, tiny_params, cfg, chunk=8)
+    c3 = _serve_one(cold, p3, 4, max_len)
+    np.testing.assert_array_equal(r3.tokens, c3.tokens)
+    assert r3.prefill_meter.kv_reads + r3.prefill_meter.kv_reads_saved \
+        == pytest.approx(c3.prefill_meter.kv_reads)
+
+
 # -- radix tree unit tests --------------------------------------------------
 
 
@@ -277,3 +425,156 @@ def test_oversized_snapshot_rejected():
     assert not _insert(pc, [1, 2, 3], nbytes=1024)
     assert pc.stats()["insert_rejects"] == 1
     assert pc.total_bytes == 0
+
+
+def test_want_export_always_only_skips_covered_boundaries():
+    pc = PrefixCache(1 << 20)
+    assert pc.want_export(SIG, _mk([1, 2]))               # nothing cached
+    _insert(pc, [1, 2])
+    assert not pc.want_export(SIG, _mk([1, 2]))           # exactly covered
+    assert pc.want_export(SIG, _mk([1, 2, 3]))            # deeper: still wanted
+
+
+def test_want_export_second_miss_needs_two_askers():
+    pc = PrefixCache(1 << 20, export_policy="second-miss")
+    p = _mk([1, 2, 3, 4, 5, 6])
+    assert not pc.want_export(SIG, p[:2])                 # nobody asked
+    pc.lookup(SIG, p)                                     # first miss recorded
+    assert not pc.want_export(SIG, p[:2])                 # one asker: its own
+    pc.lookup(SIG, p)                                     # second miss
+    for depth in (2, 4, 6):                               # incl. mid-edge
+        assert pc.want_export(SIG, p[:depth]), depth
+    assert not pc.want_export(SIG, _mk([1, 2, 9]))        # nobody went there
+    pc.lookup(SIG, _mk([1, 2, 9, 9]))                     # third path shares [1,2]
+    assert pc.want_export(SIG, p[:2])
+    assert not pc.want_export(SIG, _mk([1, 2, 9]))        # single asker only
+    _insert(pc, [1, 2])
+    assert not pc.want_export(SIG, p[:2])                 # covered now
+
+
+def test_second_miss_records_survive_pruning_resets():
+    """Miss history resets past the record budget: exports are delayed again
+    (never wrong), ghost nodes are pruned, and entries survive the reset."""
+    import repro.serving.prefix_cache as pcm
+    pc = PrefixCache(1 << 20, export_policy="second-miss")
+    _insert(pc, [7, 7])
+    pc.lookup(SIG, _mk([1, 2, 3]))
+    pc.lookup(SIG, _mk([1, 2, 3]))
+    assert pc.want_export(SIG, _mk([1, 2]))
+    pc._miss_tokens[SIG] = pcm.MISS_RECORD_TOKENS + 1     # force the reset
+    pc.lookup(SIG, _mk([9, 9, 9]))
+    assert not pc.want_export(SIG, _mk([1, 2]))           # history forgotten
+    assert pc.lookup(SIG, _mk([7, 7])) is not None        # entry survived
+
+
+def test_eviction_prunes_only_the_dead_path():
+    """Parent-link pruning: evicting a leaf entry removes exactly its dead
+    chain; shared interior nodes and sibling entries stay intact."""
+    pc = PrefixCache(capacity_bytes=2 * 80)               # room for 2 entries
+    _insert(pc, [1, 1])
+    _insert(pc, [1, 1, 2, 2])
+    _insert(pc, [1, 1, 3, 3])                             # evicts [1,1] (LRU)
+    assert pc.evictions == 1
+    # [1,1] survives as an interior split node (it has children) ...
+    root = pc._roots[SIG]
+    assert sorted(root.children[1].children) == [2, 3]
+    assert pc.lookup(SIG, _mk([1, 1, 2, 2])).length == 4  # refresh [.., 2, 2]
+    _insert(pc, [5])                                      # evicts [1,1,3,3]
+    # ... and the dead [3,3] leaf chain is gone, sibling [2,2] untouched
+    assert sorted(root.children[1].children) == [2]
+    assert pc.lookup(SIG, _mk([1, 1, 2, 2])).length == 4
+
+
+# -- hot-tier slab unit tests (dummy snapshots, no model) -------------------
+
+
+def _dev_snap(val, n=16):
+    # snapshot leaves carry (superblock, lane, ...) axes — lane axis width 1
+    return {"x": jnp.full((1, 1, n), float(val), jnp.float32)}
+
+
+def test_hot_tier_slab_store_demote_promote_unit():
+    n, snap_nb = 16, 16 * 4
+    logits = jnp.zeros((4,), jnp.float32)
+    pc = PrefixCache(1 << 20,                             # K = 1 slot
+                     device_capacity_bytes=snap_nb + snap_nb // 2)
+    assert pc.insert(SIG, _mk([1, 1]), _dev_snap(1.0), logits, 1.0)
+    assert pc.hot_inserts == 1 and pc.d2h_bytes == 0      # deferred: no sync
+    assert pc.total_bytes == 0                            # not on the host
+    assert pc.insert(SIG, _mk([2, 2]), _dev_snap(2.0), logits, 2.0)
+    assert pc.demotions == 1 and pc.d2h_bytes == snap_nb  # [1,1] demoted
+    h1 = pc.lookup(SIG, _mk([1, 1]))                      # cold → promote
+    assert h1.tier == "hot" and pc.promotions == 1
+    np.testing.assert_array_equal(
+        np.asarray(h1.snapshot["x"]).ravel(), np.full(n, 1.0, np.float32))
+    h2 = pc.lookup(SIG, _mk([2, 2]))                      # demoted by promote
+    assert h2.tier == "hot" and pc.promotions == 2
+    np.testing.assert_array_equal(
+        np.asarray(h2.snapshot["x"]).ravel(), np.full(n, 2.0, np.float32))
+    assert pc.h2d_bytes == 2 * snap_nb                    # the two promotions
+
+
+def test_hot_tier_multiple_slots_lru_demotion_order():
+    entry_nb = 16 * 4 + 16                                # snapshot + logits
+    logits = jnp.zeros((4,), jnp.float32)
+    pc = PrefixCache(1 << 20, device_capacity_bytes=2 * entry_nb)  # K = 2
+    pc.insert(SIG, _mk([1, 1]), _dev_snap(1.0), logits, 1.0)
+    pc.insert(SIG, _mk([2, 2]), _dev_snap(2.0), logits, 2.0)
+    pc.lookup(SIG, _mk([1, 1]))                           # [1,1] now MRU
+    pc.insert(SIG, _mk([3, 3]), _dev_snap(3.0), logits, 3.0)
+    assert pc.demotions == 1                              # [2,2] demoted
+    assert pc.lookup(SIG, _mk([1, 1])).tier == "hot"
+    assert pc.lookup(SIG, _mk([3, 3])).tier == "hot"
+
+
+def test_hot_insert_survives_demotion_eviction_prune_race():
+    """Inserting a boundary that SPLITS an edge, into a full slab, while the
+    host budget is also full: the slot acquisition demotes the hot LRU,
+    whose arrival evicts the cold LRU, whose prune chain walks up through
+    the freshly split (still entry-less, pre-fix) node.  The new entry must
+    stay reachable."""
+    entry_nb = 16 * 4 + 16
+    logits = jnp.zeros((4,), jnp.float32)
+    pc = PrefixCache(capacity_bytes=entry_nb,             # one cold entry
+                     device_capacity_bytes=entry_nb)      # K = 1
+    assert pc.insert(SIG, _mk([1, 1, 2, 2]), _dev_snap(1.0), logits, 1.0)
+    assert pc.insert(SIG, _mk([5]), _dev_snap(2.0), logits, 2.0)
+    assert pc.demotions == 1                              # [1,1,2,2] → cold
+    # splits [1,1,2,2]'s edge at depth 2; demotes [5]; evicts [1,1,2,2]
+    assert pc.insert(SIG, _mk([1, 1]), _dev_snap(3.0), logits, 3.0)
+    assert pc.evictions == 1
+    hit = pc.lookup(SIG, _mk([1, 1]))
+    assert hit is not None and hit.length == 2 and hit.tier == "hot"
+    np.testing.assert_array_equal(
+        np.asarray(hit.snapshot["x"]).ravel(), np.full(16, 3.0, np.float32))
+
+
+def test_hot_slab_slot_cap_leaves_budget_for_later_signatures():
+    """max_hot_slots bounds one signature's slab so an engine-shared cache
+    still has device budget when a second arena geometry shows up."""
+    entry_nb = 16 * 4 + 16
+    logits = jnp.zeros((4,), jnp.float32)
+    pc = PrefixCache(1 << 20, device_capacity_bytes=10 * entry_nb,
+                     max_hot_slots=2)
+    sig2 = ("t2", ((1,), "f32"))
+    assert pc.insert(SIG, _mk([1, 1]), _dev_snap(1.0), logits, 1.0)
+    assert pc._device_bytes == 2 * entry_nb               # capped, not 10
+    assert pc.insert(sig2, _mk([1, 1]), _dev_snap(5.0), logits, 1.0)
+    assert pc.stats()["hot_entries"] == 2                 # both went hot
+    assert pc.lookup(sig2, _mk([1, 1])).tier == "hot"
+
+
+def test_hot_insert_without_host_room_still_works():
+    """The slab is its own budget: hot inserts don't consume host bytes, and
+    a demotion that can't fit the host budget drops the entry outright."""
+    snap_nb = 16 * 4
+    logits = jnp.zeros((4,), jnp.float32)
+    pc = PrefixCache(capacity_bytes=8,                    # < any snapshot
+                     device_capacity_bytes=snap_nb + snap_nb // 2)
+    assert pc.insert(SIG, _mk([1, 1]), _dev_snap(1.0), logits, 1.0)
+    assert pc.total_bytes == 0
+    assert pc.insert(SIG, _mk([2, 2]), _dev_snap(2.0), logits, 2.0)
+    # [1,1]'s demotion had nowhere to land: dropped, not an error
+    assert pc.demotions == 1 and pc.evictions == 1
+    assert pc.lookup(SIG, _mk([1, 1])) is None
+    assert pc.lookup(SIG, _mk([2, 2])).tier == "hot"
