@@ -12,8 +12,9 @@ hit-path byte-traffic counters, hit rates) must agree within ``--rtol``.
 Exit 1 on drift; with ``--only`` a missing baseline is also a failure
 (the explicit gate must not be vacuous), a full sweep skips suites whose
 baselines aren't committed.  Re-record a baseline by running the suite
-WITHOUT ``--check`` and committing the JSON (only
-``artifacts/bench/prefix_cache.json`` is git-tracked today).
+WITHOUT ``--check`` and committing the JSON
+(``artifacts/bench/prefix_cache.json`` and
+``artifacts/bench/decode_path.json`` are git-tracked today).
 
 Suites (↔ paper artifact):
     latency_model     Appendix G / Fig. 7 (TPU re-derivation)
@@ -27,6 +28,9 @@ Suites (↔ paper artifact):
     prefix_cache      serving: cross-request radix prefix reuse (shared
                       system prompt, two-tier hot path, single-shot export
                       gating, multi-turn chat traces)
+    decode_path       kernel: block-table flash-decode HBM traffic ∝ live
+                      tokens (fill/CR/fragmentation sweeps, zero-copy step
+                      path — see docs/kernels.md)
 """
 from __future__ import annotations
 
@@ -50,8 +54,9 @@ def main(argv=None) -> int:
 
     from benchmarks import common
     from benchmarks import (ablation_eviction, continuous_batching, cr_profile,
-                            cr_sweep, data_efficiency, latency_model, pareto,
-                            prefix_cache, roofline_table)
+                            cr_sweep, data_efficiency, decode_path,
+                            latency_model, pareto, prefix_cache,
+                            roofline_table)
     suites = {
         "latency_model": latency_model.run,
         "roofline_table": roofline_table.run,
@@ -62,6 +67,7 @@ def main(argv=None) -> int:
         "pareto": pareto.run,
         "continuous_batching": continuous_batching.run,
         "prefix_cache": prefix_cache.run,
+        "decode_path": decode_path.run,
     }
     if args.only:
         suites = {k: v for k, v in suites.items() if k == args.only}

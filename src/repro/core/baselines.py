@@ -27,7 +27,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.kv_cache import (LaneSliceable, _tree_dataclass,
+from repro.core.kv_cache import (BlockTable, HasBlockTable,
+                                 LaneSliceable, _round_up,
+                                 _tree_dataclass, prefix_block_spec,
                                  INVALID_POS)
 
 NEG_INF = -1e30
@@ -39,36 +41,47 @@ NEG_INF = -1e30
 
 
 @_tree_dataclass
-class TOVACache(LaneSliceable):
-    k: jnp.ndarray       # (B, H, P, D)
+class TOVACache(LaneSliceable, HasBlockTable):
+    k: jnp.ndarray       # (B, H, P, D) — P padded to a block_p multiple
     v: jnp.ndarray
     pos: jnp.ndarray     # (B, H, P)
     valid: jnp.ndarray   # (B, H, P)
     length: jnp.ndarray  # (B,) — per lane
+    blocks: BlockTable   # incremental live-block table (flash-decode)
+    slots: int = dataclasses.field(metadata={"static": True})  # logical arena
 
     @staticmethod
-    def init(batch, kv_heads, budget, head_dim, dtype=jnp.bfloat16):
-        z = jnp.zeros((batch, kv_heads, budget, head_dim), dtype)
+    def init(batch, kv_heads, budget, head_dim, dtype=jnp.bfloat16,
+             block_p: int = 0):
+        p = _round_up(budget, block_p)
+        z = jnp.zeros((batch, kv_heads, p, head_dim), dtype)
         return TOVACache(z, z,
-                         jnp.full((batch, kv_heads, budget), INVALID_POS, jnp.int32),
-                         jnp.zeros((batch, kv_heads, budget), bool),
-                         jnp.zeros((batch,), jnp.int32))
+                         jnp.full((batch, kv_heads, p), INVALID_POS, jnp.int32),
+                         jnp.zeros((batch, kv_heads, p), bool),
+                         jnp.zeros((batch,), jnp.int32),
+                         BlockTable.init(batch, kv_heads, p, block_p),
+                         budget)
 
     @property
     def budget(self) -> int:
-        return self.k.shape[2] - 1   # arena is budget + 1 (room to insert-then-evict)
+        return self.slots - 1   # arena is budget + 1 (room to insert-then-evict)
 
     def insert(self, k_new, v_new) -> "TOVACache":
-        """Insert the new token into a free slot (the arena always has one)."""
+        """Insert the new token into a free *logical* slot (the arena always
+        has one; physical padding slots are never allocated)."""
         p = self.k.shape[2]
-        slot = jnp.argmin(self.valid, axis=2).astype(jnp.int32)   # first False
+        free = ~self.valid & (jnp.arange(p)[None, None] < self.slots)
+        slot = jnp.argmax(free, axis=2).astype(jnp.int32)         # first free
         hit = (jnp.arange(p)[None, None] == slot[..., None])
-        return TOVACache(
+        newly = jnp.take_along_axis(free, slot[..., None], axis=2)[..., 0]
+        return dataclasses.replace(
+            self,
             k=jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k),
             v=jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v),
             pos=jnp.where(hit, self.length[:, None, None], self.pos),
             valid=self.valid | hit,
             length=self.length + 1,
+            blocks=self.blocks.insert(slot, newly),
         )
 
     def evict(self, attn_weights) -> "TOVACache":
@@ -80,9 +93,12 @@ class TOVACache(LaneSliceable):
         scores = jnp.where(self.valid, attn_weights.astype(jnp.float32), jnp.inf)
         victim = jnp.argmin(scores, axis=2).astype(jnp.int32)
         hit = (jnp.arange(p)[None, None] == victim[..., None]) & over[..., None]
-        return TOVACache(self.k, self.v,
-                         jnp.where(hit, INVALID_POS, self.pos),
-                         self.valid & ~hit, self.length)
+        return dataclasses.replace(
+            self,
+            pos=jnp.where(hit, INVALID_POS, self.pos),
+            valid=self.valid & ~hit,
+            blocks=self.blocks.evict(victim, over),
+        )
 
     def valid_mask(self):
         return self.valid
@@ -100,41 +116,50 @@ class TOVACache(LaneSliceable):
 
 
 @_tree_dataclass
-class H2OCache(LaneSliceable):
-    k: jnp.ndarray
+class H2OCache(LaneSliceable, HasBlockTable):
+    k: jnp.ndarray       # (B, H, P, D) — P padded to a block_p multiple
     v: jnp.ndarray
     pos: jnp.ndarray
     valid: jnp.ndarray
     acc: jnp.ndarray       # (B, H, P) cumulative attention mass
     length: jnp.ndarray    # (B,) — per lane
+    blocks: BlockTable     # incremental live-block table (flash-decode)
     recent_window: int = dataclasses.field(metadata={"static": True})
+    slots: int = dataclasses.field(metadata={"static": True})  # logical arena
 
     @staticmethod
-    def init(batch, kv_heads, budget, head_dim, recent_window=None, dtype=jnp.bfloat16):
-        z = jnp.zeros((batch, kv_heads, budget, head_dim), dtype)
+    def init(batch, kv_heads, budget, head_dim, recent_window=None,
+             dtype=jnp.bfloat16, block_p: int = 0):
+        p = _round_up(budget, block_p)
+        z = jnp.zeros((batch, kv_heads, p, head_dim), dtype)
         rw = recent_window if recent_window is not None else budget // 2
         return H2OCache(z, z,
-                        jnp.full((batch, kv_heads, budget), INVALID_POS, jnp.int32),
-                        jnp.zeros((batch, kv_heads, budget), bool),
-                        jnp.zeros((batch, kv_heads, budget), jnp.float32),
-                        jnp.zeros((batch,), jnp.int32), rw)
+                        jnp.full((batch, kv_heads, p), INVALID_POS, jnp.int32),
+                        jnp.zeros((batch, kv_heads, p), bool),
+                        jnp.zeros((batch, kv_heads, p), jnp.float32),
+                        jnp.zeros((batch,), jnp.int32),
+                        BlockTable.init(batch, kv_heads, p, block_p),
+                        rw, budget)
 
     @property
     def budget(self) -> int:
-        return self.k.shape[2] - 1
+        return self.slots - 1
 
     def insert(self, k_new, v_new) -> "H2OCache":
         p = self.k.shape[2]
-        slot = jnp.argmin(self.valid, axis=2).astype(jnp.int32)
+        free = ~self.valid & (jnp.arange(p)[None, None] < self.slots)
+        slot = jnp.argmax(free, axis=2).astype(jnp.int32)
         hit = (jnp.arange(p)[None, None] == slot[..., None])
-        return H2OCache(
+        newly = jnp.take_along_axis(free, slot[..., None], axis=2)[..., 0]
+        return dataclasses.replace(
+            self,
             k=jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k),
             v=jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v),
             pos=jnp.where(hit, self.length[:, None, None], self.pos),
             valid=self.valid | hit,
             acc=jnp.where(hit, 0.0, self.acc),
             length=self.length + 1,
-            recent_window=self.recent_window,
+            blocks=self.blocks.insert(slot, newly),
         )
 
     def evict(self, attn_weights) -> "H2OCache":
@@ -149,11 +174,13 @@ class H2OCache(LaneSliceable):
         oldest = jnp.argmin(jnp.where(self.valid, self.pos, INVALID_POS), axis=2)
         victim = jnp.where(any_evictable, jnp.argmin(scores, axis=2), oldest).astype(jnp.int32)
         hit = (jnp.arange(p)[None, None] == victim[..., None]) & over[..., None]
-        return H2OCache(self.k, self.v,
-                        jnp.where(hit, INVALID_POS, self.pos),
-                        self.valid & ~hit,
-                        jnp.where(hit, 0.0, acc),
-                        self.length, self.recent_window)
+        return dataclasses.replace(
+            self,
+            pos=jnp.where(hit, INVALID_POS, self.pos),
+            valid=self.valid & ~hit,
+            acc=jnp.where(hit, 0.0, acc),
+            blocks=self.blocks.evict(victim, over),
+        )
 
     def valid_mask(self):
         return self.valid
@@ -238,6 +265,18 @@ class QuestCache(LaneSliceable):
         written = jnp.arange(s)[None, None, :] < self.length[:, None, None]
         return tok & written
 
+    def block_table_from_pages(self, page_mask: jnp.ndarray):
+        """Compact the selected-page bool mask into a flash-decode block
+        table ``(tbl (B,H,NP) int32, n (B,H) int32)``: selected page ids
+        first (ascending), so the kernel fetches exactly the top-k pages —
+        Quest's reads-sparsity realized as HBM traffic, not just metering.
+        Kept full-width (NP, not top_pages) because threshold ties can
+        select more than ``top_pages`` pages; the kernel's per-(b,h) ``n``
+        early-exits the unselected tail either way."""
+        tbl = jnp.argsort(~page_mask, axis=-1, stable=True).astype(jnp.int32)
+        n = jnp.sum(page_mask, axis=-1).astype(jnp.int32)
+        return tbl, n
+
     def positions(self):
         s = self.k.shape[2]
         return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, None], self.k.shape[:2] + (s,))
@@ -267,19 +306,28 @@ class DMCCache(LaneSliceable):
     with running weight z;  α=0 ⇒ append a fresh entry.
     """
 
-    k: jnp.ndarray        # (B, H, P, D) fp32 accumulators
+    k: jnp.ndarray        # (B, H, P, D) fp32 accumulators — P padded to a
+    #                       block_p multiple; occupancy is a count-prefix so
+    #                       the live-block table is derived, not stored
     v: jnp.ndarray
     z: jnp.ndarray        # (B, H, P) accumulation weights
     count: jnp.ndarray    # (B, H) number of live entries
     length: jnp.ndarray   # (B,) — per lane
+    block_p: int = dataclasses.field(metadata={"static": True}, default=0)
 
     @staticmethod
-    def init(batch, kv_heads, num_slots, head_dim):
-        z4 = jnp.zeros((batch, kv_heads, num_slots, head_dim), jnp.float32)
+    def init(batch, kv_heads, num_slots, head_dim, block_p: int = 0):
+        p = _round_up(num_slots, block_p)
+        z4 = jnp.zeros((batch, kv_heads, p, head_dim), jnp.float32)
         return DMCCache(z4, z4,
-                        jnp.zeros((batch, kv_heads, num_slots), jnp.float32),
+                        jnp.zeros((batch, kv_heads, p), jnp.float32),
                         jnp.zeros((batch, kv_heads), jnp.int32),
-                        jnp.zeros((batch,), jnp.int32))
+                        jnp.zeros((batch,), jnp.int32), block_p)
+
+    def block_spec(self):
+        tbl, n = prefix_block_spec(self.count, self.k.shape[2], self.block_p,
+                                   self.k.shape[1])
+        return tbl, n, self.block_p
 
     def step(self, k_new, v_new, alpha, omega=None) -> "DMCCache":
         """alpha: (B, H) bool merge decision; omega: optional (B, H) importance
@@ -303,7 +351,8 @@ class DMCCache(LaneSliceable):
         v = jnp.where(hit[..., None], v_upd, self.v)
         z = jnp.where(hit, z_new, self.z)
         count = jnp.where(merge, self.count, self.count + 1)
-        return DMCCache(k, v, z, count, self.length + 1)
+        return dataclasses.replace(self, k=k, v=v, z=z, count=count,
+                                   length=self.length + 1)
 
     def valid_mask(self):
         p = self.k.shape[2]

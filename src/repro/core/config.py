@@ -56,6 +56,13 @@ class KVPolicyConfig:
     quest_page_size: int = 16
     quest_top_pages: Optional[int] = None
     keyformer_tau: float = 1.0   # Gumbel-softmax temperature (score smoothing)
+    # KV-block granularity of the flash-decode kernel: caches allocate their
+    # arenas pre-padded to a block_p multiple and maintain compacted
+    # live-block index tables so decode streams only live blocks (HBM traffic
+    # ∝ live tokens, not arena capacity — see docs/kernels.md).  0 disables
+    # the tables (legacy dense streaming; direct cache construction defaults
+    # to this so low-level unit tests keep exact arena shapes).
+    block_p: int = 16
     layer_map: Optional[Tuple[Tuple[str, str], ...]] = None
 
     def __post_init__(self):

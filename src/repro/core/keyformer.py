@@ -23,44 +23,51 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import ArchConfig, KVPolicyConfig
-from repro.core.kv_cache import (INVALID_POS, LaneSliceable,
-                                 _tree_dataclass)
-from repro.core.policy import AttendSpec, KVPolicy, register_policy
+from repro.core.kv_cache import (INVALID_POS, BlockTable, HasBlockTable,
+                                 LaneSliceable, _round_up, _tree_dataclass)
+from repro.core.policy import KVPolicy, _attend_spec, register_policy
 
 _SCORE_EPS = 1e-9
 _NOISE_SEED = 0x5EED  # fixed: decode must be reproducible per (seed, step)
 
 
 @_tree_dataclass
-class KeyformerCache(LaneSliceable):
-    k: jnp.ndarray       # (B, H, P, D)
+class KeyformerCache(LaneSliceable, HasBlockTable):
+    k: jnp.ndarray       # (B, H, P, D) — P padded to a block_p multiple
     v: jnp.ndarray
     pos: jnp.ndarray     # (B, H, P) int32
     valid: jnp.ndarray   # (B, H, P) bool
     score: jnp.ndarray   # (B, H, P) f32 — accumulated regularised scores
     length: jnp.ndarray  # (B,) — per lane
+    blocks: BlockTable   # incremental live-block table (flash-decode)
     recent_window: int = dataclasses.field(metadata={"static": True})
+    slots: int = dataclasses.field(metadata={"static": True})  # logical arena
     tau: float = dataclasses.field(metadata={"static": True}, default=1.0)
 
     @staticmethod
     def init(batch, kv_heads, budget, head_dim, recent_window, tau,
-             dtype=jnp.bfloat16):
-        z = jnp.zeros((batch, kv_heads, budget, head_dim), dtype)
+             dtype=jnp.bfloat16, block_p: int = 0):
+        p = _round_up(budget, block_p)
+        z = jnp.zeros((batch, kv_heads, p, head_dim), dtype)
         return KeyformerCache(
             z, z,
-            jnp.full((batch, kv_heads, budget), INVALID_POS, jnp.int32),
-            jnp.zeros((batch, kv_heads, budget), bool),
-            jnp.zeros((batch, kv_heads, budget), jnp.float32),
-            jnp.zeros((batch,), jnp.int32), recent_window, tau)
+            jnp.full((batch, kv_heads, p), INVALID_POS, jnp.int32),
+            jnp.zeros((batch, kv_heads, p), bool),
+            jnp.zeros((batch, kv_heads, p), jnp.float32),
+            jnp.zeros((batch,), jnp.int32),
+            BlockTable.init(batch, kv_heads, p, block_p),
+            recent_window, budget, tau)
 
     @property
     def budget(self) -> int:
-        return self.k.shape[2] - 1   # arena is budget + 1 (insert-then-evict)
+        return self.slots - 1   # arena is budget + 1 (insert-then-evict)
 
     def insert(self, k_new, v_new) -> "KeyformerCache":
         p = self.k.shape[2]
-        slot = jnp.argmin(self.valid, axis=2).astype(jnp.int32)   # first free
+        free = ~self.valid & (jnp.arange(p)[None, None] < self.slots)
+        slot = jnp.argmax(free, axis=2).astype(jnp.int32)         # first free
         hit = (jnp.arange(p)[None, None] == slot[..., None])
+        newly = jnp.take_along_axis(free, slot[..., None], axis=2)[..., 0]
         return dataclasses.replace(
             self,
             k=jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k),
@@ -68,7 +75,8 @@ class KeyformerCache(LaneSliceable):
             pos=jnp.where(hit, self.length[:, None, None], self.pos),
             valid=self.valid | hit,
             score=jnp.where(hit, 0.0, self.score),
-            length=self.length + 1)
+            length=self.length + 1,
+            blocks=self.blocks.insert(slot, newly))
 
     def accumulate_and_evict(self, attn_weights) -> "KeyformerCache":
         """attn_weights: (B, H, P) group-summed post-softmax weights.
@@ -113,7 +121,8 @@ class KeyformerCache(LaneSliceable):
             self,
             pos=jnp.where(hit, INVALID_POS, self.pos),
             valid=self.valid & ~hit,
-            score=jnp.where(hit, 0.0, score))
+            score=jnp.where(hit, 0.0, score),
+            blocks=self.blocks.evict(victim, over))
 
     def valid_mask(self):
         return self.valid
@@ -133,12 +142,12 @@ class KeyformerPolicy(KVPolicy):
         budget = cfg.budget or max(int(max_len / cfg.cr), 1)
         return KeyformerCache.init(batch, a.num_kv_heads, budget + 1,
                                    a.head_dim, max(budget // 2, 1),
-                                   cfg.keyformer_tau, dtype)
+                                   cfg.keyformer_tau, dtype,
+                                   block_p=cfg.block_p)
 
     def decode_update(self, cache, q, k_new, v_new, aux):
         cache = cache.insert(k_new, v_new)
-        return cache, AttendSpec(cache.k, cache.v, cache.valid_mask(),
-                                 cache.pos, needs_weights=True)
+        return cache, _attend_spec(cache, needs_weights=True)
 
     def post_attend(self, cache, weights):
         return cache.accumulate_and_evict(weights)

@@ -64,6 +64,10 @@ class LaneSliceable:
             self, snap)
 
 
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m if m else x
+
+
 def _tree_dataclass(cls):
     """Dataclass + pytree registration; fields with metadata {'static': True}
     go into aux_data (hashable, not traced).  Children are keyed by field name
@@ -95,20 +99,179 @@ def _tree_dataclass(cls):
 
 
 # ---------------------------------------------------------------------------
+# Block tables: compacted live-block indices for the flash-decode kernel
+# ---------------------------------------------------------------------------
+
+
+@_tree_dataclass
+class BlockTable:
+    """Per-(lane, kv-head) compacted index table of *live* KV blocks.
+
+    The flash-decode kernel grids over this table instead of the raw arena:
+    its scalar-prefetched entries drive the K/V block index maps, so blocks
+    with zero live slots are never DMA'd — decode HBM traffic scales with
+    live tokens, not arena capacity (see docs/kernels.md).
+
+    Maintained **incrementally**: :meth:`insert` / :meth:`evict` are O(NB)
+    vector ops fired once per cache mutation (a slot turning live/dead), not
+    a per-step O(P) reduction over the arena.  The table is an unordered
+    compacted list — eviction swaps the last entry into the hole — which is
+    fine because flash attention is order-invariant.  Invariant (pinned by
+    ``tests/test_block_tables.py``): ``{tbl[..., :n]}`` equals the set of
+    blocks with at least one live slot, and ``count`` equals the per-block
+    live-slot population of the arena's ``valid`` bitmap.
+
+    ``block_p == 0`` disables the machinery entirely (zero-width arrays, all
+    updates no-ops): the legacy dense-streaming configuration.
+    """
+
+    count: jnp.ndarray   # (B, H, NB) int32 — live slots per block
+    tbl: jnp.ndarray     # (B, H, NB) int32 — live block ids, first n entries
+    pos: jnp.ndarray     # (B, H, NB) int32 — block id -> index in tbl, or -1
+    n: jnp.ndarray       # (B, H) int32 — number of live blocks
+    block_p: int = dataclasses.field(metadata={"static": True}, default=0)
+
+    @staticmethod
+    def init(batch: int, kv_heads: int, num_slots: int, block_p: int
+             ) -> "BlockTable":
+        nb = num_slots // block_p if block_p else 0
+        z = jnp.zeros((batch, kv_heads, nb), jnp.int32)
+        return BlockTable(count=z, tbl=z,
+                          pos=jnp.full((batch, kv_heads, nb), -1, jnp.int32),
+                          n=jnp.zeros((batch, kv_heads), jnp.int32),
+                          block_p=block_p)
+
+    def spec(self):
+        """The ``(block_tbl, block_n, block_p)`` triple an ``AttendSpec``
+        carries to the kernel; ``(None, None, 0)`` when tables are off."""
+        if not self.block_p:
+            return None, None, 0
+        return self.tbl, self.n, self.block_p
+
+    @staticmethod
+    def from_valid(valid: jnp.ndarray, block_p: int) -> "BlockTable":
+        """Recompute the canonical table from a ``valid`` bitmap (one O(P)
+        pass — prefill import and the test oracle, never the step path).
+        Canonical order: live block ids ascending."""
+        b, h, p = valid.shape
+        if not block_p:
+            return BlockTable.init(b, h, 0, 0)
+        nb = p // block_p
+        count = jnp.sum(valid.reshape(b, h, nb, block_p), axis=-1
+                        ).astype(jnp.int32)
+        live = count > 0
+        tbl = jnp.argsort(~live, axis=-1, stable=True).astype(jnp.int32)
+        rank = jnp.cumsum(live, axis=-1).astype(jnp.int32) - 1
+        return BlockTable(count=count, tbl=tbl,
+                          pos=jnp.where(live, rank, -1),
+                          n=jnp.sum(live, axis=-1).astype(jnp.int32),
+                          block_p=block_p)
+
+    # -- O(NB) scatter helpers (one-hot writes, shapes fixed) ---------------
+
+    @staticmethod
+    def _take(arr, idx):
+        return jnp.take_along_axis(arr, idx[..., None], axis=2)[..., 0]
+
+    @staticmethod
+    def _put(arr, idx, val, mask):
+        nb = arr.shape[2]
+        hit = (jnp.arange(nb)[None, None] == idx[..., None]) & mask[..., None]
+        if hasattr(val, "ndim") and val.ndim == 2:
+            val = val[..., None]
+        return jnp.where(hit, val, arr)
+
+    def insert(self, slot: jnp.ndarray, mask: jnp.ndarray) -> "BlockTable":
+        """A slot turned live.  ``slot``/``mask``: (B, H); where ``mask`` is
+        False nothing happened this step (no-op lanes/heads)."""
+        if not self.block_p or self.count.shape[2] == 0:
+            return self
+        nb = self.count.shape[2]
+        blk = jnp.clip(slot // self.block_p, 0, nb - 1)
+        new_live = mask & (self._take(self.count, blk) == 0)
+        count = self._put(self.count, blk, self._take(self.count, blk) + 1,
+                          mask)
+        tbl = self._put(self.tbl, jnp.minimum(self.n, nb - 1), blk, new_live)
+        pos = self._put(self.pos, blk, self.n, new_live)
+        return dataclasses.replace(self, count=count, tbl=tbl, pos=pos,
+                                   n=self.n + new_live.astype(jnp.int32))
+
+    def evict(self, slot: jnp.ndarray, mask: jnp.ndarray) -> "BlockTable":
+        """A slot turned dead.  When its block's population hits zero the
+        block leaves the table: the last table entry swaps into its place."""
+        if not self.block_p or self.count.shape[2] == 0:
+            return self
+        nb = self.count.shape[2]
+        blk = jnp.clip(slot // self.block_p, 0, nb - 1)
+        cnt_after = self._take(self.count, blk) - 1
+        count = self._put(self.count, blk, cnt_after, mask)
+        dead = mask & (cnt_after == 0)
+        hole = self._take(self.pos, blk)                       # index in tbl
+        hole = jnp.clip(hole, 0, nb - 1)
+        last_i = jnp.clip(self.n - 1, 0, nb - 1)
+        last_blk = self._take(self.tbl, last_i)
+        tbl = self._put(self.tbl, hole, last_blk, dead)
+        pos = self._put(self.pos, last_blk, hole, dead)
+        pos = self._put(pos, blk, -1, dead)    # after: blk==last_blk -> -1
+        return dataclasses.replace(self, count=count, tbl=tbl, pos=pos,
+                                   n=self.n - dead.astype(jnp.int32))
+
+
+class HasBlockTable:
+    """Mixin for caches whose ``blocks`` field is an incrementally-maintained
+    :class:`BlockTable`: exposes the uniform ``block_spec()`` the policy
+    layer reads (see ``repro.core.policy._attend_spec``)."""
+
+    def block_spec(self):
+        return self.blocks.spec()
+
+
+def prefix_block_spec(length: jnp.ndarray, num_slots: int, block_p: int,
+                      kv_heads: int):
+    """Derived block table for prefix-shaped occupancy (vanilla/DMC): live
+    slots are exactly ``[0, length)`` per lane, so the table is just the
+    first ``ceil(length / block_p)`` block ids — O(NB) from a scalar, no
+    stored state.  Returns ``(tbl (B,H,NB) int32, n (B,H) int32)`` or
+    ``(None, None)`` when tables are disabled."""
+    if not block_p:
+        return None, None
+    nb = num_slots // block_p
+    b = length.shape[0]
+    length = length.reshape(b, -1)                      # (B,1) or (B,H)
+    n = jnp.broadcast_to(-(-jnp.minimum(length, num_slots) // block_p),
+                         (b, kv_heads)).astype(jnp.int32)
+    tbl = jnp.broadcast_to(jnp.arange(nb, dtype=jnp.int32)[None, None],
+                           (b, kv_heads, nb))
+    return tbl, n
+
+
+# ---------------------------------------------------------------------------
 # Vanilla (dense, append-only) cache
 # ---------------------------------------------------------------------------
 
 
 @_tree_dataclass
 class VanillaCache(LaneSliceable):
-    k: jnp.ndarray      # (B, Hkv, S, Dh)
+    k: jnp.ndarray      # (B, Hkv, S, Dh) — S padded to a block_p multiple
     v: jnp.ndarray
     length: jnp.ndarray  # (B,) int32 — tokens written, per lane
+    # kernel block granularity; 0 = no block tables (exact legacy arena).
+    # Occupancy is a length-prefix, so the live-block table is *derived*
+    # (prefix_block_spec) rather than stored.
+    block_p: int = dataclasses.field(metadata={"static": True}, default=0)
 
     @staticmethod
-    def init(batch: int, kv_heads: int, max_len: int, head_dim: int, dtype=jnp.bfloat16):
-        z = jnp.zeros((batch, kv_heads, max_len, head_dim), dtype)
-        return VanillaCache(z, z, jnp.zeros((batch,), jnp.int32))
+    def init(batch: int, kv_heads: int, max_len: int, head_dim: int,
+             dtype=jnp.bfloat16, block_p: int = 0):
+        z = jnp.zeros((batch, kv_heads, _round_up(max_len, block_p), head_dim),
+                      dtype)
+        return VanillaCache(z, z, jnp.zeros((batch,), jnp.int32),
+                            block_p=block_p)
+
+    def block_spec(self):
+        tbl, n = prefix_block_spec(self.length, self.k.shape[2], self.block_p,
+                                   self.k.shape[1])
+        return tbl, n, self.block_p
 
     def append(self, k_new: jnp.ndarray, v_new: jnp.ndarray) -> "VanillaCache":
         """k_new, v_new: (B, Hkv, T_new, Dh) written at [length, length+T_new)
@@ -120,7 +283,7 @@ class VanillaCache(LaneSliceable):
 
         k = jax.vmap(upd)(self.k, k_new.astype(self.k.dtype), self.length)
         v = jax.vmap(upd)(self.v, v_new.astype(self.v.dtype), self.length)
-        return VanillaCache(k, v, self.length + t_new)
+        return dataclasses.replace(self, k=k, v=v, length=self.length + t_new)
 
     def valid_mask(self) -> jnp.ndarray:
         # lazy (B, 1, S): broadcast happens inside the consumer's `where`
@@ -142,20 +305,24 @@ class VanillaCache(LaneSliceable):
 
 
 @_tree_dataclass
-class MaskedDMSCache(LaneSliceable):
-    k: jnp.ndarray          # (B, Hkv, S, Dh)
+class MaskedDMSCache(LaneSliceable, HasBlockTable):
+    k: jnp.ndarray          # (B, Hkv, S, Dh) — S padded to a block_p multiple
     v: jnp.ndarray
     retained: jnp.ndarray   # (B, Hkv, S) bool — False once evicted
     alpha: jnp.ndarray      # (B, Hkv, S) bool — recorded eviction decisions
     length: jnp.ndarray     # (B,) int32 — per lane
+    blocks: BlockTable      # incremental live-block table (flash-decode)
     window: int = dataclasses.field(metadata={"static": True})
 
     @staticmethod
     def init(batch: int, kv_heads: int, max_len: int, head_dim: int,
-             window: int, dtype=jnp.bfloat16):
-        z = jnp.zeros((batch, kv_heads, max_len, head_dim), dtype)
-        f = jnp.zeros((batch, kv_heads, max_len), bool)
-        return MaskedDMSCache(z, z, f, f, jnp.zeros((batch,), jnp.int32), window)
+             window: int, dtype=jnp.bfloat16, block_p: int = 0):
+        s = _round_up(max_len, block_p)
+        z = jnp.zeros((batch, kv_heads, s, head_dim), dtype)
+        f = jnp.zeros((batch, kv_heads, s), bool)
+        return MaskedDMSCache(z, z, f, f, jnp.zeros((batch,), jnp.int32),
+                              BlockTable.init(batch, kv_heads, s, block_p),
+                              window)
 
     def step(self, k_new, v_new, alpha_new) -> "MaskedDMSCache":
         """Append ONE token per head; execute the eviction scheduled w steps ago.
@@ -175,7 +342,15 @@ class MaskedDMSCache(LaneSliceable):
         evict_now = (idx[None, None, :] == j[:, None, None]) & alpha \
             & (j >= 0)[:, None, None]
         retained = retained & ~evict_now
-        return MaskedDMSCache(k, v, retained, alpha, t + 1, self.window)
+        b, h = self.retained.shape[:2]
+        blocks = self.blocks.insert(
+            jnp.broadcast_to(t[:, None], (b, h)),
+            jnp.broadcast_to((t < s)[:, None], (b, h)))
+        blocks = blocks.evict(
+            jnp.broadcast_to(j[:, None], (b, h)),
+            jnp.any(evict_now, axis=2))
+        return MaskedDMSCache(k, v, retained, alpha, t + 1, blocks,
+                              self.window)
 
     def valid_mask(self) -> jnp.ndarray:
         s = self.k.shape[2]
@@ -197,7 +372,7 @@ class MaskedDMSCache(LaneSliceable):
 
 
 @_tree_dataclass
-class SlotDMSCache(LaneSliceable):
+class SlotDMSCache(LaneSliceable, HasBlockTable):
     """Physically compacted cache: P slots per (batch, kv head).
 
     Allocation uses a ring free-list; the pending ring holds the last ``w``
@@ -208,7 +383,9 @@ class SlotDMSCache(LaneSliceable):
     flags ``overflowed`` for observability.
     """
 
-    k: jnp.ndarray            # (B, H, P, Dh) — post-RoPE keys
+    k: jnp.ndarray            # (B, H, P, Dh) — post-RoPE keys; P padded to
+    #                           a block_p multiple, slots >= `slots` are
+    #                           physical padding (never allocated)
     v: jnp.ndarray            # (B, H, P, Dh)
     pos: jnp.ndarray          # (B, H, P) int32 — logical position; INVALID_POS = empty
     valid: jnp.ndarray        # (B, H, P) bool
@@ -219,28 +396,39 @@ class SlotDMSCache(LaneSliceable):
     pending_alpha: jnp.ndarray  # (B, H, w) bool
     length: jnp.ndarray       # (B,) int32 — logical tokens written, per lane
     overflowed: jnp.ndarray   # (B, H) bool
+    blocks: BlockTable        # incremental live-block table (flash-decode)
     window: int = dataclasses.field(metadata={"static": True})
+    #: logical arena capacity — overflow/window semantics key off this, NOT
+    #: the (padded) physical extent of ``k``
+    slots: int = dataclasses.field(metadata={"static": True})
     # False = plain ring-buffer use (local-attention window cache): eviction
     # decisions are never predicted, overflow recycling does the windowing
     dms_active: bool = dataclasses.field(metadata={"static": True}, default=True)
 
     @staticmethod
     def init(batch: int, kv_heads: int, num_slots: int, head_dim: int,
-             window: int, dtype=jnp.bfloat16, dms_active: bool = True):
-        p = num_slots
+             window: int, dtype=jnp.bfloat16, dms_active: bool = True,
+             block_p: int = 0):
+        p = _round_up(num_slots, block_p)
         z = jnp.zeros((batch, kv_heads, p, head_dim), dtype)
         return SlotDMSCache(
             k=z, v=z,
             pos=jnp.full((batch, kv_heads, p), INVALID_POS, jnp.int32),
             valid=jnp.zeros((batch, kv_heads, p), bool),
-            free_ring=jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32), (batch, kv_heads, p)).copy(),
+            # ring contents are always *logical* slot ids; capacity is the
+            # physical extent but occupancy never exceeds `num_slots`
+            free_ring=jnp.broadcast_to(
+                jnp.arange(p, dtype=jnp.int32) % num_slots,
+                (batch, kv_heads, p)).copy(),
             free_head=jnp.zeros((batch, kv_heads), jnp.int32),
-            free_count=jnp.full((batch, kv_heads), p, jnp.int32),
+            free_count=jnp.full((batch, kv_heads), num_slots, jnp.int32),
             pending_slot=jnp.full((batch, kv_heads, window), -1, jnp.int32),
             pending_alpha=jnp.zeros((batch, kv_heads, window), bool),
             length=jnp.zeros((batch,), jnp.int32),
             overflowed=jnp.zeros((batch, kv_heads), bool),
+            blocks=BlockTable.init(batch, kv_heads, p, block_p),
             window=window,
+            slots=num_slots,
             dms_active=dms_active,
         )
 
@@ -275,8 +463,10 @@ class SlotDMSCache(LaneSliceable):
             (p_idx[None, None] == tail[..., None]) & do_evict[..., None],
             slot_c[..., None], self.free_ring)
         free_count = self.free_count + do_evict.astype(jnp.int32)
+        blocks = self.blocks.evict(slot_c, do_evict)
         return dataclasses.replace(
-            self, valid=valid, pos=pos, free_ring=free_ring, free_count=free_count)
+            self, valid=valid, pos=pos, free_ring=free_ring,
+            free_count=free_count, blocks=blocks)
 
     def _allocate(self) -> Tuple["SlotDMSCache", jnp.ndarray]:
         """Pop a slot per (B, H).  Returns (cache, slot (B,H))."""
@@ -306,6 +496,11 @@ class SlotDMSCache(LaneSliceable):
         t = cache.length                                                  # (B,)
         p_idx = jnp.arange(cache.valid.shape[2])
         hit = p_idx[None, None] == slot[..., None]                        # (B,H,P)
+        # overflow recycling overwrites a still-live slot: only a dead->live
+        # transition is a block-table insert event
+        was_valid = jnp.take_along_axis(cache.valid, slot[..., None],
+                                        axis=2)[..., 0]
+        blocks = cache.blocks.insert(slot, ~was_valid)
         k = jnp.where(hit[..., None], k_new.astype(cache.k.dtype), cache.k)
         v = jnp.where(hit[..., None], v_new.astype(cache.v.dtype), cache.v)
         pos = jnp.where(hit, t[:, None, None], cache.pos)
@@ -318,7 +513,7 @@ class SlotDMSCache(LaneSliceable):
         return dataclasses.replace(
             cache, k=k, v=v, pos=pos, valid=valid,
             pending_slot=pending_slot, pending_alpha=pending_alpha,
-            length=t + 1)
+            length=t + 1, blocks=blocks)
 
     def valid_mask(self) -> jnp.ndarray:
         return self.valid
@@ -331,7 +526,8 @@ class SlotDMSCache(LaneSliceable):
 
     @staticmethod
     def from_prefill(k, v, positions, retained, window: int, num_slots: int,
-                     alpha_bin: Optional[jnp.ndarray] = None) -> "SlotDMSCache":
+                     alpha_bin: Optional[jnp.ndarray] = None,
+                     block_p: int = 0) -> "SlotDMSCache":
         """Build a compacted cache from prefill outputs.
 
         k/v: (B, H, T, Dh) post-RoPE; retained: (B, H, T) bool;
@@ -340,11 +536,11 @@ class SlotDMSCache(LaneSliceable):
         entered into the pending ring so they get evicted on schedule.
         """
         b, h, t, d = k.shape
-        p = num_slots
+        p = _round_up(num_slots, block_p)
         # stable pack: order retained tokens by position
         order_key = jnp.where(retained, positions[None, None, :], INVALID_POS)
         order = jnp.argsort(order_key, axis=2)                      # (B,H,T) token idx by slot
-        n_keep = jnp.sum(retained, axis=2)                          # (B,H)
+        n_keep = jnp.minimum(jnp.sum(retained, axis=2), num_slots)  # (B,H)
         slot_ids = jnp.arange(p)
 
         def gather(x, fill):
@@ -360,9 +556,10 @@ class SlotDMSCache(LaneSliceable):
         pos_full = jnp.broadcast_to(positions[None, None, :], (b, h, t)).astype(jnp.int32)
         posc = gather(pos_full, INVALID_POS)
         valid = slot_ids[None, None] < n_keep[..., None]
-        free_count = p - n_keep
-        # free ring: slots [n_keep, P) are free
-        free_ring = jnp.mod(n_keep[..., None] + slot_ids[None, None], p).astype(jnp.int32)
+        free_count = num_slots - n_keep
+        # free ring: logical slots [n_keep, num_slots) are free
+        free_ring = jnp.mod(n_keep[..., None] + slot_ids[None, None],
+                            num_slots).astype(jnp.int32)
         cache = SlotDMSCache(
             k=kc, v=vc, pos=posc, valid=valid,
             free_ring=free_ring,
@@ -372,7 +569,9 @@ class SlotDMSCache(LaneSliceable):
             pending_alpha=jnp.zeros((b, h, window), bool),
             length=jnp.full((b,), t, jnp.int32),
             overflowed=jnp.zeros((b, h), bool),
+            blocks=BlockTable.from_valid(valid, block_p),
             window=window,
+            slots=num_slots,
         )
         if alpha_bin is not None:
             # tokens in (t-w, t] have un-executed decisions -> fill pending ring

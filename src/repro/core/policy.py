@@ -74,6 +74,19 @@ class AttendSpec:
     ``None`` when positions are meaningless (merged DMC entries).
     ``needs_weights`` requests the group-summed post-softmax weights back via
     :meth:`KVPolicy.post_attend`.
+
+    ``block_tbl``/``block_n``/``block_p`` are the **block-table contract**
+    with the flash-decode kernel (docs/kernels.md): ``block_tbl`` (B, Hkv,
+    NB) int32 lists the arena's live ``block_p``-sized K/V blocks per (lane,
+    kv head), compacted into the first ``block_n`` (B, Hkv) entries.  The
+    kernel's scalar-prefetched index maps stream exactly those blocks, so
+    decode HBM traffic scales with live tokens instead of arena capacity.
+    Every *visible* slot must be covered by a listed block (a listed block
+    may still contain dead slots — the kernel masks those via ``visible``);
+    ``block_p == 0`` means "no table" and the kernel falls back to streaming
+    the whole arena.  When ``block_p > 0`` the arena extent P must be a
+    ``block_p`` multiple (caches allocate pre-padded; see
+    ``KVPolicyConfig.block_p``).
     """
 
     k: jnp.ndarray
@@ -81,6 +94,9 @@ class AttendSpec:
     visible: jnp.ndarray
     positions: Optional[jnp.ndarray] = None
     needs_weights: bool = False
+    block_tbl: Optional[jnp.ndarray] = None
+    block_n: Optional[jnp.ndarray] = None
+    block_p: int = 0
 
 
 @_tree_dataclass
@@ -341,6 +357,16 @@ class KVPolicy:
 # ---------------------------------------------------------------------------
 
 
+def _attend_spec(cache, **kw) -> AttendSpec:
+    """Uniform spec builder: attach the cache's live-block table when it
+    maintains one (``block_spec`` is the cache-side half of the kernel's
+    block-table contract — see docs/kernels.md)."""
+    tbl, n, bp = cache.block_spec() if hasattr(cache, "block_spec") \
+        else (None, None, 0)
+    return AttendSpec(cache.k, cache.v, cache.valid_mask(), cache.positions(),
+                      block_tbl=tbl, block_n=n, block_p=bp, **kw)
+
+
 class _SlotRingMixin:
     """Shared decode path for slot-arena caches (dms / vanilla-local / window)."""
 
@@ -352,8 +378,7 @@ class _SlotRingMixin:
         if alpha is None:
             alpha = jnp.zeros((b, cfg.num_kv_heads), bool)
         cache = cache.step(k_new, v_new, alpha)
-        return cache, AttendSpec(cache.k, cache.v, cache.valid_mask(),
-                                 cache.positions())
+        return cache, _attend_spec(cache)
 
 
 @register_policy("vanilla")
@@ -367,14 +392,14 @@ class VanillaPolicy(_SlotRingMixin, KVPolicy):
             eff_len = min(max_len, layer_window + 1)
             return SlotDMSCache.init(batch, a.num_kv_heads, eff_len, a.head_dim,
                                      max(arch.dms.window, 1), dtype,
-                                     dms_active=False)
-        return VanillaCache.init(batch, a.num_kv_heads, max_len, a.head_dim, dtype)
+                                     dms_active=False, block_p=cfg.block_p)
+        return VanillaCache.init(batch, a.num_kv_heads, max_len, a.head_dim,
+                                 dtype, block_p=cfg.block_p)
 
     def decode_update(self, cache, q, k_new, v_new, aux):
         if isinstance(cache, VanillaCache):
             cache = cache.append(k_new, v_new)
-            return cache, AttendSpec(cache.k, cache.v, cache.valid_mask(),
-                                     cache.positions())
+            return cache, _attend_spec(cache)
         return self._slot_update(cache, k_new, v_new, aux)
 
     def prefill_import(self, arch, cfg, k, v, positions, retained, alpha_bin,
@@ -384,7 +409,8 @@ class VanillaPolicy(_SlotRingMixin, KVPolicy):
         if layer_window is not None:
             raise NotImplementedError("vanilla: no local-window import path")
         b, h, t, d = k.shape
-        cache = VanillaCache.init(b, a.num_kv_heads, max_len, a.head_dim, dtype)
+        cache = VanillaCache.init(b, a.num_kv_heads, max_len, a.head_dim,
+                                  dtype, block_p=cfg.block_p)
         return cache.append(k, v)
 
 
@@ -397,7 +423,7 @@ class WindowPolicy(_SlotRingMixin, KVPolicy):
         budget = _budget_tokens(cfg, max_len)
         return SlotDMSCache.init(batch, a.num_kv_heads, budget + 1, a.head_dim,
                                  max(arch.dms.window, 1), dtype,
-                                 dms_active=False)
+                                 dms_active=False, block_p=cfg.block_p)
 
     def decode_update(self, cache, q, k_new, v_new, aux):
         return self._slot_update(cache, k_new, v_new, aux)
@@ -415,7 +441,8 @@ class DMSPolicy(_SlotRingMixin, KVPolicy):
                    else max_len)
         slots = SlotDMSCache.provision_slots(eff_len, cfg.cr, arch.dms.window)
         return SlotDMSCache.init(batch, a.num_kv_heads, min(slots, eff_len + 1),
-                                 a.head_dim, arch.dms.window, dtype)
+                                 a.head_dim, arch.dms.window, dtype,
+                                 block_p=cfg.block_p)
 
     def decode_update(self, cache, q, k_new, v_new, aux):
         return self._slot_update(cache, k_new, v_new, aux)
@@ -427,7 +454,8 @@ class DMSPolicy(_SlotRingMixin, KVPolicy):
         slots = SlotDMSCache.provision_slots(eff_len, cfg.cr, arch.dms.window)
         return SlotDMSCache.from_prefill(
             k, v, positions, retained, arch.dms.window,
-            min(slots, eff_len + 1), alpha_bin=alpha_bin)
+            min(slots, eff_len + 1), alpha_bin=alpha_bin,
+            block_p=cfg.block_p)
 
 
 @register_policy("dms_masked")
@@ -439,7 +467,8 @@ class MaskedDMSPolicy(_SlotRingMixin, KVPolicy):
     def init_cache(self, arch, batch, max_len, cfg, *, layer_window, dtype):
         a = arch.attn
         return MaskedDMSCache.init(batch, a.num_kv_heads, max_len, a.head_dim,
-                                   arch.dms.window, dtype)
+                                   arch.dms.window, dtype,
+                                   block_p=cfg.block_p)
 
     def decode_update(self, cache, q, k_new, v_new, aux):
         return self._slot_update(cache, k_new, v_new, aux)
@@ -450,8 +479,7 @@ class _WeightEvictPolicy(KVPolicy):
 
     def decode_update(self, cache, q, k_new, v_new, aux):
         cache = cache.insert(k_new, v_new)
-        return cache, AttendSpec(cache.k, cache.v, cache.valid_mask(),
-                                 cache.pos, needs_weights=True)
+        return cache, _attend_spec(cache, needs_weights=True)
 
     def post_attend(self, cache, weights):
         return cache.evict(weights)
@@ -462,7 +490,8 @@ class TOVAPolicy(_WeightEvictPolicy):
     def init_cache(self, arch, batch, max_len, cfg, *, layer_window, dtype):
         a = arch.attn
         budget = _budget_tokens(cfg, max_len)
-        return TOVACache.init(batch, a.num_kv_heads, budget + 1, a.head_dim, dtype)
+        return TOVACache.init(batch, a.num_kv_heads, budget + 1, a.head_dim,
+                              dtype, block_p=cfg.block_p)
 
 
 @register_policy("h2o")
@@ -471,7 +500,7 @@ class H2OPolicy(_WeightEvictPolicy):
         a = arch.attn
         budget = _budget_tokens(cfg, max_len)
         return H2OCache.init(batch, a.num_kv_heads, budget + 1, a.head_dim,
-                             max(budget // 2, 1), dtype)
+                             max(budget // 2, 1), dtype, block_p=cfg.block_p)
 
 
 @register_policy("quest")
@@ -492,8 +521,15 @@ class QuestPolicy(KVPolicy):
         cache = cache.append(k_new, v_new)
         g = cfg.q_per_kv
         q_pool = q[:, 0].reshape(b, cfg.num_kv_heads, g, cfg.head_dim).mean(axis=2)
-        tok_mask = cache.token_mask_from_pages(cache.select_pages(q_pool))
-        return cache, AttendSpec(cache.k, cache.v, tok_mask, cache.positions())
+        pages = cache.select_pages(q_pool)
+        tok_mask = cache.token_mask_from_pages(pages)
+        # the top-k page selection IS a block table: with use_kernel the
+        # flash-decode kernel fetches exactly the selected pages, turning
+        # Quest's reads-tokens metering into real HBM traffic
+        tbl, n = cache.block_table_from_pages(pages)
+        return cache, AttendSpec(cache.k, cache.v, tok_mask, cache.positions(),
+                                 block_tbl=tbl, block_n=n,
+                                 block_p=cache.page_size)
 
     def metrics(self, cache):
         live = cache.retained_tokens().astype(jnp.float32).mean(axis=-1)
@@ -516,7 +552,8 @@ class DMCPolicy(KVPolicy):
     def init_cache(self, arch, batch, max_len, cfg, *, layer_window, dtype):
         a = arch.attn
         slots = int(max_len / cfg.cr) + 16
-        return DMCCache.init(batch, a.num_kv_heads, slots, a.head_dim)
+        return DMCCache.init(batch, a.num_kv_heads, slots, a.head_dim,
+                             block_p=cfg.block_p)
 
     def decode_update(self, cache, q, k_new, v_new, aux):
         cfg = aux["attn_cfg"]
@@ -526,9 +563,11 @@ class DMCPolicy(KVPolicy):
             alpha = jnp.zeros((b, cfg.num_kv_heads), bool)
         cache = cache.step(k_new, v_new, alpha)
         dtype = aux["dtype"]
+        tbl, n, bp = cache.block_spec()
         # merged entries have no single logical position: skip window masking
         return cache, AttendSpec(cache.k.astype(dtype), cache.v.astype(dtype),
-                                 cache.valid_mask(), None)
+                                 cache.valid_mask(), None,
+                                 block_tbl=tbl, block_n=n, block_p=bp)
 
 
 # autoload policies that live in their own modules (each registers itself on

@@ -1,16 +1,23 @@
-"""Pallas TPU kernel: flash-decode over the DMS slot-compacted KV arena.
+"""Pallas TPU kernel: block-table flash-decode over compacted KV arenas.
 
-The production win of DMS at decode time is that the *physical* arena has
-``P ≈ S/CR + w`` slots instead of S — this kernel streams exactly those P
-slots (the CR× HBM-traffic reduction is structural, not simulated).  Dead
-slots (free-list holes) are masked via the ``valid`` bitmap; blocks that are
-entirely dead are skipped with ``@pl.when`` using a scalar-prefetched
-per-block liveness table.
+The production win of KV compression at decode time is **HBM read traffic**:
+at CR× compression the kernel must move CR× fewer K/V bytes, not merely skip
+CR× of the compute.  This kernel makes that structural via *block-table
+indirection*: the grid runs over a per-(lane, kv-head) **compacted table of
+live block ids** (scalar-prefetched, maintained incrementally by the caches
+— see ``repro.core.kv_cache.BlockTable`` and docs/kernels.md), and the K/V
+``BlockSpec`` index maps read the table, so a block with zero live slots is
+**never DMA'd into VMEM**.  Iterations past a head's live count ``n`` clamp
+the index map to the last live block — Pallas's pipeline skips the copy when
+the block index does not change — and ``@pl.when`` skips their compute, so
+the tail costs neither bandwidth nor FLOPs.  Slot-level holes *inside* a
+live block are masked via the ``valid`` bitmap (kept in its stored dtype;
+any integer/bool dtype works — the kernel only tests ``!= 0``).
 
-Grid: ``(B·Hkv, nP)`` — one pass over the arena per kv head; the G query
-heads of the group ride along as rows of the (G, Dh) q tile so GQA reuses
-each streamed KV block across the whole group (the main arithmetic-intensity
-lever at decode time).
+Grid: ``(B·Hkv, NB_tbl)`` — one pass over (at most) the table width per kv
+head; the G query heads of the group ride along as rows of the (G, Dh) q
+tile so GQA reuses each streamed KV block across the whole group (the main
+arithmetic-intensity lever at decode time).
 """
 from __future__ import annotations
 
@@ -33,18 +40,18 @@ class DecodeConfig(NamedTuple):
     interpret: bool
 
 
-def _decode_kernel(blk_live_ref, q_ref, k_ref, v_ref, valid_ref,
+def _decode_kernel(tbl_ref, n_ref, q_ref, k_ref, v_ref, valid_ref,
                    o_ref, acc_ref, m_ref, l_ref, *, cfg: DecodeConfig):
-    h, pi = pl.program_id(0), pl.program_id(1)
-    np_ = pl.num_programs(1)
+    h, i = pl.program_id(0), pl.program_id(1)
+    ni = pl.num_programs(1)
 
-    @pl.when(pi == 0)
+    @pl.when(i == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    @pl.when(blk_live_ref[h, pi] > 0)
+    @pl.when(i < n_ref[h])
     def _body():
         q = q_ref[0].astype(jnp.float32)                  # (G, Dh)
         k = k_ref[0].astype(jnp.float32)                  # (BP, Dh)
@@ -53,7 +60,7 @@ def _decode_kernel(blk_live_ref, q_ref, k_ref, v_ref, valid_ref,
         s = s * (cfg.orig_dh ** -0.5)
         if cfg.logit_cap is not None:
             s = cfg.logit_cap * jnp.tanh(s / cfg.logit_cap)
-        live = valid_ref[0][None, :] > 0                  # (1, BP)
+        live = valid_ref[0][None, :] != 0                 # (1, BP)
         s = jnp.where(live, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
@@ -66,30 +73,46 @@ def _decode_kernel(blk_live_ref, q_ref, k_ref, v_ref, valid_ref,
             preferred_element_type=jnp.float32)
         m_ref[...] = m_new
 
-    @pl.when(pi == np_ - 1)
+    @pl.when(i == ni - 1)
     def _finish():
         l = l_ref[...]
         l_safe = jnp.where(l <= 0.0, 1.0, l)
         o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
 
 
-def decode_fwd(q, k, v, valid, blk_live, cfg: DecodeConfig):
-    """q: (BHkv, G, Dh); k/v: (BHkv, Pp, Dh); valid: (BHkv, Pp) int32;
-    blk_live: (BHkv, nP) int32.  Returns (BHkv, G, Dh)."""
+def _live_block(h, i, tbl_ref, n_ref):
+    """The arena block this grid step streams: table entry ``i``, clamped to
+    the last live entry past ``n`` — a repeated index means the pipeline
+    issues NO new DMA for the dead tail (and ``@pl.when`` skips its
+    compute)."""
+    return tbl_ref[h, jnp.minimum(i, jnp.maximum(n_ref[h] - 1, 0))]
+
+
+def decode_fwd(q, k, v, valid, block_tbl, block_n, cfg: DecodeConfig):
+    """q: (BHkv, G, Dh); k/v: (BHkv, P, Dh) with P a block_p multiple;
+    valid: (BHkv, P) in its stored dtype (bool/int — only ``!= 0`` is used);
+    block_tbl: (BHkv, NB_tbl) int32 compacted live block ids;
+    block_n: (BHkv,) int32 live counts.  Returns (BHkv, G, Dh).
+
+    Only blocks listed in the table are fetched: HBM traffic per head is
+    ``n * block_p * Dh * (itemsize_k + itemsize_v)`` regardless of arena
+    capacity P."""
     bh, g, dh = q.shape
-    pp = k.shape[1]
-    np_ = pp // cfg.block_p
+    nb_tbl = block_tbl.shape[1]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(bh, np_),
+        num_scalar_prefetch=2,
+        grid=(bh, nb_tbl),
         in_specs=[
-            pl.BlockSpec((1, g, dh), lambda h, pi, bl: (h, 0, 0)),
-            pl.BlockSpec((1, cfg.block_p, dh), lambda h, pi, bl: (h, pi, 0)),
-            pl.BlockSpec((1, cfg.block_p, dh), lambda h, pi, bl: (h, pi, 0)),
-            pl.BlockSpec((1, cfg.block_p), lambda h, pi, bl: (h, pi)),
+            pl.BlockSpec((1, g, dh), lambda h, i, tbl, n: (h, 0, 0)),
+            pl.BlockSpec((1, cfg.block_p, dh),
+                         lambda h, i, tbl, n: (h, _live_block(h, i, tbl, n), 0)),
+            pl.BlockSpec((1, cfg.block_p, dh),
+                         lambda h, i, tbl, n: (h, _live_block(h, i, tbl, n), 0)),
+            pl.BlockSpec((1, cfg.block_p),
+                         lambda h, i, tbl, n: (h, _live_block(h, i, tbl, n))),
         ],
-        out_specs=pl.BlockSpec((1, g, dh), lambda h, pi, bl: (h, 0, 0)),
+        out_specs=pl.BlockSpec((1, g, dh), lambda h, i, tbl, n: (h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((g, dh), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),
@@ -102,4 +125,4 @@ def decode_fwd(q, k, v, valid, blk_live, cfg: DecodeConfig):
         out_shape=jax.ShapeDtypeStruct((bh, g, dh), q.dtype),
         interpret=cfg.interpret,
         name="dms_decode",
-    )(blk_live, q, k, v, valid)
+    )(block_tbl, block_n, q, k, v, valid)

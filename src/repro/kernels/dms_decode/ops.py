@@ -1,6 +1,23 @@
-"""jit'd wrapper for the DMS decode kernel (inference only — no VJP needed)."""
+"""jit'd wrapper for the block-table flash-decode kernel (inference only).
+
+Two call modes (docs/kernels.md):
+
+* **Block-table mode** (``block_tbl``/``block_n``/``block_p`` given — what
+  every registry policy's :class:`~repro.core.policy.AttendSpec` supplies):
+  the arena is already allocated pre-padded to a ``block_p`` multiple in the
+  kernel-native per-(lane, kv-head) layout, so this wrapper is **copy-free**
+  — the (B, Hkv, …) → (B·Hkv, …) merges are metadata-only reshapes, there is
+  no ``jnp.pad``, no ``valid`` dtype cast, and no full-arena liveness
+  reduction on the step path.  HBM traffic ∝ live blocks.
+* **Legacy/dense mode** (no table — encoder-memory cross-attention, direct
+  kernel tests on arbitrary shapes): a table covering every written block is
+  derived from ``valid`` (one O(P) reduction) and the arena is padded to a
+  block multiple.  Traffic ∝ arena capacity; fine for dense encoder memory,
+  a pitfall for compacted caches (see docs/kernels.md — don't reintroduce).
+"""
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -15,32 +32,70 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+@functools.lru_cache(maxsize=None)
+def _default_interpret() -> bool:
+    """Resolve the backend once per process (trace-time constant), not per
+    decode call — ``jax.default_backend()`` walks the platform registry."""
+    return jax.default_backend() == "cpu"
+
+
+def modeled_hbm_bytes(block_n, block_p: int, head_dim: int,
+                      k_dtype, v_dtype) -> int:
+    """K/V bytes the kernel fetches for one decode step: ``sum(n)`` live
+    blocks × block bytes.  Exact by construction — the index maps fetch
+    precisely the first ``n`` table entries per (lane, kv head), and the
+    clamped tail re-uses the last block's buffer (no DMA).  The benchmark's
+    traffic model (``benchmarks/decode_path.py``) asserts this scales with
+    live tokens, not arena capacity."""
+    per_slot = head_dim * (jnp.dtype(k_dtype).itemsize
+                           + jnp.dtype(v_dtype).itemsize)
+    return int(jnp.sum(block_n)) * block_p * per_slot
+
+
 def dms_decode_attention(
     q: jnp.ndarray,       # (B, 1, Hq, Dh)
     k: jnp.ndarray,       # (B, Hkv, P, Dh)
     v: jnp.ndarray,
-    valid: jnp.ndarray,   # (B, Hkv, P) bool
+    valid: jnp.ndarray,   # (B, Hkv, P) bool (stored dtype — never cast here)
     *,
+    block_tbl: Optional[jnp.ndarray] = None,   # (B, Hkv, NB) int32
+    block_n: Optional[jnp.ndarray] = None,     # (B, Hkv) int32
+    block_p: Optional[int] = None,
     logit_cap: Optional[float] = None,
-    block_p: int = DEFAULT_BLOCK_P,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     b, _, hq, dh = q.shape
     hkv, p = k.shape[1], k.shape[2]
     g = hq // hkv
-    interpret = (jax.default_backend() == "cpu") if interpret is None else interpret
+    if interpret is None:
+        interpret = _default_interpret()
 
-    bp = min(block_p, _round_up(p, 8))
-    pp = _round_up(p, bp)
+    if block_tbl is not None:
+        # block-table fast path: zero full-arena copies — reshapes only
+        if p % block_p:
+            raise ValueError(
+                f"arena extent {p} not a multiple of block_p {block_p}; "
+                "caches must allocate pre-padded (KVPolicyConfig.block_p)")
+        bp = block_p
+        kf, vf = k.reshape(b * hkv, p, dh), v.reshape(b * hkv, p, dh)
+        valf = valid.reshape(b * hkv, p)
+        tblf = block_tbl.reshape(b * hkv, -1)
+        nf = block_n.reshape(b * hkv)
+    else:
+        # legacy/dense path: derive a written-prefix-of-blocks table from
+        # `valid` (O(P) reduction + pad — NOT the policy step path)
+        bp = min(block_p or DEFAULT_BLOCK_P, _round_up(p, 8))
+        pp = _round_up(p, bp)
+        kf = jnp.pad(k.reshape(b * hkv, p, dh), ((0, 0), (0, pp - p), (0, 0)))
+        vf = jnp.pad(v.reshape(b * hkv, p, dh), ((0, 0), (0, pp - p), (0, 0)))
+        valf = jnp.pad(valid.reshape(b * hkv, p), ((0, 0), (0, pp - p)))
+        nb = pp // bp
+        blk_live = jnp.any(valf.reshape(b * hkv, nb, bp) != 0, axis=-1)
+        tblf = jnp.argsort(~blk_live, axis=-1, stable=True).astype(jnp.int32)
+        nf = jnp.sum(blk_live, axis=-1).astype(jnp.int32)
 
     qf = q[:, 0].reshape(b, hkv, g, dh).reshape(b * hkv, g, dh)
-    kf = jnp.pad(k.reshape(b * hkv, p, dh), ((0, 0), (0, pp - p), (0, 0)))
-    vf = jnp.pad(v.reshape(b * hkv, p, dh), ((0, 0), (0, pp - p), (0, 0)))
-    valf = jnp.pad(valid.reshape(b * hkv, p).astype(jnp.int32),
-                   ((0, 0), (0, pp - p)))
-    blk_live = jnp.max(valf.reshape(b * hkv, pp // bp, bp), axis=-1)
-
     cfg = DecodeConfig(orig_dh=dh, g=g, block_p=bp, logit_cap=logit_cap,
                        interpret=bool(interpret))
-    out = decode_fwd(qf, kf, vf, valf, blk_live, cfg)
+    out = decode_fwd(qf, kf, vf, valf, tblf, nf, cfg)
     return out.reshape(b, hkv, g, dh).reshape(b, 1, hq, dh)

@@ -54,6 +54,11 @@ def main(argv=None):
                          "chunk boundary; 'second-miss' exports only "
                          "boundaries earlier traffic missed on (unshared "
                          "prompts export nothing)")
+    ap.add_argument("--export-stride", type=int, default=1,
+                    help="snapshot stride: offer only every Nth prefill-chunk "
+                         "boundary for export (the full-prompt boundary is "
+                         "always offered) — bounds hot-tier slot churn on "
+                         "very long shared prefixes")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens to "
                          "every request (exercises the prefix cache)")
@@ -65,7 +70,8 @@ def main(argv=None):
     engine = Engine(arch, params, policy, use_kernel=args.use_kernel,
                     chunk=args.chunk, prefix_cache_mb=args.prefix_cache_mb,
                     prefix_cache_device_mb=args.prefix_cache_device_mb,
-                    export_policy=args.export_policy)
+                    export_policy=args.export_policy,
+                    export_stride=args.export_stride)
 
     rng = np.random.default_rng(0)
     shared = rng.integers(3, arch.vocab_size,

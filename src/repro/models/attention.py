@@ -412,7 +412,9 @@ def decode_attention(
 
     if cross_kv is not None:
         k_all, v_all, valid = cross_kv                    # encoder memory: no update
-        out, _ = _masked_decode(q, k_all, v_all, valid, None, None, cfg, use_kernel)
+        out, _ = _masked_decode(
+            q, policy_lib.AttendSpec(k_all, v_all, valid), None, cfg,
+            use_kernel)
         y = out.reshape(b, 1, cfg.num_heads * cfg.head_dim) @ p["wo"].astype(dtype)
         aux["live_tokens"] = jnp.sum(valid, axis=-1).mean(axis=-1)
         aux["reads_tokens"] = aux["live_tokens"]
@@ -425,9 +427,8 @@ def decode_attention(
                "arch": arch, "dtype": dtype}
     inner, spec = pol.decode_update(cache.cache, q, k_new_c, v_new_c, pol_aux)
     out, w_group = _masked_decode(
-        q, spec.k, spec.v, spec.visible, spec.positions,
-        window if spec.positions is not None else None, cfg, use_kernel,
-        pos_lane, need_weights=spec.needs_weights)
+        q, spec, window if spec.positions is not None else None, cfg,
+        use_kernel, pos_lane, need_weights=spec.needs_weights)
     if spec.needs_weights:
         inner = pol.post_attend(inner, w_group)
     cache = dataclasses.replace(cache, cache=inner)
@@ -439,14 +440,18 @@ def decode_attention(
     return y.astype(x_t.dtype), cache, aux
 
 
-def _masked_decode(q, k, v, valid, pos, window, cfg, use_kernel,
+def _masked_decode(q, spec, window, cfg, use_kernel,
                    pos_t=None, need_weights=False):
-    """q: (B,1,Hq,Dh); k/v: (B,Hkv,P,Dh); valid: (B,Hkv,P) bool;
+    """q: (B,1,Hq,Dh); ``spec``: an :class:`repro.core.policy.AttendSpec`
+    (k/v: (B,Hkv,P,Dh), visible: (B,Hkv,P) bool, optional block table);
     pos_t: per-lane (B,) current positions (or scalar).
 
-    Local-window layers additionally hide slots with position <= t - window.
+    Local-window layers additionally hide slots with position <= t - window
+    (a *subset* restriction of ``spec.visible``, so the spec's live-block
+    table stays a valid cover — the kernel masks the hidden slots in-block).
     Returns (out (B,1,Hq,Dh), group-summed weights (B,Hkv,P) or None).
     """
+    k, v, valid, pos = spec.k, spec.v, spec.visible, spec.positions
     b, _, hq, dh = q.shape
     hkv = k.shape[1]
     g = hq // hkv
@@ -456,7 +461,11 @@ def _masked_decode(q, k, v, valid, pos, window, cfg, use_kernel,
         vis = vis & (pos > (ptl[:, None, None] - window))
     if use_kernel and not need_weights:
         from repro.kernels.dms_decode import ops as dkops
-        out = dkops.dms_decode_attention(q, k, v, vis, logit_cap=cfg.logit_softcap)
+        if vis.shape[1] != hkv:       # lazy (B,1,P) masks (VanillaCache)
+            vis = jnp.broadcast_to(vis, (b, hkv, k.shape[2]))
+        out = dkops.dms_decode_attention(
+            q, k, v, vis, block_tbl=spec.block_tbl, block_n=spec.block_n,
+            block_p=spec.block_p or None, logit_cap=cfg.logit_softcap)
         return out, None
     # MXU-style mixed precision: bf16 operands, fp32 accumulation — the cache
     # is never converted/materialised in fp32 (that would double decode traffic)

@@ -319,6 +319,14 @@ def _init_layer_cache(arch: ArchConfig, kind: str, batch: int, max_len: int,
 
 def init_decode_state(arch: ArchConfig, batch: int, max_len: int,
                       policy: KVPolicyConfig, dtype=None) -> Dict[str, Any]:
+    """Provision the full decode state: one cache per layer-pattern position,
+    stacked over superblocks (lane axis at position 1 on every leaf).
+
+    KV arenas come out of the registry pre-padded to ``policy.block_p``
+    multiples in the flash-decode kernel's native layout, with each cache's
+    live-block table (docs/kernels.md) riding as ordinary lane-leading state
+    — so fork/gather/reclaim/snapshot below need no block-table-specific
+    code, and the decode step path never pads or reshapes an arena."""
     dtype = dtype or jnp.dtype(arch.dtype)
     nsb = arch.num_superblocks
     state: Dict[str, Any] = {}

@@ -189,6 +189,16 @@ def cache_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh,
             return None, "model"
         return hspec, None
 
+    # block-table leaves (docs/kernels.md): per-(lane, head) NB-sized index
+    # state — head-sharded like the arena metadata they describe, table
+    # entries replicated (NB is small and consumed via scalar prefetch).
+    # Matched by path so BlockTable.pos never falls into the arena-slot
+    # "pos" rule below (its NB axis must stay in lockstep with tbl/count —
+    # insert/evict mix them elementwise every step).
+    if "blocks" in path:
+        if nd == 4:                        # count / tbl / pos: (L,B,H,NB)
+            return P(None, bspec, _model_if(shape[2], tp), None)
+        return P(None, bspec, _model_if(shape[2], tp))   # n: (L,B,H)
     if name in ("k", "v") and nd == 5:
         hspec, pspec = slot_specs(shape[2], shape[3])
         return P(None, bspec, hspec, pspec, None)

@@ -61,7 +61,7 @@ class Engine:
                  use_kernel: bool = False, temperature: float = 0.0,
                  chunk: int = 8, prefix_cache_mb: float = 0.0,
                  prefix_cache_device_mb: float = 0.0,
-                 export_policy: str = "always"):
+                 export_policy: str = "always", export_stride: int = 1):
         self.arch = arch
         self.params = params
         self.policy = policy
@@ -72,11 +72,14 @@ class Engine:
         # served prompt seeds prefix reuse for all later traffic.
         # prefix_cache_device_mb buys the device-resident hot tier (zero-copy
         # hit path, deferred exports); export_policy="second-miss" stops
-        # unshared prompts from exporting at all.
+        # unshared prompts from exporting at all; export_stride=N keeps only
+        # every Nth chunk boundary (+ the full-prompt one) — bounded slot
+        # churn on very long shared prefixes.
         self.prefix_cache = (
             PrefixCache(int(prefix_cache_mb * 2 ** 20),
                         int(prefix_cache_device_mb * 2 ** 20),
-                        export_policy=export_policy)
+                        export_policy=export_policy,
+                        export_stride=export_stride)
             if prefix_cache_mb > 0 or prefix_cache_device_mb > 0 else None)
         # jitted once per Engine: the compile cache survives across Scheduler
         # instances (per-request scheduling never retraces)

@@ -200,13 +200,22 @@ class PrefixCache:
     """
 
     def __init__(self, capacity_bytes: int, device_capacity_bytes: int = 0,
-                 export_policy: str = "always", max_hot_slots: int = 32):
+                 export_policy: str = "always", max_hot_slots: int = 32,
+                 export_stride: int = 1):
         if export_policy not in EXPORT_POLICIES:
             raise ValueError(f"export_policy {export_policy!r} not in "
                              f"{EXPORT_POLICIES}")
+        if export_stride < 1:
+            raise ValueError(f"export_stride must be >= 1, got {export_stride}")
         self.capacity_bytes = int(capacity_bytes)
         self.device_capacity_bytes = int(device_capacity_bytes)
         self.export_policy = export_policy
+        #: snapshot stride: only every Nth prefill-chunk boundary of a prompt
+        #: is offered for export (the final full-prompt boundary always is).
+        #: Coarser boundaries bound hot-tier slot churn on very long shared
+        #: prefixes — a 10k-token system prompt at chunk 8 would otherwise
+        #: push ~1250 snapshots through the slab LRU for one prompt.
+        self.export_stride = int(export_stride)
         #: per-signature slab slot cap: bounds eager device allocation and
         #: keeps budget available for later signatures (see _ensure_hot)
         self.max_hot_slots = int(max_hot_slots)
@@ -327,14 +336,26 @@ class PrefixCache:
         Shape-only — the scheduler's "skip the export outright" fast gate."""
         return nbytes <= max(self.capacity_bytes, self.device_capacity_bytes)
 
-    def want_export(self, signature: Tuple, tokens: np.ndarray) -> bool:
+    def want_export(self, signature: Tuple, tokens: np.ndarray,
+                    chunk_index: Optional[int] = None,
+                    final: bool = False) -> bool:
         """Should the scheduler export the boundary ``len(tokens)``?
 
-        One radix descent: False if that exact boundary already holds an
-        entry; under ``"second-miss"`` additionally require that at least
+        ``chunk_index`` is the 1-based ordinal of the prefill chunk that
+        produced this boundary: with ``export_stride > 1`` only every Nth
+        chunk boundary is offered (strided snapshots), except the ``final``
+        full-prompt boundary which is always eligible — it is the one a
+        full-prompt hit needs.  The stride check is pure host arithmetic, so
+        skipped boundaries cost no radix descent either.
+
+        Then one radix descent: False if that exact boundary already holds
+        an entry; under ``"second-miss"`` additionally require that at least
         two lookups asked for this prefix (``misses >= 2`` — the requesting
         lookup itself contributes one, so the gate opens exactly when
         *earlier* traffic wanted it too)."""
+        if (self.export_stride > 1 and not final and chunk_index is not None
+                and chunk_index % self.export_stride != 0):
+            return False
         tokens = np.asarray(tokens)
         node, exact = self._descend_to(signature, tokens)
         if exact and node.entry is not None:

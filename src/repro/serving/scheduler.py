@@ -93,6 +93,7 @@ class _ReqState:
         self.req = req
         self.lanes: List[int] = []             # lane -> chain index by order
         self.consumed = 0                      # prompt tokens prefetched
+        self.prefill_chunks = 0                # chunks prefilled (export stride)
         self.hold_logits: Optional[np.ndarray] = None
         self.chains: List[List[int]] = [[] for _ in range(req.width)]
         self.chain_done = [False] * req.width
@@ -320,15 +321,18 @@ class Scheduler:
 
     def _want_prefix_export(self, r: _ReqState) -> bool:
         """Gate the per-chunk snapshot export on pure host checks, so the
-        skip paths (no cache, over-budget snapshot, boundary already in the
-        tree, no earlier traffic asked under ``second-miss``) cost no device
-        sync at all — one radix descent total (``want_export``)."""
+        skip paths (no cache, over-budget snapshot, off-stride boundary,
+        boundary already in the tree, no earlier traffic asked under
+        ``second-miss``) cost no device sync at all — at most one radix
+        descent total (``want_export``)."""
         if self.prefix_cache is None:
             return False
         if not self.prefix_cache.can_store(self._snap_nbytes):
             return False                   # can never fit: skip the export
         prefix = r.req.prompt[:r.consumed]
-        return self.prefix_cache.want_export(self.signature, prefix)
+        return self.prefix_cache.want_export(
+            self.signature, prefix, chunk_index=r.prefill_chunks,
+            final=r.consumed == len(r.req.prompt))
 
     def _export_prefix(self, r: _ReqState, lane: int, logits) -> None:
         """Offer the just-prefilled boundary ``prompt[:consumed]`` to the
@@ -455,6 +459,7 @@ class Scheduler:
         for lane, take in prefill_take.items():
             r = self.owner[lane]
             r.consumed += take
+            r.prefill_chunks += 1
             if r.consumed == len(r.req.prompt):
                 if ll is None:
                     ll = np.asarray(last_logits)

@@ -145,6 +145,59 @@ def test_decode_kernel_all_blocks_dead_but_one():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("shape", [(2, 4, 2, 64, 16), (1, 8, 1, 96, 32),
+                                   (2, 12, 2, 32, 8)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_decode_kernel_block_table_mode(shape, dtype):
+    """Explicit block-table mode (the policy step path): fragmented valid,
+    compacted table — same output as the oracle, no pad/derive in the
+    wrapper."""
+    from repro.core.kv_cache import BlockTable
+    b, hq, hkv, p, dh = shape
+    bp = 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    q = jax.random.normal(ks[0], (b, 1, hq, dh), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, p, dh), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, p, dh), dtype)
+    valid = jax.random.bernoulli(ks[3], 0.4, (b, hkv, p)).at[:, :, 0].set(True)
+    bt = BlockTable.from_valid(valid, bp)
+    out = dops.dms_decode_attention(q, k, v, valid, block_tbl=bt.tbl,
+                                    block_n=bt.n, block_p=bp)
+    ref = dref.dms_decode_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_decode_kernel_partial_table_page_sparse():
+    """A table listing only SOME live blocks (Quest top-k pages): the kernel
+    must attend exactly to the listed blocks' visible slots."""
+    from repro.core.kv_cache import BlockTable
+    b, hq, hkv, p, dh, bp = 1, 4, 2, 64, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (b, 1, hq, dh))
+    k = jax.random.normal(ks[1], (b, hkv, p, dh))
+    v = jax.random.normal(ks[2], (b, hkv, p, dh))
+    page_mask = jnp.zeros((b, hkv, p // bp), bool).at[:, :, ::2].set(True)
+    vis = jnp.repeat(page_mask, bp, axis=2)           # selected pages only
+    bt = BlockTable.from_valid(vis, bp)
+    out = dops.dms_decode_attention(q, k, v, vis, block_tbl=bt.tbl,
+                                    block_n=bt.n, block_p=bp)
+    ref = dref.dms_decode_ref(q, k, v, vis)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_kernel_table_mode_rejects_unpadded():
+    with pytest.raises(ValueError, match="not a multiple"):
+        b, hkv, p, dh = 1, 1, 20, 8
+        q = jnp.zeros((b, 1, 2, dh))
+        k = jnp.zeros((b, hkv, p, dh))
+        dops.dms_decode_attention(
+            q, k, k, jnp.ones((b, hkv, p), bool),
+            block_tbl=jnp.zeros((b, hkv, 2), jnp.int32),
+            block_n=jnp.ones((b, hkv), jnp.int32), block_p=16)
+
+
 def test_chunked_impls_match_kernel():
     """The dry-run lowering paths agree with the Pallas kernel."""
     from repro.models.attention import attention_chunked, attention_chunked_scan

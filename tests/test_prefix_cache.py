@@ -452,6 +452,49 @@ def test_want_export_second_miss_needs_two_askers():
     assert not pc.want_export(SIG, p[:2])                 # covered now
 
 
+def test_want_export_stride_gates_chunk_boundaries():
+    """export_stride=N: only every Nth prefill-chunk boundary is offered —
+    except the final (full-prompt) one, which is always eligible."""
+    pc = PrefixCache(1 << 20, export_stride=2)
+    p = _mk([1, 2, 3, 4, 5, 6])
+    assert not pc.want_export(SIG, p[:2], chunk_index=1)   # off-stride
+    assert pc.want_export(SIG, p[:4], chunk_index=2)       # on-stride
+    assert not pc.want_export(SIG, p[:5], chunk_index=3)
+    assert pc.want_export(SIG, p, chunk_index=3, final=True)  # full prompt
+    # stride 1 (default) gates nothing; callers without a chunk ordinal
+    # (direct inserts, tests) are never stride-gated
+    assert PrefixCache(1 << 20).want_export(SIG, p[:2], chunk_index=1)
+    assert pc.want_export(SIG, p[:2])
+    with pytest.raises(ValueError):
+        PrefixCache(1 << 20, export_stride=0)
+
+
+def test_export_stride_bounds_boundary_churn(tiny_arch, tiny_params):
+    """End-to-end: a 32-token prompt at chunk 8 exports 4 boundaries at
+    stride 1 but only 2 at stride 2 — and the full-prompt boundary is one
+    of them, so a repeat prompt still skips prefill entirely and generates
+    exactly the cold serve's tokens."""
+    prompt = _prompt(32, seed=21, vocab=tiny_arch.vocab_size)
+    cfg = _policy_cfg("dms", tiny_arch.dms.window)
+    max_len = len(prompt) + 5
+
+    def serve(stride):
+        eng = Engine(tiny_arch, tiny_params, cfg, chunk=8, prefix_cache_mb=64,
+                     export_stride=stride)
+        first = _serve_one(eng, prompt, 5, max_len)
+        return eng, first
+
+    e1, _ = serve(1)
+    e2, _ = serve(2)
+    assert e1.prefix_cache.inserts == 4
+    assert e2.prefix_cache.inserts == 2                    # chunks 2 and 4
+    r2 = _serve_one(e2, prompt, 5, max_len)                # repeat: full hit
+    assert r2.prefill_meter.kv_reads == 0.0                # skipped prefill
+    cold = _serve_one(Engine(tiny_arch, tiny_params, cfg, chunk=8),
+                      prompt, 5, max_len)
+    np.testing.assert_array_equal(r2.tokens, cold.tokens)
+
+
 def test_second_miss_records_survive_pruning_resets():
     """Miss history resets past the record budget: exports are delayed again
     (never wrong), ghost nodes are pruned, and entries survive the reset."""
