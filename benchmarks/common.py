@@ -79,7 +79,9 @@ def compare_to_baseline(name: str, fresh, baseline, rtol: float = 0.1,
     tol = rtol * max(abs(baseline), 1e-12)
     if abs(fresh - baseline) > tol:
         problems.append(
-            f"{loc}: {baseline!r} -> {fresh!r} (|Δ| > {rtol:.0%})")
+            f"{loc}: baseline={baseline!r} fresh={fresh!r} "
+            f"|Δ|={abs(fresh - baseline):.6g} exceeds "
+            f"tolerance {tol:.6g} (rtol={rtol:.0%} of baseline)")
     return problems
 
 

@@ -1,0 +1,223 @@
+"""Benchmark: paged KV block pool — footprint ∝ live tokens, CoW fork.
+
+Fixed per-lane arenas make peak device KV bytes scale with *provisioned*
+capacity: every lane owns ``ceil(max_len/CR)`` slots from admission to EOS
+even while it holds a handful of live tokens (the capacity twin of the
+dead-block-DMA pitfall — docs/kernels.md).  The paged pool
+(``repro.core.block_pool``) allocates ``block_p``-sized pages on first
+write and frees them when the incremental block table reports a block dead,
+so a lane's footprint IS its live blocks.  This suite pins the three
+capacity claims:
+
+* **footprint timeline** — lanes admitted staggered into one pooled
+  SlotDMS cache: allocated pool blocks track the live-block population
+  *exactly* (the allocator invariant, sampled every step in-graph), while
+  the fixed-arena provisioning for the same lanes is a flat line an order
+  of magnitude up.
+* **lanes at a fixed byte budget** — the pool is sized to what TWO fixed
+  per-lane arenas would reserve; 8 CR8 lanes then decode concurrently to
+  full depth without exhausting it (≥ 4× the concurrent lanes per byte).
+* **zero-copy fork** — a width-4 shared-prefill fork of a pooled lane
+  moves **zero** pool-arena bytes at fork time: the CoW copy counter does
+  not tick and the fork jaxpr contains no pool-sized op (counted, not
+  eyeballed; the fixed-arena fork's W-way arena gather is the contrast).
+  Divergent decode afterwards ticks the counter — pages copy exactly when
+  chains first diverge, never before.
+
+Baseline: ``artifacts/bench/paged_arena.json`` (committed); CI runs
+``benchmarks.run --only paged_arena --check`` (paged-pool-smoke job).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from benchmarks.decode_path import _walk_eqns
+from repro.core import block_pool, policy as policy_lib
+from repro.core.kv_cache import SlotDMSCache, _round_up
+
+LANES, HKV, DH = 8, 2, 32
+MAX_LEN = 4096                   # provisioning horizon for the arenas
+CR = 8.0
+WINDOW = 8
+BLOCK_P = 16
+
+
+def _geometry():
+    slots = min(SlotDMSCache.provision_slots(MAX_LEN, CR, WINDOW), MAX_LEN + 1)
+    padded = _round_up(slots, BLOCK_P)
+    nb = padded // BLOCK_P                     # logical blocks per (lane, head)
+    return slots, nb
+
+
+def _block_bytes():
+    return BLOCK_P * DH * 2 * 4              # K + V pages, fp32
+
+
+def _streams(steps, seed=7):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    ks = jax.random.normal(k1, (steps, LANES, HKV, 1, DH), jnp.float32)
+    vs = jax.random.normal(k2, (steps, LANES, HKV, 1, DH), jnp.float32)
+    alphas = jax.random.bernoulli(k3, 1.0 - 1.0 / CR, (steps, LANES, HKV))
+    return ks, vs, alphas
+
+
+def _lane_select(mask, on_true, on_false):
+    """Serving's inactive-lane rollback for a bare (batch-leading) cache:
+    per-lane leaves of frozen lanes roll back wholesale, the shared pool is
+    kept (its mutations were already event-masked inside the step)."""
+    def sel(a, b):
+        if isinstance(a, block_pool.BlockPool):
+            return a
+        m = jnp.reshape(mask, (-1,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+    return jax.tree_util.tree_map(
+        sel, on_true, on_false,
+        is_leaf=lambda x: isinstance(x, block_pool.BlockPool))
+
+
+def _drive(cache, steps, active):
+    """scan ``steps`` SlotDMS steps under a per-step (steps, LANES) active
+    mask, emitting per-step in-graph pool telemetry (no host round-trips)."""
+    ks, vs, alphas = _streams(steps)
+
+    def body(c, xs):
+        kk, vv, aa, act = xs
+        c = _lane_select(act, c.step(kk, vv, aa, active=act), c)
+        return c, (jnp.sum(c.pool.ref > 0), jnp.sum(c.blocks.n),
+                   jnp.sum(c.blocks.count))
+
+    cache, ys = jax.jit(
+        lambda c, xs: jax.lax.scan(body, c, xs))(cache, (ks, vs, alphas,
+                                                         jnp.asarray(active)))
+    alloc, live_blocks, live_tokens = (np.asarray(y) for y in ys)
+    return cache, alloc, live_blocks, live_tokens
+
+
+def run(quick=False):
+    steps = 64 if quick else 128
+    slots, nb = _geometry()
+    fixed_lane_blocks = HKV * nb             # blocks ONE fixed arena reserves
+    provisioned = LANES * fixed_lane_blocks  # fixed provisioning, all lanes
+    payload = {"geometry": {"slots": slots, "blocks_per_lane": fixed_lane_blocks,
+                            "block_bytes": _block_bytes()}}
+
+    # -- footprint timeline: staggered admissions, default (parity) pool ----
+    active = np.zeros((steps, LANES), bool)
+    for lane in range(LANES):
+        active[lane * (steps // LANES):, lane] = True
+    cache = SlotDMSCache.init(LANES, HKV, slots, DH, WINDOW, jnp.float32,
+                              block_p=BLOCK_P, paged=True)
+    cache, alloc, live_blocks, _ = _drive(cache, steps, active)
+    # allocator invariant, sampled every step: allocated pool pages == blocks
+    # with >= 1 live slot (no fork here, so no page is shared)
+    assert np.array_equal(alloc, live_blocks), (alloc, live_blocks)
+    peak = int(np.asarray(cache.pool.high_water))
+    frac = peak / provisioned
+    # footprint tracks live tokens: peak allocation is a sliver of what the
+    # fixed layout reserves for the same lanes from step 0
+    assert frac <= 0.35, (peak, provisioned)
+    timeline = [{"step": int(t), "allocated_blocks": int(alloc[t]),
+                 "allocated_bytes": int(alloc[t]) * _block_bytes()}
+                for t in range(0, steps, max(steps // 8, 1))]
+    footprint = {
+        "timeline": timeline,
+        "peak_blocks": peak,
+        "peak_bytes": peak * _block_bytes(),
+        "provisioned_blocks": provisioned,
+        "provisioned_bytes": provisioned * _block_bytes(),
+        "peak_over_provisioned": frac,
+    }
+    emit("paged_arena/footprint", 0.0, {k: v for k, v in footprint.items()
+                                        if k != "timeline"})
+    payload["footprint"] = footprint
+
+    # -- 8 lanes inside TWO fixed lanes' byte budget ------------------------
+    pool_blocks = 2 * fixed_lane_blocks
+    cache = SlotDMSCache.init(LANES, HKV, slots, DH, WINDOW, jnp.float32,
+                              block_p=BLOCK_P, paged=True,
+                              pool_blocks=pool_blocks)
+    cache, alloc, _, _ = _drive(cache, steps,
+                                np.ones((steps, LANES), bool))
+    exhausted = bool(np.asarray(cache.pool.exhausted))
+    lanes_fixed = pool_blocks // fixed_lane_blocks
+    budget = {
+        "pool_blocks": pool_blocks,
+        "pool_bytes": pool_blocks * _block_bytes(),
+        "lanes_paged": LANES,
+        "lanes_fixed_same_budget": lanes_fixed,
+        "lane_multiplier": LANES / lanes_fixed,
+        "decode_steps": steps,
+        "high_water_blocks": int(np.asarray(cache.pool.high_water)),
+        "exhausted": exhausted,
+    }
+    # acceptance: CR8 sustains >= 4x the concurrent lanes of fixed arenas
+    # under the same pool byte budget, never running the pool dry
+    assert not exhausted, budget
+    assert budget["lane_multiplier"] >= 4.0, budget
+    emit("paged_arena/lanes_at_budget", 0.0, budget)
+    payload["lanes_at_budget"] = budget
+
+    # -- width-4 fork moves zero pool bytes ---------------------------------
+    # A SMALL arena whose slot ring has already wrapped when the fork lands:
+    # the forked chains' first divergent writes then reuse eviction holes
+    # inside *shared* pages — the CoW path proper, not fresh-page allocs.
+    slots_small = 4 * BLOCK_P
+    cache = SlotDMSCache.init(LANES, HKV, slots_small, DH, WINDOW,
+                              jnp.float32, block_p=BLOCK_P, paged=True)
+    warm = np.zeros((steps, LANES), bool)
+    warm[:, 0] = True                        # prefill one lane only
+    cache, _, _, _ = _drive(cache, steps, warm)
+    pol = policy_lib.get_policy("dms")
+    src = jnp.asarray([0, 0, 0, 0] + list(range(4, LANES)), jnp.int32)
+    fork_fn = jax.jit(lambda c: pol.gather_cache(c, src, axis=0))
+    forked = fork_fn(cache)
+
+    def _kv_sized_ops(tree_in, min_elems):
+        # float ops at least min_elems big = actual K/V bytes moving (the
+        # refcount recompute builds a pool-squared int32 one-hot — metadata,
+        # deliberately not counted)
+        return sum(
+            1 for eqn in _walk_eqns(jax.make_jaxpr(
+                lambda c: pol.gather_cache(c, src, axis=0))(tree_in).jaxpr)
+            for v in eqn.outvars
+            if hasattr(v.aval, "shape")
+            and jnp.issubdtype(v.aval.dtype, jnp.floating)
+            and int(np.prod(v.aval.shape)) >= min_elems)
+
+    big_ops = _kv_sized_ops(cache, int(np.prod(cache.pool.k.shape)))
+    cow_at_fork = (int(np.asarray(forked.pool.cow_copies))
+                   - int(np.asarray(cache.pool.cow_copies)))
+    # contrast: the fixed-arena fork gathers the full per-lane arenas
+    fixed = SlotDMSCache.init(LANES, HKV, slots_small, DH, WINDOW,
+                              jnp.float32, block_p=BLOCK_P)
+    big_ops_fixed = _kv_sized_ops(fixed, int(np.prod(fixed.k.shape)))
+    # divergence: the four chains now write different tokens — CoW pages
+    # copy exactly at each chain's first divergent write, never at fork
+    div_act = np.zeros((steps, LANES), bool)
+    div_act[:32, :4] = True
+    forked, _, _, _ = _drive(forked, steps, div_act)
+    fork = {
+        "fork_width": 4,
+        "cow_copies_at_fork": cow_at_fork,
+        "pool_sized_ops_in_fork_jaxpr": big_ops,
+        "arena_sized_ops_in_fixed_fork_jaxpr": big_ops_fixed,
+        "cow_copies_after_divergence": int(np.asarray(forked.pool.cow_copies)),
+        "shared_blocks_at_fork": int(np.asarray(
+            jnp.sum(fork_fn(cache).pool.ref > 1))),
+    }
+    assert fork["cow_copies_at_fork"] == 0, fork
+    assert fork["pool_sized_ops_in_fork_jaxpr"] == 0, fork
+    assert fork["arena_sized_ops_in_fixed_fork_jaxpr"] > 0, fork
+    assert fork["cow_copies_after_divergence"] > 0, fork
+    assert fork["shared_blocks_at_fork"] > 0, fork
+    emit("paged_arena/fork_zero_copy", 0.0, fork)
+    payload["fork_zero_copy"] = fork
+
+    save_json("paged_arena", payload)
+
+
+if __name__ == "__main__":
+    run()

@@ -31,6 +31,9 @@ Suites (↔ paper artifact):
     decode_path       kernel: block-table flash-decode HBM traffic ∝ live
                       tokens (fill/CR/fragmentation sweeps, zero-copy step
                       path — see docs/kernels.md)
+    paged_arena       serving: paged KV block pool — footprint ∝ live
+                      tokens, 4x lanes per byte budget, zero-copy CoW fork
+                      (see docs/serving.md)
 """
 from __future__ import annotations
 
@@ -55,7 +58,7 @@ def main(argv=None) -> int:
     from benchmarks import common
     from benchmarks import (ablation_eviction, continuous_batching, cr_profile,
                             cr_sweep, data_efficiency, decode_path,
-                            latency_model, pareto, prefix_cache,
+                            latency_model, paged_arena, pareto, prefix_cache,
                             roofline_table)
     suites = {
         "latency_model": latency_model.run,
@@ -68,6 +71,7 @@ def main(argv=None) -> int:
         "continuous_batching": continuous_batching.run,
         "prefix_cache": prefix_cache.run,
         "decode_path": decode_path.run,
+        "paged_arena": paged_arena.run,
     }
     if args.only:
         suites = {k: v for k, v in suites.items() if k == args.only}

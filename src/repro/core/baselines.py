@@ -27,10 +27,11 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import block_pool
 from repro.core.kv_cache import (BlockTable, HasBlockTable,
                                  LaneSliceable, _round_up,
-                                 _tree_dataclass, prefix_block_spec,
-                                 INVALID_POS)
+                                 _tree_dataclass, event_mask, init_paged,
+                                 prefix_block_spec, INVALID_POS)
 
 NEG_INF = -1e30
 
@@ -49,24 +50,32 @@ class TOVACache(LaneSliceable, HasBlockTable):
     length: jnp.ndarray  # (B,) — per lane
     blocks: BlockTable   # incremental live-block table (flash-decode)
     slots: int = dataclasses.field(metadata={"static": True})  # logical arena
+    pool: Optional[block_pool.BlockPool] = None
+    phys: Optional[jnp.ndarray] = None       # (B, H, NB) int32, -1 = unmapped
 
     @staticmethod
     def init(batch, kv_heads, budget, head_dim, dtype=jnp.bfloat16,
-             block_p: int = 0):
+             block_p: int = 0, paged: bool = False,
+             pool_blocks: Optional[int] = None):
         p = _round_up(budget, block_p)
-        z = jnp.zeros((batch, kv_heads, p, head_dim), dtype)
+        pool = phys = None
+        if paged:
+            pool, phys, z = init_paged(batch, kv_heads, p, head_dim, block_p,
+                                       dtype, pool_blocks)
+        else:
+            z = jnp.zeros((batch, kv_heads, p, head_dim), dtype)
         return TOVACache(z, z,
                          jnp.full((batch, kv_heads, p), INVALID_POS, jnp.int32),
                          jnp.zeros((batch, kv_heads, p), bool),
                          jnp.zeros((batch,), jnp.int32),
                          BlockTable.init(batch, kv_heads, p, block_p),
-                         budget)
+                         budget, pool=pool, phys=phys)
 
     @property
     def budget(self) -> int:
         return self.slots - 1   # arena is budget + 1 (room to insert-then-evict)
 
-    def insert(self, k_new, v_new) -> "TOVACache":
+    def insert(self, k_new, v_new, active=None) -> "TOVACache":
         """Insert the new token into a free *logical* slot (the arena always
         has one; physical padding slots are never allocated)."""
         p = self.k.shape[2]
@@ -74,17 +83,26 @@ class TOVACache(LaneSliceable, HasBlockTable):
         slot = jnp.argmax(free, axis=2).astype(jnp.int32)         # first free
         hit = (jnp.arange(p)[None, None] == slot[..., None])
         newly = jnp.take_along_axis(free, slot[..., None], axis=2)[..., 0]
+        pool, phys = self.pool, self.phys
+        if pool is not None:
+            pool, phys = block_pool.token_write(
+                pool, phys, slot[..., None], k_new, v_new,
+                event_mask(active, slot.shape)[..., None])
+            k, v = self.k, self.v       # zero-width; bytes go to the pool
+        else:
+            k = jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k)
+            v = jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v)
         return dataclasses.replace(
             self,
-            k=jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k),
-            v=jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v),
+            k=k, v=v,
             pos=jnp.where(hit, self.length[:, None, None], self.pos),
             valid=self.valid | hit,
             length=self.length + 1,
             blocks=self.blocks.insert(slot, newly),
+            pool=pool, phys=phys,
         )
 
-    def evict(self, attn_weights) -> "TOVACache":
+    def evict(self, attn_weights, active=None) -> "TOVACache":
         """attn_weights: (B, H, P) current-step post-softmax weights summed
         over the query heads of each group (§2.2: TOVA victim = argmin)."""
         p = self.k.shape[2]
@@ -93,11 +111,16 @@ class TOVACache(LaneSliceable, HasBlockTable):
         scores = jnp.where(self.valid, attn_weights.astype(jnp.float32), jnp.inf)
         victim = jnp.argmin(scores, axis=2).astype(jnp.int32)
         hit = (jnp.arange(p)[None, None] == victim[..., None]) & over[..., None]
+        blocks, dead = self.blocks.evict_ex(victim, over)
+        pool, phys = self.pool, self.phys
+        if pool is not None:
+            pool, phys = block_pool.free_block(
+                pool, phys, victim, dead & event_mask(active, victim.shape))
         return dataclasses.replace(
             self,
             pos=jnp.where(hit, INVALID_POS, self.pos),
             valid=self.valid & ~hit,
-            blocks=self.blocks.evict(victim, over),
+            blocks=blocks, pool=pool, phys=phys,
         )
 
     def valid_mask(self):
@@ -126,12 +149,20 @@ class H2OCache(LaneSliceable, HasBlockTable):
     blocks: BlockTable     # incremental live-block table (flash-decode)
     recent_window: int = dataclasses.field(metadata={"static": True})
     slots: int = dataclasses.field(metadata={"static": True})  # logical arena
+    pool: Optional[block_pool.BlockPool] = None
+    phys: Optional[jnp.ndarray] = None       # (B, H, NB) int32, -1 = unmapped
 
     @staticmethod
     def init(batch, kv_heads, budget, head_dim, recent_window=None,
-             dtype=jnp.bfloat16, block_p: int = 0):
+             dtype=jnp.bfloat16, block_p: int = 0, paged: bool = False,
+             pool_blocks: Optional[int] = None):
         p = _round_up(budget, block_p)
-        z = jnp.zeros((batch, kv_heads, p, head_dim), dtype)
+        pool = phys = None
+        if paged:
+            pool, phys, z = init_paged(batch, kv_heads, p, head_dim, block_p,
+                                       dtype, pool_blocks)
+        else:
+            z = jnp.zeros((batch, kv_heads, p, head_dim), dtype)
         rw = recent_window if recent_window is not None else budget // 2
         return H2OCache(z, z,
                         jnp.full((batch, kv_heads, p), INVALID_POS, jnp.int32),
@@ -139,30 +170,39 @@ class H2OCache(LaneSliceable, HasBlockTable):
                         jnp.zeros((batch, kv_heads, p), jnp.float32),
                         jnp.zeros((batch,), jnp.int32),
                         BlockTable.init(batch, kv_heads, p, block_p),
-                        rw, budget)
+                        rw, budget, pool=pool, phys=phys)
 
     @property
     def budget(self) -> int:
         return self.slots - 1
 
-    def insert(self, k_new, v_new) -> "H2OCache":
+    def insert(self, k_new, v_new, active=None) -> "H2OCache":
         p = self.k.shape[2]
         free = ~self.valid & (jnp.arange(p)[None, None] < self.slots)
         slot = jnp.argmax(free, axis=2).astype(jnp.int32)
         hit = (jnp.arange(p)[None, None] == slot[..., None])
         newly = jnp.take_along_axis(free, slot[..., None], axis=2)[..., 0]
+        pool, phys = self.pool, self.phys
+        if pool is not None:
+            pool, phys = block_pool.token_write(
+                pool, phys, slot[..., None], k_new, v_new,
+                event_mask(active, slot.shape)[..., None])
+            k, v = self.k, self.v       # zero-width; bytes go to the pool
+        else:
+            k = jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k)
+            v = jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v)
         return dataclasses.replace(
             self,
-            k=jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k),
-            v=jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v),
+            k=k, v=v,
             pos=jnp.where(hit, self.length[:, None, None], self.pos),
             valid=self.valid | hit,
             acc=jnp.where(hit, 0.0, self.acc),
             length=self.length + 1,
             blocks=self.blocks.insert(slot, newly),
+            pool=pool, phys=phys,
         )
 
-    def evict(self, attn_weights) -> "H2OCache":
+    def evict(self, attn_weights, active=None) -> "H2OCache":
         """Accumulate attention mass; evict the lowest-cumulative token outside
         the recency window when over budget (§2.2)."""
         p = self.k.shape[2]
@@ -174,12 +214,17 @@ class H2OCache(LaneSliceable, HasBlockTable):
         oldest = jnp.argmin(jnp.where(self.valid, self.pos, INVALID_POS), axis=2)
         victim = jnp.where(any_evictable, jnp.argmin(scores, axis=2), oldest).astype(jnp.int32)
         hit = (jnp.arange(p)[None, None] == victim[..., None]) & over[..., None]
+        blocks, dead = self.blocks.evict_ex(victim, over)
+        pool, phys = self.pool, self.phys
+        if pool is not None:
+            pool, phys = block_pool.free_block(
+                pool, phys, victim, dead & event_mask(active, victim.shape))
         return dataclasses.replace(
             self,
             pos=jnp.where(hit, INVALID_POS, self.pos),
             valid=self.valid & ~hit,
             acc=jnp.where(hit, 0.0, acc),
-            blocks=self.blocks.evict(victim, over),
+            blocks=blocks, pool=pool, phys=phys,
         )
 
     def valid_mask(self):
@@ -212,34 +257,55 @@ class QuestCache(LaneSliceable):
     length: jnp.ndarray   # (B,) — per lane
     page_size: int = dataclasses.field(metadata={"static": True})
     top_pages: int = dataclasses.field(metadata={"static": True})
+    pool: Optional[block_pool.BlockPool] = None
+    phys: Optional[jnp.ndarray] = None       # (B, H, NP) int32, -1 = unmapped
 
     @staticmethod
-    def init(batch, kv_heads, max_len, head_dim, page_size, top_pages, dtype=jnp.bfloat16):
+    def init(batch, kv_heads, max_len, head_dim, page_size, top_pages,
+             dtype=jnp.bfloat16, paged: bool = False,
+             pool_blocks: Optional[int] = None):
         assert max_len % page_size == 0
         n_pages = max_len // page_size
-        z = jnp.zeros((batch, kv_heads, max_len, head_dim), dtype)
+        pool = phys = None
+        if paged:
+            # pool page granularity == Quest's page_size, so the selected-page
+            # block table indexes pool pages directly
+            pool, phys, z = init_paged(batch, kv_heads, max_len, head_dim,
+                                       page_size, dtype, pool_blocks)
+        else:
+            z = jnp.zeros((batch, kv_heads, max_len, head_dim), dtype)
         return QuestCache(
             z, z,
             jnp.full((batch, kv_heads, n_pages, head_dim), jnp.inf, jnp.float32),
             jnp.full((batch, kv_heads, n_pages, head_dim), -jnp.inf, jnp.float32),
-            jnp.zeros((batch,), jnp.int32), page_size, top_pages)
+            jnp.zeros((batch,), jnp.int32), page_size, top_pages,
+            pool=pool, phys=phys)
 
-    def append(self, k_new, v_new) -> "QuestCache":
+    def append(self, k_new, v_new, active=None) -> "QuestCache":
         """k_new/v_new: (B, H, 1, D), written at each lane's own length."""
         t = self.length                                     # (B,)
+        pool, phys = self.pool, self.phys
+        if pool is not None:
+            b, h = self.k.shape[:2]
+            slot = jnp.broadcast_to(t[:, None, None], (b, h, 1))
+            pool, phys = block_pool.token_write(
+                pool, phys, slot, k_new, v_new,
+                event_mask(active, (b, h, 1)))
+            k, v = self.k, self.v       # zero-width; bytes go to the pool
+        else:
+            def upd(buf, new, off):
+                return jax.lax.dynamic_update_slice_in_dim(buf, new, off, axis=1)
 
-        def upd(buf, new, off):
-            return jax.lax.dynamic_update_slice_in_dim(buf, new, off, axis=1)
-
-        k = jax.vmap(upd)(self.k, k_new.astype(self.k.dtype), t)
-        v = jax.vmap(upd)(self.v, v_new.astype(self.v.dtype), t)
+            k = jax.vmap(upd)(self.k, k_new.astype(self.k.dtype), t)
+            v = jax.vmap(upd)(self.v, v_new.astype(self.v.dtype), t)
         page = t // self.page_size                          # (B,)
         kf = k_new[..., 0, :].astype(jnp.float32)
         n_pages = self.kmin.shape[2]
         hit = (jnp.arange(n_pages)[None, :] == page[:, None])[:, None, :, None]
         kmin = jnp.where(hit, jnp.minimum(self.kmin, kf[..., None, :]), self.kmin)
         kmax = jnp.where(hit, jnp.maximum(self.kmax, kf[..., None, :]), self.kmax)
-        return QuestCache(k, v, kmin, kmax, t + 1, self.page_size, self.top_pages)
+        return dataclasses.replace(self, k=k, v=v, kmin=kmin, kmax=kmax,
+                                   length=t + 1, pool=pool, phys=phys)
 
     def select_pages(self, q: jnp.ndarray) -> jnp.ndarray:
         """Upper-bound page scores (§2.2): sum_d max(q_d*kmin_d, q_d*kmax_d).
@@ -276,6 +342,12 @@ class QuestCache(LaneSliceable):
         tbl = jnp.argsort(~page_mask, axis=-1, stable=True).astype(jnp.int32)
         n = jnp.sum(page_mask, axis=-1).astype(jnp.int32)
         return tbl, n
+
+    def valid_mask(self):
+        # length-prefix occupancy; mapped pool pages == blocks with any live
+        # slot, the invariant the generic pooled prefix-import relies on
+        s = self.k.shape[2]
+        return jnp.arange(s)[None, None, :] < self.length[:, None, None]
 
     def positions(self):
         s = self.k.shape[2]
@@ -314,25 +386,34 @@ class DMCCache(LaneSliceable):
     count: jnp.ndarray    # (B, H) number of live entries
     length: jnp.ndarray   # (B,) — per lane
     block_p: int = dataclasses.field(metadata={"static": True}, default=0)
+    pool: Optional[block_pool.BlockPool] = None   # fp32 pages (accumulators)
+    phys: Optional[jnp.ndarray] = None       # (B, H, NB) int32, -1 = unmapped
 
     @staticmethod
-    def init(batch, kv_heads, num_slots, head_dim, block_p: int = 0):
+    def init(batch, kv_heads, num_slots, head_dim, block_p: int = 0,
+             paged: bool = False, pool_blocks: Optional[int] = None):
         p = _round_up(num_slots, block_p)
-        z4 = jnp.zeros((batch, kv_heads, p, head_dim), jnp.float32)
+        pool = phys = None
+        if paged:
+            pool, phys, z4 = init_paged(batch, kv_heads, p, head_dim, block_p,
+                                        jnp.float32, pool_blocks)
+        else:
+            z4 = jnp.zeros((batch, kv_heads, p, head_dim), jnp.float32)
         return DMCCache(z4, z4,
                         jnp.zeros((batch, kv_heads, p), jnp.float32),
                         jnp.zeros((batch, kv_heads), jnp.int32),
-                        jnp.zeros((batch,), jnp.int32), block_p)
+                        jnp.zeros((batch,), jnp.int32), block_p,
+                        pool=pool, phys=phys)
 
     def block_spec(self):
         tbl, n = prefix_block_spec(self.count, self.k.shape[2], self.block_p,
                                    self.k.shape[1])
         return tbl, n, self.block_p
 
-    def step(self, k_new, v_new, alpha, omega=None) -> "DMCCache":
+    def step(self, k_new, v_new, alpha, omega=None, active=None) -> "DMCCache":
         """alpha: (B, H) bool merge decision; omega: optional (B, H) importance
         weight for the weighted average (defaults to 1)."""
-        b, h, p, d = self.k.shape
+        b, h, p = self.k.shape[:3]
         if omega is None:
             omega = jnp.ones((b, h), jnp.float32)
         kf = k_new[..., 0, :].astype(jnp.float32)
@@ -341,18 +422,41 @@ class DMCCache(LaneSliceable):
         tgt = jnp.where(merge, jnp.maximum(self.count - 1, 0), self.count)  # slot index
         p_idx = jnp.arange(p)
         hit = p_idx[None, None] == tgt[..., None]
-        z_old = jnp.where(merge[..., None], self.z, 0.0)
-        z_new = z_old + omega[..., None]
-        k_upd = (jnp.where(merge[..., None, None], self.k, 0.0) * z_old[..., None]
-                 + kf[..., None, :] * omega[..., None, None]) / z_new[..., None]
-        v_upd = (jnp.where(merge[..., None, None], self.v, 0.0) * z_old[..., None]
-                 + vf[..., None, :] * omega[..., None, None]) / z_new[..., None]
-        k = jnp.where(hit[..., None], k_upd, self.k)
-        v = jnp.where(hit[..., None], v_upd, self.v)
-        z = jnp.where(hit, z_new, self.z)
+        pool, phys = self.pool, self.phys
+        if pool is not None:
+            # row-level twin of the dense formula below: gather the merge
+            # target's accumulator row, blend, write back through the page
+            # map (same op order, so bitwise-equal at slot ``tgt``)
+            z_tgt = jnp.take_along_axis(self.z, tgt[..., None], axis=2)[..., 0]
+            z_old_r = jnp.where(merge, z_tgt, 0.0)
+            z_new_r = z_old_r + omega
+            k_old = block_pool.gather_rows(pool.k, phys, tgt, self.block_p)
+            v_old = block_pool.gather_rows(pool.v, phys, tgt, self.block_p)
+            k_row = (jnp.where(merge[..., None], k_old, 0.0) * z_old_r[..., None]
+                     + kf * omega[..., None]) / z_new_r[..., None]
+            v_row = (jnp.where(merge[..., None], v_old, 0.0) * z_old_r[..., None]
+                     + vf * omega[..., None]) / z_new_r[..., None]
+            # tgt == P (arena full) is a silent drop in the dense path; mask
+            # it here too so the clamp in token_write can't hit a live page
+            wm = event_mask(active, (b, h)) & (tgt < p)
+            pool, phys = block_pool.token_write(
+                pool, phys, tgt[..., None], k_row[..., None, :],
+                v_row[..., None, :], wm[..., None])
+            k, v = self.k, self.v       # zero-width; bytes go to the pool
+        else:
+            z_old = jnp.where(merge[..., None], self.z, 0.0)
+            z_new = z_old + omega[..., None]
+            k_upd = (jnp.where(merge[..., None, None], self.k, 0.0) * z_old[..., None]
+                     + kf[..., None, :] * omega[..., None, None]) / z_new[..., None]
+            v_upd = (jnp.where(merge[..., None, None], self.v, 0.0) * z_old[..., None]
+                     + vf[..., None, :] * omega[..., None, None]) / z_new[..., None]
+            k = jnp.where(hit[..., None], k_upd, self.k)
+            v = jnp.where(hit[..., None], v_upd, self.v)
+        z = jnp.where(hit, jnp.where(merge[..., None], self.z, 0.0) + omega[..., None],
+                      self.z)
         count = jnp.where(merge, self.count, self.count + 1)
         return dataclasses.replace(self, k=k, v=v, z=z, count=count,
-                                   length=self.length + 1)
+                                   length=self.length + 1, pool=pool, phys=phys)
 
     def valid_mask(self):
         p = self.k.shape[2]

@@ -1,0 +1,339 @@
+"""Global paged KV block pool: on-demand lane arenas with copy-on-write fork.
+
+Fixed per-lane arenas make device memory scale with *provisioned* capacity:
+at CR8 roughly 7/8 of every arena is reservation that compression can never
+give back (the capacity twin of the dead-block-DMA pitfall — see
+docs/kernels.md).  This module replaces per-lane K/V storage with ONE shared
+arena of ``block_p``-sized pages per cache instance:
+
+* ``BlockPool`` holds the page arena (``k``/``v``: (NPOOL, block_p, Dh)), a
+  refcount vector (``ref == 0`` means free) and observability counters.
+* Each cache keeps a per-(lane, head) *page map* ``phys``: (B, H, NB) int32,
+  ``-1`` = unmapped.  Logical slot ``s`` of block ``b = s // block_p`` lives
+  at pool page ``phys[lane, head, b]``.
+* Pages are allocated **on first write** to an unmapped block
+  (:func:`token_write`), freed when the cache's incremental
+  :class:`~repro.core.kv_cache.BlockTable` reports a block's live-slot count
+  hit zero (:func:`free_block`), and reclaimed wholesale at EOS
+  (:func:`recount` after the metadata reset).
+* Fork is **copy-on-write**: :func:`recount` after a lane gather bumps
+  refcounts without touching page bytes; the first divergent write to a page
+  with ``ref > 1`` copies that one page (:func:`token_write`'s CoW path) —
+  a W-way fork moves zero arena bytes at fork time.
+
+Everything is functional pytree code: the pool rides inside the cache pytree
+through ``jit`` / ``scan`` / ``vmap`` unchanged.  All mutation helpers accept
+a boolean event mask so inactive scheduler lanes produce no pool events
+(their per-lane metadata is rolled back by ``lane_select``; the pool itself
+is shared and must therefore never be speculatively mutated).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _tree_dataclass(cls):
+    """Same pytree registration idiom as kv_cache._tree_dataclass (duplicated
+    here so kv_cache can import this module without a cycle)."""
+    cls = dataclass(cls)
+    child_names = [f.name for f in dataclasses.fields(cls)
+                   if not f.metadata.get("static")]
+    static_names = [f.name for f in dataclasses.fields(cls)
+                    if f.metadata.get("static")]
+
+    def flatten_with_keys(o):
+        return (
+            [(jax.tree_util.GetAttrKey(n), getattr(o, n)) for n in child_names],
+            tuple(getattr(o, n) for n in static_names),
+        )
+
+    def flatten(o):
+        return (
+            tuple(getattr(o, n) for n in child_names),
+            tuple(getattr(o, n) for n in static_names),
+        )
+
+    def unflatten(aux, children):
+        kw = dict(zip(child_names, children))
+        kw.update(zip(static_names, aux))
+        return cls(**kw)
+
+    jax.tree_util.register_pytree_with_keys(cls, flatten_with_keys, unflatten,
+                                            flatten_func=flatten)
+    return cls
+
+
+@_tree_dataclass
+class BlockPool:
+    """Shared page arena + free list (``ref == 0``) + counters.
+
+    One pool instance backs ALL lanes and kv-heads of one cache instance
+    (i.e. one per pattern-position per layer stack); distinct caches never
+    share a pool.  ``ref[p]`` is the number of (lane, head, block) map
+    entries pointing at page ``p`` — CoW sharing after fork is ``ref > 1``.
+    """
+
+    k: jnp.ndarray            # (NPOOL, block_p, Dh)
+    v: jnp.ndarray            # (NPOOL, block_p, Dh)
+    ref: jnp.ndarray          # (NPOOL,) int32 — 0 = free page
+    cow_copies: jnp.ndarray   # () int32 — pages copied by divergent writes
+    alloc_events: jnp.ndarray  # () int32 — successful page allocations
+    high_water: jnp.ndarray   # () int32 — max pages simultaneously allocated
+    exhausted: jnp.ndarray    # () bool — an allocation ever failed
+
+    block_p: int = dataclasses.field(metadata={"static": True}, default=0)
+
+    @staticmethod
+    def init(num_blocks: int, block_p: int, head_dim: int,
+             dtype=jnp.bfloat16) -> "BlockPool":
+        z = jnp.zeros((num_blocks, block_p, head_dim), dtype)
+        return BlockPool(
+            k=z, v=z,
+            ref=jnp.zeros((num_blocks,), jnp.int32),
+            cow_copies=jnp.zeros((), jnp.int32),
+            alloc_events=jnp.zeros((), jnp.int32),
+            high_water=jnp.zeros((), jnp.int32),
+            exhausted=jnp.zeros((), bool),
+            block_p=block_p,
+        )
+
+    @property
+    def num_blocks(self) -> int:
+        return self.ref.shape[-1]
+
+
+# ---------------------------------------------------------------------------
+# Allocation
+# ---------------------------------------------------------------------------
+
+
+def alloc(pool: BlockPool, need: jnp.ndarray
+          ) -> Tuple[BlockPool, jnp.ndarray, jnp.ndarray]:
+    """Grab one free page per True entry of ``need`` (M,).
+
+    Deterministic lowest-free-id-first order.  Returns ``(pool, page, ok)``;
+    where ``ok`` is False the pool was exhausted — the caller must drop the
+    write (``exhausted`` is latched for observability, other lanes' pages are
+    never touched)."""
+    npool = pool.num_blocks
+    free = pool.ref == 0
+    n_free = jnp.sum(free.astype(jnp.int32))
+    order = jnp.argsort(~free).astype(jnp.int32)        # stable: free ids first
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1       # per-event free-list rank
+    ok = need & (rank < n_free)
+    page = order[jnp.clip(rank, 0, npool - 1)]
+    ref = pool.ref.at[jnp.where(ok, page, npool)].add(1, mode="drop")
+    used = npool - jnp.sum((ref == 0).astype(jnp.int32))
+    pool = dataclasses.replace(
+        pool, ref=ref,
+        alloc_events=pool.alloc_events + jnp.sum(ok.astype(jnp.int32)),
+        high_water=jnp.maximum(pool.high_water, used),
+        exhausted=pool.exhausted | jnp.any(need & ~ok))
+    return pool, page, ok
+
+
+def recount(phys: jnp.ndarray, num_blocks: int) -> jnp.ndarray:
+    """Recompute ``ref`` as the multiplicity of each page in ``phys``.
+
+    ``phys``: (..., B, H, NB) with arbitrary leading axes (stacked
+    superblocks); returns (..., NPOOL) int32.  Used by the whole-lane
+    lifecycle ops (fork gather, reclaim, prefix import) where incremental
+    updates would be error-prone — CoW refcounts reach zero exactly when the
+    last mapping disappears, by construction."""
+    lead = phys.shape[:-3]
+    flat = phys.reshape(lead + (-1,))
+    ids = jnp.arange(num_blocks, dtype=jnp.int32)
+    return jnp.sum((flat[..., None] == ids).astype(jnp.int32), axis=-2)
+
+
+def set_refcounts(pool: BlockPool, phys: jnp.ndarray) -> BlockPool:
+    return dataclasses.replace(pool, ref=recount(phys, pool.num_blocks))
+
+
+# ---------------------------------------------------------------------------
+# Write path (alloc-on-first-write + copy-on-write)
+# ---------------------------------------------------------------------------
+
+
+def token_write(pool: BlockPool, phys: jnp.ndarray, slot: jnp.ndarray,
+                k_rows: jnp.ndarray, v_rows: jnp.ndarray, mask: jnp.ndarray
+                ) -> Tuple[BlockPool, jnp.ndarray]:
+    """Write token rows at logical ``slot`` through the page map.
+
+    ``slot``/``mask``: (B, H, T); ``k_rows``/``v_rows``: (B, H, T, Dh).
+    Per masked event: the target block is mapped on demand (first write to an
+    unmapped block allocates a page; a write to a CoW-shared page copies it
+    first).  Exhaustion drops the affected writes and latches
+    ``pool.exhausted`` — shared pages are never corrupted.
+    """
+    b, h, t = slot.shape
+    nb = phys.shape[-1]
+    bp = pool.block_p
+    npool = pool.num_blocks
+    blk = jnp.clip(slot // bp, 0, nb - 1)                 # (B,H,T)
+    off = jnp.clip(slot - blk * bp, 0, bp - 1)
+    cur = jnp.take_along_axis(phys, blk, axis=2)          # (B,H,T) mapped page
+
+    # first masked occurrence of each block within a (lane, head) this call:
+    # only that event decides alloc/CoW; later same-block events follow the
+    # updated map (multi-token prefill chunks land in one page)
+    same = blk[..., :, None] == blk[..., None, :]          # (B,H,T,T)
+    earlier = jnp.tril(jnp.ones((t, t), bool), -1)
+    dup = jnp.any(same & earlier & mask[..., None, :], axis=-1)
+    first = mask & ~dup
+
+    ref_cur = pool.ref[jnp.clip(cur, 0, npool - 1)]
+    need_alloc = first & (cur < 0)
+    need_cow = first & (cur >= 0) & (ref_cur > 1)
+    need = need_alloc | need_cow
+
+    flat = lambda a: a.reshape(-1)
+    needf, curf = flat(need), flat(cur)
+    pool, page, ok = alloc(pool, needf)
+
+    # CoW: copy the shared page's bytes into the fresh page, drop one ref
+    cowf = flat(need_cow) & ok
+    src = jnp.clip(curf, 0, npool - 1)
+    dst = jnp.where(cowf, page, npool)
+    pool = dataclasses.replace(
+        pool,
+        k=pool.k.at[dst].set(pool.k[src], mode="drop"),
+        v=pool.v.at[dst].set(pool.v[src], mode="drop"),
+        ref=pool.ref.at[jnp.where(cowf, src, npool)].add(-1, mode="drop"),
+        cow_copies=pool.cow_copies + jnp.sum(cowf.astype(jnp.int32)))
+
+    # remap: first events with a fresh page point their block at it
+    bi = jnp.repeat(jnp.arange(b), h * t)
+    hi = jnp.tile(jnp.repeat(jnp.arange(h), t), b)
+    apply = needf & ok
+    phys = phys.at[bi, hi, jnp.where(apply, flat(blk), nb)].set(
+        page, mode="drop")
+
+    # failed allocations poison their block for this call: every event on a
+    # failed block (not just the first) drops its write
+    bad = jnp.zeros((b, h, nb), bool).at[
+        bi, hi, jnp.where(needf & ~ok, flat(blk), nb)].set(True, mode="drop")
+
+    # the actual row writes, through the post-remap map
+    tgt = jnp.take_along_axis(phys, blk, axis=2)          # (B,H,T)
+    badf = flat(jnp.take_along_axis(bad, blk, axis=2))
+    wmask = flat(mask) & (flat(tgt) >= 0) & ~badf
+    wt = jnp.where(wmask, flat(tgt), npool)
+    offf = flat(off)
+    pool = dataclasses.replace(
+        pool,
+        k=pool.k.at[wt, offf].set(
+            k_rows.reshape(-1, k_rows.shape[-1]).astype(pool.k.dtype),
+            mode="drop"),
+        v=pool.v.at[wt, offf].set(
+            v_rows.reshape(-1, v_rows.shape[-1]).astype(pool.v.dtype),
+            mode="drop"))
+    return pool, phys
+
+
+def free_block(pool: BlockPool, phys: jnp.ndarray, slot: jnp.ndarray,
+               mask: jnp.ndarray) -> Tuple[BlockPool, jnp.ndarray]:
+    """Unmap the block containing ``slot`` (B, H) where ``mask`` is True.
+
+    Fired when the cache's BlockTable reports the block's live-slot count hit
+    zero (``evict_ex``'s dead mask): the page's refcount drops and the page
+    returns to the free list once its last sharer lets go."""
+    nb = phys.shape[-1]
+    npool = pool.num_blocks
+    bp = pool.block_p
+    blk = jnp.clip(slot // bp, 0, nb - 1)                 # (B,H)
+    cur = jnp.take_along_axis(phys, blk[..., None], axis=2)[..., 0]
+    apply = mask & (cur >= 0)
+    ref = pool.ref.at[jnp.where(apply, cur, npool)].add(-1, mode="drop")
+    b, h = blk.shape
+    bi = jnp.repeat(jnp.arange(b), h)
+    hi = jnp.tile(jnp.arange(h), b)
+    phys = phys.at[bi, hi,
+                   jnp.where(apply.reshape(-1), blk.reshape(-1), nb)].set(
+        -1, mode="drop")
+    return dataclasses.replace(pool, ref=ref), phys
+
+
+# ---------------------------------------------------------------------------
+# Read path
+# ---------------------------------------------------------------------------
+
+
+def dense_kv(pool: BlockPool, phys: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather a lane-major dense (B, H, P, Dh) view (unmapped blocks read as
+    zero).  This is the reference attention path; under the flash kernel the
+    gather is dead code — the kernel streams pool pages directly."""
+    b, h, nb = phys.shape
+    bp, dh = pool.k.shape[-2:]
+    idx = jnp.clip(phys, 0, pool.num_blocks - 1)
+    mapped = (phys >= 0)[..., None, None]
+    k = jnp.where(mapped, pool.k[idx], 0).reshape(b, h, nb * bp, dh)
+    v = jnp.where(mapped, pool.v[idx], 0).reshape(b, h, nb * bp, dh)
+    return k, v
+
+
+def gather_rows(arr: jnp.ndarray, phys: jnp.ndarray, slot: jnp.ndarray,
+                block_p: int) -> jnp.ndarray:
+    """Read one token row per (lane, head): ``slot`` (B, H) -> (B, H, Dh).
+    Unmapped slots read as zero (DMC's merge target before first write)."""
+    nb = phys.shape[-1]
+    npool = arr.shape[0]
+    blk = jnp.clip(slot // block_p, 0, nb - 1)
+    off = jnp.clip(slot - blk * block_p, 0, block_p - 1)
+    page = jnp.take_along_axis(phys, blk[..., None], axis=2)[..., 0]
+    rows = arr[jnp.clip(page, 0, npool - 1), off]
+    return jnp.where((page >= 0)[..., None], rows, 0)
+
+
+def translate_table(phys: jnp.ndarray, tbl: jnp.ndarray) -> jnp.ndarray:
+    """Map a logical BlockTable (B, H, NB_tbl) of block ids into pool page
+    ids through ``phys`` — the table the paged flash kernel prefetches.
+    Stale entries past each row's ``n`` may translate to -1; they are
+    clamped (the kernel's live-count guard never dereferences them)."""
+    nb = phys.shape[-1]
+    return jnp.take_along_axis(phys, jnp.clip(tbl, 0, nb - 1), axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Observability
+# ---------------------------------------------------------------------------
+
+
+def stats(pool: BlockPool, phys: jnp.ndarray,
+          live_tokens: Optional[jnp.ndarray] = None) -> dict:
+    """Host-side pool counters (handles stacked superblock leading axes).
+
+    ``fragmentation``: share of mapped slot capacity not holding a live
+    token (padded-vs-packed waste *inside* allocated pages)."""
+    import numpy as np
+    ref = np.asarray(pool.ref)
+    physv = np.asarray(phys)
+    bp = pool.block_p
+    nsb = int(np.prod(ref.shape[:-1])) if ref.ndim > 1 else 1
+    allocated = int((ref > 0).sum())
+    total = int(ref.size)
+    mapped_entries = int((physv >= 0).sum())      # per-sharer mapped blocks
+    out = {
+        "pool_blocks": total,
+        "allocated_blocks": allocated,
+        "free_blocks": total - allocated,
+        "shared_blocks": int((ref > 1).sum()),
+        "mapped_entries": mapped_entries,
+        "cow_copies": int(np.asarray(pool.cow_copies).sum()),
+        "alloc_events": int(np.asarray(pool.alloc_events).sum()),
+        "high_water_blocks": int(np.asarray(pool.high_water).sum()),
+        "exhausted": bool(np.asarray(pool.exhausted).any()),
+        "superblocks": nsb,
+    }
+    if live_tokens is not None:
+        live = float(np.asarray(live_tokens).sum())
+        cap = float(mapped_entries * bp)
+        out["live_tokens"] = int(live)
+        out["fragmentation"] = 1.0 - live / cap if cap else 0.0
+    return out

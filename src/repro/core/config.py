@@ -63,6 +63,15 @@ class KVPolicyConfig:
     # the tables (legacy dense streaming; direct cache construction defaults
     # to this so low-level unit tests keep exact arena shapes).
     block_p: int = 16
+    # Paged KV block pool (see repro.core.block_pool): lanes allocate
+    # block_p-sized pages from one shared per-cache arena on demand instead of
+    # owning fixed worst-case arenas, and shared-prefill fork is copy-on-write
+    # page sharing.  Requires block_p > 0.  pool_blocks sizes the shared arena
+    # in pages per cache instance; None provisions full parity capacity
+    # (num_lanes x kv_heads x blocks-per-lane), i.e. paged mode can never be
+    # tighter than the fixed-arena layout unless a budget is set.
+    paged: bool = False
+    pool_blocks: Optional[int] = None
     layer_map: Optional[Tuple[Tuple[str, str], ...]] = None
 
     def __post_init__(self):

@@ -18,13 +18,16 @@ docs/policies.md for the walkthrough).
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import block_pool
 from repro.core.config import ArchConfig, KVPolicyConfig
 from repro.core.kv_cache import (INVALID_POS, BlockTable, HasBlockTable,
-                                 LaneSliceable, _round_up, _tree_dataclass)
+                                 LaneSliceable, _round_up, _tree_dataclass,
+                                 event_mask, init_paged)
 from repro.core.policy import KVPolicy, _attend_spec, register_policy
 
 _SCORE_EPS = 1e-9
@@ -43,12 +46,20 @@ class KeyformerCache(LaneSliceable, HasBlockTable):
     recent_window: int = dataclasses.field(metadata={"static": True})
     slots: int = dataclasses.field(metadata={"static": True})  # logical arena
     tau: float = dataclasses.field(metadata={"static": True}, default=1.0)
+    pool: Optional[block_pool.BlockPool] = None
+    phys: Optional[jnp.ndarray] = None       # (B, H, NB) int32, -1 = unmapped
 
     @staticmethod
     def init(batch, kv_heads, budget, head_dim, recent_window, tau,
-             dtype=jnp.bfloat16, block_p: int = 0):
+             dtype=jnp.bfloat16, block_p: int = 0, paged: bool = False,
+             pool_blocks=None):
         p = _round_up(budget, block_p)
-        z = jnp.zeros((batch, kv_heads, p, head_dim), dtype)
+        pool = phys = None
+        if paged:
+            pool, phys, z = init_paged(batch, kv_heads, p, head_dim, block_p,
+                                       dtype, pool_blocks)
+        else:
+            z = jnp.zeros((batch, kv_heads, p, head_dim), dtype)
         return KeyformerCache(
             z, z,
             jnp.full((batch, kv_heads, p), INVALID_POS, jnp.int32),
@@ -56,29 +67,38 @@ class KeyformerCache(LaneSliceable, HasBlockTable):
             jnp.zeros((batch, kv_heads, p), jnp.float32),
             jnp.zeros((batch,), jnp.int32),
             BlockTable.init(batch, kv_heads, p, block_p),
-            recent_window, budget, tau)
+            recent_window, budget, tau, pool=pool, phys=phys)
 
     @property
     def budget(self) -> int:
         return self.slots - 1   # arena is budget + 1 (insert-then-evict)
 
-    def insert(self, k_new, v_new) -> "KeyformerCache":
+    def insert(self, k_new, v_new, active=None) -> "KeyformerCache":
         p = self.k.shape[2]
         free = ~self.valid & (jnp.arange(p)[None, None] < self.slots)
         slot = jnp.argmax(free, axis=2).astype(jnp.int32)         # first free
         hit = (jnp.arange(p)[None, None] == slot[..., None])
         newly = jnp.take_along_axis(free, slot[..., None], axis=2)[..., 0]
+        pool, phys = self.pool, self.phys
+        if pool is not None:
+            pool, phys = block_pool.token_write(
+                pool, phys, slot[..., None], k_new, v_new,
+                event_mask(active, slot.shape)[..., None])
+            k, v = self.k, self.v       # zero-width; bytes go to the pool
+        else:
+            k = jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k)
+            v = jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v)
         return dataclasses.replace(
             self,
-            k=jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k),
-            v=jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v),
+            k=k, v=v,
             pos=jnp.where(hit, self.length[:, None, None], self.pos),
             valid=self.valid | hit,
             score=jnp.where(hit, 0.0, self.score),
             length=self.length + 1,
-            blocks=self.blocks.insert(slot, newly))
+            blocks=self.blocks.insert(slot, newly),
+            pool=pool, phys=phys)
 
-    def accumulate_and_evict(self, attn_weights) -> "KeyformerCache":
+    def accumulate_and_evict(self, attn_weights, active=None) -> "KeyformerCache":
         """attn_weights: (B, H, P) group-summed post-softmax weights.
 
         Score update (Keyformer §4): softmax((log w + Gumbel noise) / tau)
@@ -117,12 +137,17 @@ class KeyformerCache(LaneSliceable, HasBlockTable):
         victim = jnp.where(any_evictable, jnp.argmin(cand, axis=2),
                            oldest).astype(jnp.int32)
         hit = (jnp.arange(p)[None, None] == victim[..., None]) & over[..., None]
+        blocks, dead = self.blocks.evict_ex(victim, over)
+        pool, phys = self.pool, self.phys
+        if pool is not None:
+            pool, phys = block_pool.free_block(
+                pool, phys, victim, dead & event_mask(active, victim.shape))
         return dataclasses.replace(
             self,
             pos=jnp.where(hit, INVALID_POS, self.pos),
             valid=self.valid & ~hit,
             score=jnp.where(hit, 0.0, score),
-            blocks=self.blocks.evict(victim, over))
+            blocks=blocks, pool=pool, phys=phys)
 
     def valid_mask(self):
         return self.valid
@@ -143,11 +168,12 @@ class KeyformerPolicy(KVPolicy):
         return KeyformerCache.init(batch, a.num_kv_heads, budget + 1,
                                    a.head_dim, max(budget // 2, 1),
                                    cfg.keyformer_tau, dtype,
-                                   block_p=cfg.block_p)
+                                   block_p=cfg.block_p, paged=cfg.paged,
+                                   pool_blocks=cfg.pool_blocks)
 
     def decode_update(self, cache, q, k_new, v_new, aux):
-        cache = cache.insert(k_new, v_new)
+        cache = cache.insert(k_new, v_new, active=aux.get("active"))
         return cache, _attend_spec(cache, needs_weights=True)
 
-    def post_attend(self, cache, weights):
-        return cache.accumulate_and_evict(weights)
+    def post_attend(self, cache, weights, active=None):
+        return cache.accumulate_and_evict(weights, active=active)

@@ -28,6 +28,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import block_pool
 from repro.core.config import DMSConfig
 
 INVALID_POS = jnp.iinfo(jnp.int32).max
@@ -184,8 +185,14 @@ class BlockTable:
     def insert(self, slot: jnp.ndarray, mask: jnp.ndarray) -> "BlockTable":
         """A slot turned live.  ``slot``/``mask``: (B, H); where ``mask`` is
         False nothing happened this step (no-op lanes/heads)."""
+        return self.insert_ex(slot, mask)[0]
+
+    def insert_ex(self, slot: jnp.ndarray, mask: jnp.ndarray
+                  ) -> Tuple["BlockTable", jnp.ndarray]:
+        """:meth:`insert` plus the per-(lane, head) *block turned live* event
+        mask — the paged pool's page-allocation trigger."""
         if not self.block_p or self.count.shape[2] == 0:
-            return self
+            return self, jnp.zeros_like(mask)
         nb = self.count.shape[2]
         blk = jnp.clip(slot // self.block_p, 0, nb - 1)
         new_live = mask & (self._take(self.count, blk) == 0)
@@ -194,13 +201,20 @@ class BlockTable:
         tbl = self._put(self.tbl, jnp.minimum(self.n, nb - 1), blk, new_live)
         pos = self._put(self.pos, blk, self.n, new_live)
         return dataclasses.replace(self, count=count, tbl=tbl, pos=pos,
-                                   n=self.n + new_live.astype(jnp.int32))
+                                   n=self.n + new_live.astype(jnp.int32)), \
+            new_live
 
     def evict(self, slot: jnp.ndarray, mask: jnp.ndarray) -> "BlockTable":
         """A slot turned dead.  When its block's population hits zero the
         block leaves the table: the last table entry swaps into its place."""
+        return self.evict_ex(slot, mask)[0]
+
+    def evict_ex(self, slot: jnp.ndarray, mask: jnp.ndarray
+                 ) -> Tuple["BlockTable", jnp.ndarray]:
+        """:meth:`evict` plus the per-(lane, head) *block turned dead* event
+        mask — the paged pool's page-free trigger."""
         if not self.block_p or self.count.shape[2] == 0:
-            return self
+            return self, jnp.zeros_like(mask)
         nb = self.count.shape[2]
         blk = jnp.clip(slot // self.block_p, 0, nb - 1)
         cnt_after = self._take(self.count, blk) - 1
@@ -214,7 +228,7 @@ class BlockTable:
         pos = self._put(self.pos, last_blk, hole, dead)
         pos = self._put(pos, blk, -1, dead)    # after: blk==last_blk -> -1
         return dataclasses.replace(self, count=count, tbl=tbl, pos=pos,
-                                   n=self.n - dead.astype(jnp.int32))
+                                   n=self.n - dead.astype(jnp.int32)), dead
 
 
 class HasBlockTable:
@@ -246,6 +260,80 @@ def prefix_block_spec(length: jnp.ndarray, num_slots: int, block_p: int,
 
 
 # ---------------------------------------------------------------------------
+# Paged-pool plumbing shared by every cache class
+# ---------------------------------------------------------------------------
+#
+# In paged mode a cache's dense ``k``/``v`` arenas are allocated with a
+# ZERO-width head axis (B, H, P, 0): every shape-derived invariant (valid
+# masks, positions, LaneSliceable, block specs) keeps working, the in-place
+# arena writes become free no-ops, and the actual bytes live in the shared
+# :class:`~repro.core.block_pool.BlockPool` addressed through ``phys``.
+
+
+def init_paged(batch: int, kv_heads: int, padded_slots: int, head_dim: int,
+               block_p: int, dtype, pool_blocks: Optional[int]):
+    """(pool, phys, zero-width arena) for a paged cache; validates block_p."""
+    if not block_p:
+        raise ValueError("paged KV cache requires block_p > 0")
+    nb = padded_slots // block_p
+    pool = block_pool.BlockPool.init(
+        pool_blocks or batch * kv_heads * nb, block_p, head_dim, dtype)
+    phys = jnp.full((batch, kv_heads, nb), -1, jnp.int32)
+    return pool, phys, jnp.zeros((batch, kv_heads, padded_slots, 0), dtype)
+
+
+def event_mask(active, shape) -> jnp.ndarray:
+    """Broadcast the scheduler's per-lane ``active`` mask (B,) over event
+    shape (B, H[, T]); None = all lanes live.  Pool mutations MUST be gated
+    on this: the pool is shared state that ``lane_select`` cannot roll back,
+    so inactive lanes may not allocate, free, or write pages."""
+    if active is None:
+        return jnp.ones(shape, bool)
+    return jnp.broadcast_to(active.reshape((-1,) + (1,) * (len(shape) - 1)),
+                            shape)
+
+
+def cache_block_p(cache) -> int:
+    """Kernel block granularity of any cache class (stored field, incremental
+    table, or Quest's page size)."""
+    bp = getattr(cache, "block_p", None)
+    if bp is None and hasattr(cache, "blocks"):
+        bp = cache.blocks.block_p
+    if bp is None:
+        bp = getattr(cache, "page_size", 0)
+    return bp
+
+
+def pack_dense(cache, pool_blocks: Optional[int] = None):
+    """Convert a fixed-arena cache into its pooled twin (prefill import).
+
+    Pages are allocated for every block holding at least one live slot and
+    the dense arena content is copied page-by-page; dead blocks simply don't
+    exist.  The result is bitwise-equivalent under attention (garbage in
+    unmapped blocks is masked in both layouts)."""
+    bp = cache_block_p(cache)
+    b, h, p, dh = cache.k.shape
+    if not bp:
+        raise ValueError("pack_dense requires block_p > 0")
+    nb = p // bp
+    pool = block_pool.BlockPool.init(pool_blocks or b * h * nb, bp, dh,
+                                     cache.k.dtype)
+    valid = jnp.broadcast_to(cache.valid_mask(), (b, h, p))
+    need = jnp.any(valid.reshape(b, h, nb, bp), axis=-1).reshape(-1)
+    pool, page, ok = block_pool.alloc(pool, need)
+    phys = jnp.where(need & ok, page, -1).reshape(b, h, nb)
+    dst = jnp.where(need & ok, page, pool.num_blocks)
+    pool = dataclasses.replace(
+        pool,
+        k=pool.k.at[dst].set(cache.k.reshape(b * h * nb, bp, dh),
+                             mode="drop"),
+        v=pool.v.at[dst].set(cache.v.reshape(b * h * nb, bp, dh),
+                             mode="drop"))
+    return dataclasses.replace(cache, k=cache.k[..., :0], v=cache.v[..., :0],
+                               pool=pool, phys=phys)
+
+
+# ---------------------------------------------------------------------------
 # Vanilla (dense, append-only) cache
 # ---------------------------------------------------------------------------
 
@@ -259,24 +347,47 @@ class VanillaCache(LaneSliceable):
     # Occupancy is a length-prefix, so the live-block table is *derived*
     # (prefix_block_spec) rather than stored.
     block_p: int = dataclasses.field(metadata={"static": True}, default=0)
+    # paged mode: shared page arena + per-(lane, head) page map; the dense
+    # k/v above are zero-width placeholders (see init_paged)
+    pool: Optional[block_pool.BlockPool] = None
+    phys: Optional[jnp.ndarray] = None       # (B, H, NB) int32, -1 = unmapped
 
     @staticmethod
     def init(batch: int, kv_heads: int, max_len: int, head_dim: int,
-             dtype=jnp.bfloat16, block_p: int = 0):
-        z = jnp.zeros((batch, kv_heads, _round_up(max_len, block_p), head_dim),
-                      dtype)
+             dtype=jnp.bfloat16, block_p: int = 0, paged: bool = False,
+             pool_blocks: Optional[int] = None):
+        pool = phys = None
+        if paged:
+            pool, phys, z = init_paged(batch, kv_heads,
+                                       _round_up(max_len, block_p), head_dim,
+                                       block_p, dtype, pool_blocks)
+        else:
+            z = jnp.zeros(
+                (batch, kv_heads, _round_up(max_len, block_p), head_dim),
+                dtype)
         return VanillaCache(z, z, jnp.zeros((batch,), jnp.int32),
-                            block_p=block_p)
+                            block_p=block_p, pool=pool, phys=phys)
 
     def block_spec(self):
         tbl, n = prefix_block_spec(self.length, self.k.shape[2], self.block_p,
                                    self.k.shape[1])
         return tbl, n, self.block_p
 
-    def append(self, k_new: jnp.ndarray, v_new: jnp.ndarray) -> "VanillaCache":
+    def append(self, k_new: jnp.ndarray, v_new: jnp.ndarray,
+               active=None) -> "VanillaCache":
         """k_new, v_new: (B, Hkv, T_new, Dh) written at [length, length+T_new)
         of each lane (per-lane offsets: a vmapped dynamic-slice scatter)."""
         t_new = k_new.shape[2]
+        if self.pool is not None:
+            b, h = self.k.shape[:2]
+            slot = jnp.broadcast_to(
+                self.length[:, None, None] + jnp.arange(t_new)[None, None],
+                (b, h, t_new))
+            pool, phys = block_pool.token_write(
+                self.pool, self.phys, slot, k_new, v_new,
+                event_mask(active, (b, h, t_new)))
+            return dataclasses.replace(self, pool=pool, phys=phys,
+                                       length=self.length + t_new)
 
         def upd(buf, new, off):
             return jax.lax.dynamic_update_slice_in_dim(buf, new, off, axis=1)
@@ -313,18 +424,26 @@ class MaskedDMSCache(LaneSliceable, HasBlockTable):
     length: jnp.ndarray     # (B,) int32 — per lane
     blocks: BlockTable      # incremental live-block table (flash-decode)
     window: int = dataclasses.field(metadata={"static": True})
+    pool: Optional[block_pool.BlockPool] = None
+    phys: Optional[jnp.ndarray] = None       # (B, H, NB) int32, -1 = unmapped
 
     @staticmethod
     def init(batch: int, kv_heads: int, max_len: int, head_dim: int,
-             window: int, dtype=jnp.bfloat16, block_p: int = 0):
+             window: int, dtype=jnp.bfloat16, block_p: int = 0,
+             paged: bool = False, pool_blocks: Optional[int] = None):
         s = _round_up(max_len, block_p)
-        z = jnp.zeros((batch, kv_heads, s, head_dim), dtype)
+        pool = phys = None
+        if paged:
+            pool, phys, z = init_paged(batch, kv_heads, s, head_dim, block_p,
+                                       dtype, pool_blocks)
+        else:
+            z = jnp.zeros((batch, kv_heads, s, head_dim), dtype)
         f = jnp.zeros((batch, kv_heads, s), bool)
         return MaskedDMSCache(z, z, f, f, jnp.zeros((batch,), jnp.int32),
                               BlockTable.init(batch, kv_heads, s, block_p),
-                              window)
+                              window, pool=pool, phys=phys)
 
-    def step(self, k_new, v_new, alpha_new) -> "MaskedDMSCache":
+    def step(self, k_new, v_new, alpha_new, active=None) -> "MaskedDMSCache":
         """Append ONE token per head; execute the eviction scheduled w steps ago.
 
         k_new/v_new: (B, Hkv, 1, Dh); alpha_new: (B, Hkv) bool.
@@ -333,8 +452,12 @@ class MaskedDMSCache(LaneSliceable, HasBlockTable):
         s = self.k.shape[2]
         idx = jnp.arange(s)
         at_t = idx[None, None, :] == t[:, None, None]       # (B, 1, S)
-        k = jnp.where(at_t[..., None], k_new.astype(self.k.dtype), self.k)
-        v = jnp.where(at_t[..., None], v_new.astype(self.v.dtype), self.v)
+        if self.pool is None:
+            k = jnp.where(at_t[..., None], k_new.astype(self.k.dtype), self.k)
+            v = jnp.where(at_t[..., None], v_new.astype(self.v.dtype), self.v)
+        else:
+            k, v = self.k, self.v       # zero-width placeholders; bytes go
+            #                             to the pool below
         retained = jnp.where(at_t, True, self.retained)
         alpha = jnp.where(at_t, alpha_new[..., None], self.alpha)
         # execute eviction of token t - w (if it was marked)
@@ -343,14 +466,26 @@ class MaskedDMSCache(LaneSliceable, HasBlockTable):
             & (j >= 0)[:, None, None]
         retained = retained & ~evict_now
         b, h = self.retained.shape[:2]
+        ins = jnp.broadcast_to((t < s)[:, None], (b, h))
         blocks = self.blocks.insert(
-            jnp.broadcast_to(t[:, None], (b, h)),
-            jnp.broadcast_to((t < s)[:, None], (b, h)))
-        blocks = blocks.evict(
+            jnp.broadcast_to(t[:, None], (b, h)), ins)
+        blocks, dead = blocks.evict_ex(
             jnp.broadcast_to(j[:, None], (b, h)),
             jnp.any(evict_now, axis=2))
-        return MaskedDMSCache(k, v, retained, alpha, t + 1, blocks,
-                              self.window)
+        pool, phys = self.pool, self.phys
+        if pool is not None:
+            act = event_mask(active, (b, h))
+            pool, phys = block_pool.token_write(
+                pool, phys,
+                jnp.broadcast_to(t[:, None, None], (b, h, 1)),
+                k_new, v_new, (ins & act)[..., None])
+            pool, phys = block_pool.free_block(
+                pool, phys,
+                jnp.broadcast_to(jnp.clip(j, 0, s - 1)[:, None], (b, h)),
+                dead & act)
+        return dataclasses.replace(self, k=k, v=v, retained=retained,
+                                   alpha=alpha, length=t + 1, blocks=blocks,
+                                   pool=pool, phys=phys)
 
     def valid_mask(self) -> jnp.ndarray:
         s = self.k.shape[2]
@@ -404,13 +539,21 @@ class SlotDMSCache(LaneSliceable, HasBlockTable):
     # False = plain ring-buffer use (local-attention window cache): eviction
     # decisions are never predicted, overflow recycling does the windowing
     dms_active: bool = dataclasses.field(metadata={"static": True}, default=True)
+    pool: Optional[block_pool.BlockPool] = None
+    phys: Optional[jnp.ndarray] = None       # (B, H, NB) int32, -1 = unmapped
 
     @staticmethod
     def init(batch: int, kv_heads: int, num_slots: int, head_dim: int,
              window: int, dtype=jnp.bfloat16, dms_active: bool = True,
-             block_p: int = 0):
+             block_p: int = 0, paged: bool = False,
+             pool_blocks: Optional[int] = None):
         p = _round_up(num_slots, block_p)
-        z = jnp.zeros((batch, kv_heads, p, head_dim), dtype)
+        pool = phys = None
+        if paged:
+            pool, phys, z = init_paged(batch, kv_heads, p, head_dim, block_p,
+                                       dtype, pool_blocks)
+        else:
+            z = jnp.zeros((batch, kv_heads, p, head_dim), dtype)
         return SlotDMSCache(
             k=z, v=z,
             pos=jnp.full((batch, kv_heads, p), INVALID_POS, jnp.int32),
@@ -430,6 +573,8 @@ class SlotDMSCache(LaneSliceable, HasBlockTable):
             window=window,
             slots=num_slots,
             dms_active=dms_active,
+            pool=pool,
+            phys=phys,
         )
 
     @staticmethod
@@ -439,7 +584,7 @@ class SlotDMSCache(LaneSliceable, HasBlockTable):
 
     # -- internals ----------------------------------------------------------
 
-    def _execute_pending(self) -> "SlotDMSCache":
+    def _execute_pending(self, active=None) -> "SlotDMSCache":
         """Execute the eviction decision made ``w`` steps ago (ring slot t mod w)."""
         t = self.length                                     # (B,)
         w = self.window
@@ -463,10 +608,14 @@ class SlotDMSCache(LaneSliceable, HasBlockTable):
             (p_idx[None, None] == tail[..., None]) & do_evict[..., None],
             slot_c[..., None], self.free_ring)
         free_count = self.free_count + do_evict.astype(jnp.int32)
-        blocks = self.blocks.evict(slot_c, do_evict)
+        blocks, dead = self.blocks.evict_ex(slot_c, do_evict)
+        pool, phys = self.pool, self.phys
+        if pool is not None:
+            pool, phys = block_pool.free_block(
+                pool, phys, slot_c, dead & event_mask(active, (b, h)))
         return dataclasses.replace(
             self, valid=valid, pos=pos, free_ring=free_ring,
-            free_count=free_count, blocks=blocks)
+            free_count=free_count, blocks=blocks, pool=pool, phys=phys)
 
     def _allocate(self) -> Tuple["SlotDMSCache", jnp.ndarray]:
         """Pop a slot per (B, H).  Returns (cache, slot (B,H))."""
@@ -486,12 +635,12 @@ class SlotDMSCache(LaneSliceable, HasBlockTable):
 
     # -- public API ----------------------------------------------------------
 
-    def step(self, k_new, v_new, alpha_new) -> "SlotDMSCache":
+    def step(self, k_new, v_new, alpha_new, active=None) -> "SlotDMSCache":
         """Append one token per (batch, head); execute delayed evictions.
 
         k_new/v_new: (B, H, 1, Dh) post-RoPE; alpha_new: (B, H) bool.
         """
-        cache = self._execute_pending()
+        cache = self._execute_pending(active)
         cache, slot = cache._allocate()
         t = cache.length                                                  # (B,)
         p_idx = jnp.arange(cache.valid.shape[2])
@@ -501,8 +650,11 @@ class SlotDMSCache(LaneSliceable, HasBlockTable):
         was_valid = jnp.take_along_axis(cache.valid, slot[..., None],
                                         axis=2)[..., 0]
         blocks = cache.blocks.insert(slot, ~was_valid)
-        k = jnp.where(hit[..., None], k_new.astype(cache.k.dtype), cache.k)
-        v = jnp.where(hit[..., None], v_new.astype(cache.v.dtype), cache.v)
+        if cache.pool is None:
+            k = jnp.where(hit[..., None], k_new.astype(cache.k.dtype), cache.k)
+            v = jnp.where(hit[..., None], v_new.astype(cache.v.dtype), cache.v)
+        else:
+            k, v = cache.k, cache.v     # zero-width; bytes go to the pool
         pos = jnp.where(hit, t[:, None, None], cache.pos)
         valid = cache.valid | hit
         ring_idx = jnp.mod(t, cache.window)                               # (B,)
@@ -510,10 +662,15 @@ class SlotDMSCache(LaneSliceable, HasBlockTable):
         ring_hit = w_idx[None, None, :] == ring_idx[:, None, None]        # (B,1,w)
         pending_slot = jnp.where(ring_hit, slot[..., None], cache.pending_slot)
         pending_alpha = jnp.where(ring_hit, alpha_new[..., None], cache.pending_alpha)
+        pool, phys = cache.pool, cache.phys
+        if pool is not None:
+            act = event_mask(active, slot.shape)
+            pool, phys = block_pool.token_write(
+                pool, phys, slot[..., None], k_new, v_new, act[..., None])
         return dataclasses.replace(
             cache, k=k, v=v, pos=pos, valid=valid,
             pending_slot=pending_slot, pending_alpha=pending_alpha,
-            length=t + 1, blocks=blocks)
+            length=t + 1, blocks=blocks, pool=pool, phys=phys)
 
     def valid_mask(self) -> jnp.ndarray:
         return self.valid

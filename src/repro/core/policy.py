@@ -53,11 +53,12 @@ from typing import Any, Callable, Dict, Iterator, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import block_pool
 from repro.core import dms as dms_lib
 from repro.core.baselines import DMCCache, H2OCache, QuestCache, TOVACache
 from repro.core.config import ArchConfig, KVPolicyConfig
 from repro.core.kv_cache import (MaskedDMSCache, SlotDMSCache, VanillaCache,
-                                 _tree_dataclass)
+                                 _tree_dataclass, pack_dense)
 
 
 # ---------------------------------------------------------------------------
@@ -87,6 +88,13 @@ class AttendSpec:
     the whole arena.  When ``block_p > 0`` the arena extent P must be a
     ``block_p`` multiple (caches allocate pre-padded; see
     ``KVPolicyConfig.block_p``).
+
+    ``pool_k``/``pool_v``/``phys`` are set for paged caches (same dtype as
+    ``k``): the flash kernel then streams pool pages directly — ``block_tbl``
+    entries are *logical* block ids translated through ``phys`` at dispatch
+    (see :func:`repro.kernels.ops.dms_decode_attention`) — while ``k``/``v``
+    hold the gathered dense view for the reference path (dead code under the
+    kernel).
     """
 
     k: jnp.ndarray
@@ -97,6 +105,9 @@ class AttendSpec:
     block_tbl: Optional[jnp.ndarray] = None
     block_n: Optional[jnp.ndarray] = None
     block_p: int = 0
+    pool_k: Optional[jnp.ndarray] = None     # (NPOOL, block_p, Dh)
+    pool_v: Optional[jnp.ndarray] = None
+    phys: Optional[jnp.ndarray] = None       # (B, Hkv, NB) int32
 
 
 @_tree_dataclass
@@ -184,6 +195,40 @@ def state_peak_bytes(state: Any) -> int:
                for pc in iter_policy_caches(state))
 
 
+def state_pool_stats(state: Any) -> Optional[Dict[str, Any]]:
+    """Aggregate paged-pool counters across every pooled cache in a decode
+    state (host-side; call outside jit).  None when nothing is paged.
+
+    ``live_tokens`` comes from each cache's incremental BlockTable ``count``
+    (live slots per block — sums shape-safely whatever the leading stacking),
+    so ``fragmentation`` is the global share of *mapped page capacity* not
+    holding a live token: padded-vs-packed waste inside allocated pages."""
+    out: Optional[Dict[str, Any]] = None
+    mapped_cap = 0
+    for pc in iter_policy_caches(state):
+        pool = getattr(pc.cache, "pool", None)
+        if pool is None:
+            continue
+        s = block_pool.stats(pool, pc.cache.phys,
+                             live_tokens=pc.cache.blocks.count)
+        mapped_cap += s["mapped_entries"] * pool.block_p
+        if out is None:
+            out = dict(s)
+            out["pools"] = 1
+        else:
+            for key in ("pool_blocks", "allocated_blocks", "free_blocks",
+                        "shared_blocks", "cow_copies", "alloc_events",
+                        "high_water_blocks", "superblocks", "mapped_entries",
+                        "live_tokens"):
+                out[key] += s[key]
+            out["exhausted"] = out["exhausted"] or s["exhausted"]
+            out["pools"] += 1
+    if out is not None:
+        out["fragmentation"] = (1.0 - out["live_tokens"] / mapped_cap
+                                if mapped_cap else 0.0)
+    return out
+
+
 def _nbytes(a) -> int:
     n = 1
     for s in a.shape:
@@ -227,9 +272,12 @@ class KVPolicy:
         """
         raise NotImplementedError
 
-    def post_attend(self, cache: Any, weights: jnp.ndarray) -> Any:
+    def post_attend(self, cache: Any, weights: jnp.ndarray,
+                    active: Optional[jnp.ndarray] = None) -> Any:
         """Second phase when ``AttendSpec.needs_weights``; ``weights`` is the
-        group-summed post-softmax distribution (B, Hkv, P)."""
+        group-summed post-softmax distribution (B, Hkv, P).  ``active`` is
+        the scheduler's per-lane live mask — paged caches gate pool mutation
+        on it (shared pool state cannot be rolled back by lane_select)."""
         return cache
 
     def prefill_import(self, arch: ArchConfig, cfg: KVPolicyConfig,
@@ -257,9 +305,20 @@ class KVPolicy:
         KV reads drop by W×.  The default tiles the lane axis of every array
         leaf (all caches are lane-leading pytrees); policies with non-lane
         state override.  ``axis`` selects the lane axis (1 for decode states
-        stacked over superblocks)."""
-        return jax.tree_util.tree_map(
-            lambda a: jnp.repeat(a, width, axis=axis), cache)
+        stacked over superblocks).
+
+        Paged caches fork **copy-on-write**: only the per-lane page map
+        tiles and refcounts are recomputed — zero pool bytes move until a
+        forked chain's first divergent write (token_write's CoW path)."""
+        pool = getattr(cache, "pool", None)
+        if pool is None:
+            return jax.tree_util.tree_map(
+                lambda a: jnp.repeat(a, width, axis=axis), cache)
+        body = dataclasses.replace(cache, pool=None)
+        body = jax.tree_util.tree_map(
+            lambda a: jnp.repeat(a, width, axis=axis), body)
+        return dataclasses.replace(
+            body, pool=block_pool.set_refcounts(pool, body.phys))
 
     def gather_cache(self, cache: Any, src: jnp.ndarray, *,
                      axis: int = 0) -> Any:
@@ -267,9 +326,20 @@ class KVPolicy:
         how the scheduler forks a prefilled lane into free lanes of a
         fixed-size arena (``src`` is the identity except forked targets).
         Same override point as :meth:`fork_cache` for policies whose state
-        is not purely lane-leading."""
-        return jax.tree_util.tree_map(
-            lambda a: jnp.take(a, src, axis=axis), cache)
+        is not purely lane-leading.
+
+        Paged: the page map shuffles like any per-lane leaf, then refcounts
+        are recomputed — duplicated lanes become CoW sharers, dropped lanes'
+        pages fall back to the free list."""
+        pool = getattr(cache, "pool", None)
+        if pool is None:
+            return jax.tree_util.tree_map(
+                lambda a: jnp.take(a, src, axis=axis), cache)
+        body = dataclasses.replace(cache, pool=None)
+        body = jax.tree_util.tree_map(
+            lambda a: jnp.take(a, src, axis=axis), body)
+        return dataclasses.replace(
+            body, pool=block_pool.set_refcounts(pool, body.phys))
 
     # -- prefix lifecycle (cross-request radix prefix cache) -----------------
 
@@ -287,8 +357,23 @@ class KVPolicy:
         state lane-leading (:class:`~repro.core.kv_cache.LaneSliceable`), so
         the default is a pure lane slice; policies with non-lane state must
         override both hooks together (same override point as
-        :meth:`fork_cache`).  ``lane`` may be a traced int32 scalar."""
-        return cache.export_lane(lane, axis=axis)
+        :meth:`fork_cache`).  ``lane`` may be a traced int32 scalar.
+
+        Paged caches **densify** on export: the lane's pool pages are
+        gathered into a fixed-arena-shaped snapshot (``pool``/``phys`` =
+        None) — byte-compatible with snapshots from a fixed-arena engine, so
+        the prefix cache stores one format."""
+        pool = getattr(cache, "pool", None)
+        if pool is None:
+            return cache.export_lane(lane, axis=axis)
+        if axis:
+            return jax.vmap(
+                lambda c: self.export_prefix(c, lane, axis=0))(cache)
+        phys_l = jax.lax.dynamic_slice_in_dim(cache.phys, lane, 1, axis=0)
+        k, v = block_pool.dense_kv(pool, phys_l)             # (1, H, P, Dh)
+        snap = dataclasses.replace(cache, pool=None, phys=None
+                                   ).export_lane(lane, axis=0)
+        return dataclasses.replace(snap, k=k, v=v)
 
     def import_prefix(self, cache: Any, snap: Any, lane, *, axis: int = 0
                       ) -> Any:
@@ -296,8 +381,47 @@ class KVPolicy:
 
         The target lane must be pristine (just reclaimed/initialised); the
         snapshot overwrites every leaf's lane slice, so the lane continues
-        exactly where the exporting request's prefill stood."""
-        return cache.import_lane(snap, lane, axis=axis)
+        exactly where the exporting request's prefill stood.
+
+        Paged caches re-page the dense snapshot: pages are allocated for
+        every block with a live slot, snapshot block contents scatter into
+        them, and the lane's page map + refcounts are rebuilt.  Pool
+        exhaustion drops the affected blocks (reads as zeros, masked) and
+        latches ``pool.exhausted``."""
+        pool = getattr(cache, "pool", None)
+        if pool is None:
+            return cache.import_lane(snap, lane, axis=axis)
+        if axis:
+            return jax.vmap(
+                lambda c, s: self.import_prefix(c, s, lane, axis=0)
+            )(cache, snap)
+        bp = pool.block_p
+        _, hh, nbb = cache.phys.shape
+        p, dh = snap.k.shape[2], snap.k.shape[3]
+        valid = jnp.broadcast_to(snap.valid_mask(), (1, hh, p))
+        need = jnp.any(valid.reshape(hh, nbb, bp), axis=-1).reshape(-1)
+        pool, page, ok = block_pool.alloc(pool, need)
+        dst = jnp.where(need & ok, page, pool.num_blocks)
+        pool = dataclasses.replace(
+            pool,
+            k=pool.k.at[dst].set(
+                snap.k.reshape(hh * nbb, bp, dh).astype(pool.k.dtype),
+                mode="drop"),
+            v=pool.v.at[dst].set(
+                snap.v.reshape(hh * nbb, bp, dh).astype(pool.v.dtype),
+                mode="drop"))
+        phys_lane = jnp.where(need & ok, page, -1).reshape(1, hh, nbb)
+        phys = jax.lax.dynamic_update_slice_in_dim(cache.phys, phys_lane,
+                                                   lane, axis=0)
+        pool = dataclasses.replace(
+            pool, ref=block_pool.recount(phys, pool.num_blocks))
+        body = dataclasses.replace(cache, pool=None, phys=None)
+        snap_z = dataclasses.replace(
+            snap, pool=None, phys=None,
+            k=snap.k[..., :0].astype(cache.k.dtype),
+            v=snap.v[..., :0].astype(cache.v.dtype))
+        body = body.import_lane(snap_z, lane, axis=0)
+        return dataclasses.replace(body, pool=pool, phys=phys)
 
     def import_slab(self, slab: Any, snap: Any, slot, *, axis: int = 0
                     ) -> Any:
@@ -329,14 +453,26 @@ class KVPolicy:
         """Reset lanes where ``reset_mask`` (B,) is True to the pristine
         ``fresh`` cache: the EOS-reclamation hook.  A reclaimed lane's arena
         reads as empty (``live_tokens`` ≈ 0) and its free list is full, so
-        the scheduler can admit the next request into it."""
+        the scheduler can admit the next request into it.
+
+        Paged: the reclaimed lane's page-map rows reset to -1 and refcounts
+        are recomputed, so its pages return to the free list the moment no
+        CoW sharer still maps them.  The pool itself (bytes + counters) is
+        kept — counters are monotone observability state."""
 
         def sel(cur, init):
             m = reset_mask.reshape((1,) * axis + (-1,)
                                    + (1,) * (cur.ndim - axis - 1))
             return jnp.where(m, init, cur)
 
-        return jax.tree_util.tree_map(sel, cache, fresh)
+        pool = getattr(cache, "pool", None)
+        if pool is None:
+            return jax.tree_util.tree_map(sel, cache, fresh)
+        body = jax.tree_util.tree_map(
+            sel, dataclasses.replace(cache, pool=None),
+            dataclasses.replace(fresh, pool=None))
+        return dataclasses.replace(
+            body, pool=block_pool.set_refcounts(pool, body.phys))
 
     # -- accounting ----------------------------------------------------------
 
@@ -349,6 +485,11 @@ class KVPolicy:
                 "peak_bytes": self.peak_bytes(cache)}
 
     def peak_bytes(self, cache: Any) -> int:
+        pool = getattr(cache, "pool", None)
+        if pool is not None:
+            # paged: the device footprint IS the pool; per-lane arenas are
+            # zero-width placeholders
+            return _nbytes(pool.k) + _nbytes(pool.v)
         return _nbytes(cache.k) + _nbytes(cache.v)
 
 
@@ -360,9 +501,18 @@ class KVPolicy:
 def _attend_spec(cache, **kw) -> AttendSpec:
     """Uniform spec builder: attach the cache's live-block table when it
     maintains one (``block_spec`` is the cache-side half of the kernel's
-    block-table contract — see docs/kernels.md)."""
+    block-table contract — see docs/kernels.md).
+
+    Paged caches additionally pass the pool arena through for the kernel and
+    gather a dense view for the reference path (DCE'd under the kernel)."""
     tbl, n, bp = cache.block_spec() if hasattr(cache, "block_spec") \
         else (None, None, 0)
+    pool = getattr(cache, "pool", None)
+    if pool is not None:
+        k, v = block_pool.dense_kv(pool, cache.phys)
+        return AttendSpec(k, v, cache.valid_mask(), cache.positions(),
+                          block_tbl=tbl, block_n=n, block_p=bp,
+                          pool_k=pool.k, pool_v=pool.v, phys=cache.phys, **kw)
     return AttendSpec(cache.k, cache.v, cache.valid_mask(), cache.positions(),
                       block_tbl=tbl, block_n=n, block_p=bp, **kw)
 
@@ -377,7 +527,7 @@ class _SlotRingMixin:
         alpha = aux.get("alpha_bin")
         if alpha is None:
             alpha = jnp.zeros((b, cfg.num_kv_heads), bool)
-        cache = cache.step(k_new, v_new, alpha)
+        cache = cache.step(k_new, v_new, alpha, active=aux.get("active"))
         return cache, _attend_spec(cache)
 
 
@@ -392,13 +542,16 @@ class VanillaPolicy(_SlotRingMixin, KVPolicy):
             eff_len = min(max_len, layer_window + 1)
             return SlotDMSCache.init(batch, a.num_kv_heads, eff_len, a.head_dim,
                                      max(arch.dms.window, 1), dtype,
-                                     dms_active=False, block_p=cfg.block_p)
+                                     dms_active=False, block_p=cfg.block_p,
+                                     paged=cfg.paged,
+                                     pool_blocks=cfg.pool_blocks)
         return VanillaCache.init(batch, a.num_kv_heads, max_len, a.head_dim,
-                                 dtype, block_p=cfg.block_p)
+                                 dtype, block_p=cfg.block_p, paged=cfg.paged,
+                                 pool_blocks=cfg.pool_blocks)
 
     def decode_update(self, cache, q, k_new, v_new, aux):
         if isinstance(cache, VanillaCache):
-            cache = cache.append(k_new, v_new)
+            cache = cache.append(k_new, v_new, active=aux.get("active"))
             return cache, _attend_spec(cache)
         return self._slot_update(cache, k_new, v_new, aux)
 
@@ -410,7 +563,8 @@ class VanillaPolicy(_SlotRingMixin, KVPolicy):
             raise NotImplementedError("vanilla: no local-window import path")
         b, h, t, d = k.shape
         cache = VanillaCache.init(b, a.num_kv_heads, max_len, a.head_dim,
-                                  dtype, block_p=cfg.block_p)
+                                  dtype, block_p=cfg.block_p, paged=cfg.paged,
+                                  pool_blocks=cfg.pool_blocks)
         return cache.append(k, v)
 
 
@@ -423,7 +577,8 @@ class WindowPolicy(_SlotRingMixin, KVPolicy):
         budget = _budget_tokens(cfg, max_len)
         return SlotDMSCache.init(batch, a.num_kv_heads, budget + 1, a.head_dim,
                                  max(arch.dms.window, 1), dtype,
-                                 dms_active=False, block_p=cfg.block_p)
+                                 dms_active=False, block_p=cfg.block_p,
+                                 paged=cfg.paged, pool_blocks=cfg.pool_blocks)
 
     def decode_update(self, cache, q, k_new, v_new, aux):
         return self._slot_update(cache, k_new, v_new, aux)
@@ -442,7 +597,8 @@ class DMSPolicy(_SlotRingMixin, KVPolicy):
         slots = SlotDMSCache.provision_slots(eff_len, cfg.cr, arch.dms.window)
         return SlotDMSCache.init(batch, a.num_kv_heads, min(slots, eff_len + 1),
                                  a.head_dim, arch.dms.window, dtype,
-                                 block_p=cfg.block_p)
+                                 block_p=cfg.block_p, paged=cfg.paged,
+                                 pool_blocks=cfg.pool_blocks)
 
     def decode_update(self, cache, q, k_new, v_new, aux):
         return self._slot_update(cache, k_new, v_new, aux)
@@ -452,10 +608,13 @@ class DMSPolicy(_SlotRingMixin, KVPolicy):
         eff_len = (min(max_len, layer_window + 1) if layer_window is not None
                    else max_len)
         slots = SlotDMSCache.provision_slots(eff_len, cfg.cr, arch.dms.window)
-        return SlotDMSCache.from_prefill(
+        cache = SlotDMSCache.from_prefill(
             k, v, positions, retained, arch.dms.window,
             min(slots, eff_len + 1), alpha_bin=alpha_bin,
             block_p=cfg.block_p)
+        if cfg.paged:
+            cache = pack_dense(cache, cfg.pool_blocks)
+        return cache
 
 
 @register_policy("dms_masked")
@@ -468,7 +627,8 @@ class MaskedDMSPolicy(_SlotRingMixin, KVPolicy):
         a = arch.attn
         return MaskedDMSCache.init(batch, a.num_kv_heads, max_len, a.head_dim,
                                    arch.dms.window, dtype,
-                                   block_p=cfg.block_p)
+                                   block_p=cfg.block_p, paged=cfg.paged,
+                                   pool_blocks=cfg.pool_blocks)
 
     def decode_update(self, cache, q, k_new, v_new, aux):
         return self._slot_update(cache, k_new, v_new, aux)
@@ -478,11 +638,11 @@ class _WeightEvictPolicy(KVPolicy):
     """Shared insert→attend→evict shape for weight-driven policies."""
 
     def decode_update(self, cache, q, k_new, v_new, aux):
-        cache = cache.insert(k_new, v_new)
+        cache = cache.insert(k_new, v_new, active=aux.get("active"))
         return cache, _attend_spec(cache, needs_weights=True)
 
-    def post_attend(self, cache, weights):
-        return cache.evict(weights)
+    def post_attend(self, cache, weights, active=None):
+        return cache.evict(weights, active=active)
 
 
 @register_policy("tova")
@@ -491,7 +651,8 @@ class TOVAPolicy(_WeightEvictPolicy):
         a = arch.attn
         budget = _budget_tokens(cfg, max_len)
         return TOVACache.init(batch, a.num_kv_heads, budget + 1, a.head_dim,
-                              dtype, block_p=cfg.block_p)
+                              dtype, block_p=cfg.block_p, paged=cfg.paged,
+                              pool_blocks=cfg.pool_blocks)
 
 
 @register_policy("h2o")
@@ -500,7 +661,8 @@ class H2OPolicy(_WeightEvictPolicy):
         a = arch.attn
         budget = _budget_tokens(cfg, max_len)
         return H2OCache.init(batch, a.num_kv_heads, budget + 1, a.head_dim,
-                             max(budget // 2, 1), dtype, block_p=cfg.block_p)
+                             max(budget // 2, 1), dtype, block_p=cfg.block_p,
+                             paged=cfg.paged, pool_blocks=cfg.pool_blocks)
 
 
 @register_policy("quest")
@@ -513,12 +675,14 @@ class QuestPolicy(KVPolicy):
         ps = cfg.quest_page_size
         ml = ((max_len + ps - 1) // ps) * ps
         top = cfg.quest_top_pages or max(int(ml / cfg.cr) // ps, 1)
-        return QuestCache.init(batch, a.num_kv_heads, ml, a.head_dim, ps, top, dtype)
+        return QuestCache.init(batch, a.num_kv_heads, ml, a.head_dim, ps, top,
+                               dtype, paged=cfg.paged,
+                               pool_blocks=cfg.pool_blocks)
 
     def decode_update(self, cache, q, k_new, v_new, aux):
         cfg = aux["attn_cfg"]
         b = q.shape[0]
-        cache = cache.append(k_new, v_new)
+        cache = cache.append(k_new, v_new, active=aux.get("active"))
         g = cfg.q_per_kv
         q_pool = q[:, 0].reshape(b, cfg.num_kv_heads, g, cfg.head_dim).mean(axis=2)
         pages = cache.select_pages(q_pool)
@@ -527,6 +691,13 @@ class QuestPolicy(KVPolicy):
         # flash-decode kernel fetches exactly the selected pages, turning
         # Quest's reads-tokens metering into real HBM traffic
         tbl, n = cache.block_table_from_pages(pages)
+        if cache.pool is not None:
+            kd, vd = block_pool.dense_kv(cache.pool, cache.phys)
+            return cache, AttendSpec(kd, vd, tok_mask, cache.positions(),
+                                     block_tbl=tbl, block_n=n,
+                                     block_p=cache.page_size,
+                                     pool_k=cache.pool.k, pool_v=cache.pool.v,
+                                     phys=cache.phys)
         return cache, AttendSpec(cache.k, cache.v, tok_mask, cache.positions(),
                                  block_tbl=tbl, block_n=n,
                                  block_p=cache.page_size)
@@ -539,6 +710,9 @@ class QuestPolicy(KVPolicy):
                 "peak_bytes": self.peak_bytes(cache)}
 
     def peak_bytes(self, cache):
+        if cache.pool is not None:
+            return (_nbytes(cache.pool.k) + _nbytes(cache.pool.v)
+                    + _nbytes(cache.kmin) + _nbytes(cache.kmax))
         return (_nbytes(cache.k) + _nbytes(cache.v)
                 + _nbytes(cache.kmin) + _nbytes(cache.kmax))
 
@@ -553,7 +727,8 @@ class DMCPolicy(KVPolicy):
         a = arch.attn
         slots = int(max_len / cfg.cr) + 16
         return DMCCache.init(batch, a.num_kv_heads, slots, a.head_dim,
-                             block_p=cfg.block_p)
+                             block_p=cfg.block_p, paged=cfg.paged,
+                             pool_blocks=cfg.pool_blocks)
 
     def decode_update(self, cache, q, k_new, v_new, aux):
         cfg = aux["attn_cfg"]
@@ -561,11 +736,19 @@ class DMCPolicy(KVPolicy):
         alpha = aux.get("alpha_bin")
         if alpha is None:
             alpha = jnp.zeros((b, cfg.num_kv_heads), bool)
-        cache = cache.step(k_new, v_new, alpha)
+        cache = cache.step(k_new, v_new, alpha, active=aux.get("active"))
         dtype = aux["dtype"]
         tbl, n, bp = cache.block_spec()
+        if cache.pool is not None:
+            # the pool holds fp32 accumulators while the spec is model-dtype,
+            # so (unlike other paged caches) the kernel cannot stream pool
+            # pages directly: gather the dense view and cast, exactly the
+            # fixed-arena path — the cast output feeds the same kernel
+            kd, vd = block_pool.dense_kv(cache.pool, cache.phys)
+        else:
+            kd, vd = cache.k, cache.v
         # merged entries have no single logical position: skip window masking
-        return cache, AttendSpec(cache.k.astype(dtype), cache.v.astype(dtype),
+        return cache, AttendSpec(kd.astype(dtype), vd.astype(dtype),
                                  cache.valid_mask(), None,
                                  block_tbl=tbl, block_n=n, block_p=bp)
 

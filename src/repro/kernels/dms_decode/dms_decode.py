@@ -38,6 +38,10 @@ class DecodeConfig(NamedTuple):
     block_p: int
     logit_cap: Optional[float]
     interpret: bool
+    shared_kv: bool = False     # paged mode: k/v are ONE shared page arena
+                                # (1, NPOOL*block_p, Dh); table entries are
+                                # pool page ids and `valid` rides pre-gathered
+                                # in table order (bh, NB_tbl*block_p)
 
 
 def _decode_kernel(tbl_ref, n_ref, q_ref, k_ref, v_ref, valid_ref,
@@ -80,37 +84,59 @@ def _decode_kernel(tbl_ref, n_ref, q_ref, k_ref, v_ref, valid_ref,
         o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
 
 
+def _live_i(h, i, n_ref):
+    """Grid step ``i`` clamped to the last live table entry — a repeated
+    index means the pipeline issues NO new DMA for the dead tail (and
+    ``@pl.when`` skips its compute)."""
+    return jnp.minimum(i, jnp.maximum(n_ref[h] - 1, 0))
+
+
 def _live_block(h, i, tbl_ref, n_ref):
-    """The arena block this grid step streams: table entry ``i``, clamped to
-    the last live entry past ``n`` — a repeated index means the pipeline
-    issues NO new DMA for the dead tail (and ``@pl.when`` skips its
-    compute)."""
-    return tbl_ref[h, jnp.minimum(i, jnp.maximum(n_ref[h] - 1, 0))]
+    """The arena block this grid step streams: table entry ``i`` (clamped —
+    see :func:`_live_i`).  In fixed-arena mode the entry indexes the head's
+    own arena; in ``shared_kv`` (paged) mode it is a pool page id into the
+    one shared arena."""
+    return tbl_ref[h, _live_i(h, i, n_ref)]
 
 
 def decode_fwd(q, k, v, valid, block_tbl, block_n, cfg: DecodeConfig):
-    """q: (BHkv, G, Dh); k/v: (BHkv, P, Dh) with P a block_p multiple;
-    valid: (BHkv, P) in its stored dtype (bool/int — only ``!= 0`` is used);
-    block_tbl: (BHkv, NB_tbl) int32 compacted live block ids;
-    block_n: (BHkv,) int32 live counts.  Returns (BHkv, G, Dh).
+    """q: (BHkv, G, Dh); block_n: (BHkv,) int32 live counts.
+    Returns (BHkv, G, Dh).
 
-    Only blocks listed in the table are fetched: HBM traffic per head is
-    ``n * block_p * Dh * (itemsize_k + itemsize_v)`` regardless of arena
-    capacity P."""
+    Fixed-arena mode: k/v (BHkv, P, Dh) with P a block_p multiple; valid
+    (BHkv, P) in its stored dtype (bool/int — only ``!= 0`` is used);
+    block_tbl (BHkv, NB_tbl) int32 compacted live block ids into the head's
+    own arena.
+
+    ``cfg.shared_kv`` (paged) mode: k/v are the ONE global page pool
+    (1, NPOOL*block_p, Dh) shared by every (lane, kv head); block_tbl
+    entries are *pool page ids* (the cache's logical table translated
+    through its page map) and ``valid`` arrives pre-gathered into table
+    order (BHkv, NB_tbl*block_p) so its index map needs no indirection.
+
+    Either way only blocks listed in the table are fetched: HBM traffic per
+    head is ``n * block_p * Dh * (itemsize_k + itemsize_v)`` regardless of
+    arena/pool capacity."""
     bh, g, dh = q.shape
     nb_tbl = block_tbl.shape[1]
+
+    if cfg.shared_kv:
+        # one shared arena: the leading axis is a singleton, the table entry
+        # IS the page id; `valid` is table-ordered so it indexes by (h, i)
+        kv_map = lambda h, i, tbl, n: (0, _live_block(h, i, tbl, n), 0)
+        val_map = lambda h, i, tbl, n: (h, _live_i(h, i, n))
+    else:
+        kv_map = lambda h, i, tbl, n: (h, _live_block(h, i, tbl, n), 0)
+        val_map = lambda h, i, tbl, n: (h, _live_block(h, i, tbl, n))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(bh, nb_tbl),
         in_specs=[
             pl.BlockSpec((1, g, dh), lambda h, i, tbl, n: (h, 0, 0)),
-            pl.BlockSpec((1, cfg.block_p, dh),
-                         lambda h, i, tbl, n: (h, _live_block(h, i, tbl, n), 0)),
-            pl.BlockSpec((1, cfg.block_p, dh),
-                         lambda h, i, tbl, n: (h, _live_block(h, i, tbl, n), 0)),
-            pl.BlockSpec((1, cfg.block_p),
-                         lambda h, i, tbl, n: (h, _live_block(h, i, tbl, n))),
+            pl.BlockSpec((1, cfg.block_p, dh), kv_map),
+            pl.BlockSpec((1, cfg.block_p, dh), kv_map),
+            pl.BlockSpec((1, cfg.block_p), val_map),
         ],
         out_specs=pl.BlockSpec((1, g, dh), lambda h, i, tbl, n: (h, 0, 0)),
         scratch_shapes=[

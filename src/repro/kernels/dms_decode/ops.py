@@ -9,6 +9,14 @@ Two call modes (docs/kernels.md):
   — the (B, Hkv, …) → (B·Hkv, …) merges are metadata-only reshapes, there is
   no ``jnp.pad``, no ``valid`` dtype cast, and no full-arena liveness
   reduction on the step path.  HBM traffic ∝ live blocks.
+
+  With ``pool_k``/``pool_v``/``phys`` also given (paged caches — see
+  ``repro.core.block_pool``) the kernel streams the shared page arena
+  directly: the logical table is translated through the page map (one
+  (B, Hkv, NB_tbl) gather of int32 ids), ``valid`` is gathered into table
+  order (bool rows — bytes, not Dh-wide), and the dense per-lane k/v views
+  a paged AttendSpec carries for the reference path are never touched
+  (dead code under jit).  Zero page bytes move on dispatch.
 * **Legacy/dense mode** (no table — encoder-memory cross-attention, direct
   kernel tests on arbitrary shapes): a table covering every written block is
   derived from ``valid`` (one O(P) reduction) and the arena is padded to a
@@ -63,12 +71,16 @@ def dms_decode_attention(
     block_p: Optional[int] = None,
     logit_cap: Optional[float] = None,
     interpret: Optional[bool] = None,
+    pool_k: Optional[jnp.ndarray] = None,      # (NPOOL, block_p, Dh) page arena
+    pool_v: Optional[jnp.ndarray] = None,
+    phys: Optional[jnp.ndarray] = None,        # (B, Hkv, NB) page map, -1 free
 ) -> jnp.ndarray:
     b, _, hq, dh = q.shape
     hkv, p = k.shape[1], k.shape[2]
     g = hq // hkv
     if interpret is None:
         interpret = _default_interpret()
+    shared_kv = False
 
     if block_tbl is not None:
         # block-table fast path: zero full-arena copies — reshapes only
@@ -77,10 +89,34 @@ def dms_decode_attention(
                 f"arena extent {p} not a multiple of block_p {block_p}; "
                 "caches must allocate pre-padded (KVPolicyConfig.block_p)")
         bp = block_p
-        kf, vf = k.reshape(b * hkv, p, dh), v.reshape(b * hkv, p, dh)
-        valf = valid.reshape(b * hkv, p)
         tblf = block_tbl.reshape(b * hkv, -1)
         nf = block_n.reshape(b * hkv)
+        if pool_k is not None:
+            # paged: stream the shared page arena.  Translate logical block
+            # ids -> pool page ids through the page map (the one-liner twin
+            # of block_pool.translate_table, inlined so kernels don't import
+            # core); stale tail entries may map to -1 — clamp, the kernel's
+            # live-count guard never dereferences them.
+            shared_kv = True
+            npool, pool_bp = pool_k.shape[0], pool_k.shape[1]
+            if pool_bp != bp:
+                raise ValueError(
+                    f"pool page size {pool_bp} != block_p {bp}")
+            nb = phys.shape[-1]
+            ptbl = jnp.take_along_axis(
+                phys, jnp.clip(block_tbl, 0, nb - 1), axis=2)
+            tblf = jnp.clip(ptbl, 0, npool - 1).reshape(b * hkv, -1)
+            kf = pool_k.reshape(1, npool * bp, dh)
+            vf = pool_v.reshape(1, npool * bp, dh)
+            # valid rides pre-gathered into table order so its index map
+            # needs no indirection inside the kernel (bool rows — cheap)
+            valf = jnp.take_along_axis(
+                valid.reshape(b, hkv, p // bp, bp),
+                jnp.clip(block_tbl, 0, p // bp - 1)[..., None], axis=2,
+            ).reshape(b * hkv, -1)
+        else:
+            kf, vf = k.reshape(b * hkv, p, dh), v.reshape(b * hkv, p, dh)
+            valf = valid.reshape(b * hkv, p)
     else:
         # legacy/dense path: derive a written-prefix-of-blocks table from
         # `valid` (O(P) reduction + pad — NOT the policy step path)
@@ -96,6 +132,6 @@ def dms_decode_attention(
 
     qf = q[:, 0].reshape(b, hkv, g, dh).reshape(b * hkv, g, dh)
     cfg = DecodeConfig(orig_dh=dh, g=g, block_p=bp, logit_cap=logit_cap,
-                       interpret=bool(interpret))
+                       interpret=bool(interpret), shared_kv=shared_kv)
     out = decode_fwd(qf, kf, vf, valf, tblf, nf, cfg)
     return out.reshape(b, hkv, g, dh).reshape(b, 1, hq, dh)

@@ -62,11 +62,22 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens to "
                          "every request (exercises the prefix cache)")
+    ap.add_argument("--paged", action="store_true",
+                    help="back KV caches with the shared paged block pool "
+                         "(on-demand lane arenas, copy-on-write fork); lane "
+                         "footprint tracks live tokens, not provisioned "
+                         "capacity")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="shared pool size in block_p pages per cache "
+                         "(default: lanes*heads*arena_blocks — never binds; "
+                         "shrink to oversubscribe lanes against live "
+                         "footprint, admission then gates on pool blocks)")
     args = ap.parse_args(argv)
 
     arch = get_smoke(args.arch)
     params = tfm.init_model(jax.random.PRNGKey(0), arch)
-    policy = KVPolicyConfig(kind=args.policy, cr=args.cr, window=arch.dms.window)
+    policy = KVPolicyConfig(kind=args.policy, cr=args.cr, window=arch.dms.window,
+                            paged=args.paged, pool_blocks=args.pool_blocks)
     engine = Engine(arch, params, policy, use_kernel=args.use_kernel,
                     chunk=args.chunk, prefix_cache_mb=args.prefix_cache_mb,
                     prefix_cache_device_mb=args.prefix_cache_device_mb,
@@ -105,6 +116,9 @@ def main(argv=None):
         "requests": len(results), "lanes": args.num_lanes,
         "scheduler_ticks": sched.ticks, "scheduler_steps": sched.steps,
     }))
+    pool = sched.pool_stats()
+    if pool is not None:
+        print(json.dumps({"block_pool": pool}))
     if engine.prefix_cache is not None:
         print(json.dumps({"prefix_cache": engine.prefix_cache.stats()}))
 

@@ -359,6 +359,7 @@ def decode_attention(
     pos_t: Optional[jnp.ndarray] = None,   # scalar int32 OR per-lane (B,)
     use_kernel: bool = False,
     cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None,
+    active: Optional[jnp.ndarray] = None,  # (B,) scheduler live-lane mask
 ) -> Tuple[jnp.ndarray, Any, Dict[str, Any]]:
     """One decode step against a :class:`repro.core.policy.PolicyCache`.
 
@@ -424,13 +425,13 @@ def decode_attention(
         raise TypeError(f"decode_attention needs a PolicyCache, got {type(cache)}")
 
     pol_aux = {"alpha_bin": alpha_bin, "pos_t": pos_lane, "attn_cfg": cfg,
-               "arch": arch, "dtype": dtype}
+               "arch": arch, "dtype": dtype, "active": active}
     inner, spec = pol.decode_update(cache.cache, q, k_new_c, v_new_c, pol_aux)
     out, w_group = _masked_decode(
         q, spec, window if spec.positions is not None else None, cfg,
         use_kernel, pos_lane, need_weights=spec.needs_weights)
     if spec.needs_weights:
-        inner = pol.post_attend(inner, w_group)
+        inner = pol.post_attend(inner, w_group, active=active)
     cache = dataclasses.replace(cache, cache=inner)
 
     y = out.reshape(b, 1, cfg.num_heads * cfg.head_dim) @ p["wo"].astype(dtype)
@@ -465,7 +466,8 @@ def _masked_decode(q, spec, window, cfg, use_kernel,
             vis = jnp.broadcast_to(vis, (b, hkv, k.shape[2]))
         out = dkops.dms_decode_attention(
             q, k, v, vis, block_tbl=spec.block_tbl, block_n=spec.block_n,
-            block_p=spec.block_p or None, logit_cap=cfg.logit_softcap)
+            block_p=spec.block_p or None, logit_cap=cfg.logit_softcap,
+            pool_k=spec.pool_k, pool_v=spec.pool_v, phys=spec.phys)
         return out, None
     # MXU-style mixed precision: bf16 operands, fp32 accumulation — the cache
     # is never converted/materialised in fp32 (that would double decode traffic)

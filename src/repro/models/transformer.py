@@ -544,7 +544,7 @@ def decode_step(
                 a_out, new_c, aux = attn_lib.decode_attention(
                     p["attn"], h, cache[str(pi)], arch.attn, arch,
                     layer_window=_layer_window(arch, kind), pos_t=pos_t,
-                    use_kernel=use_kernel)
+                    use_kernel=use_kernel, active=active)
                 if arch.post_norm:
                     a_out = norm_apply(p["attn_post_norm"], a_out, arch.norm, arch.norm_eps)
                 x_t = x_t + a_out
@@ -620,10 +620,20 @@ def lane_select(mask: jnp.ndarray, on_true: Any, on_false: Any) -> Any:
     :func:`init_decode_state`) — so a (B,) bool mask broadcasts as
     (1, B, 1, ...).  Used for: freezing inactive lanes' state, reclaiming
     finished lanes back to a pristine arena, and scheduler lane admission.
+
+    :class:`~repro.core.block_pool.BlockPool` nodes are lane-*shared* state
+    with no lane axis: the updated pool is kept unconditionally — its
+    mutation helpers already took the lane event mask, so inactive lanes
+    produced no pool events to roll back (their per-lane ``phys`` page map
+    rolls back here like any other leaf).
     """
 
     def sel(a, b):
+        if isinstance(a, policy_lib.block_pool.BlockPool):
+            return a
         m = mask.reshape((1, -1) + (1,) * (a.ndim - 2))
         return jnp.where(m, a, b)
 
-    return jax.tree_util.tree_map(sel, on_true, on_false)
+    return jax.tree_util.tree_map(
+        sel, on_true, on_false,
+        is_leaf=lambda x: isinstance(x, policy_lib.block_pool.BlockPool))

@@ -202,14 +202,28 @@ class Scheduler:
         self.state = tfm.init_decode_state(arch, num_lanes, max_len, policy)
         self.signature = tfm.lane_state_signature(self.state)
         # per-boundary snapshot bytes are shape-derived and constant for this
-        # arena (every state leaf is lane-proportional, so whole-state bytes
-        # divide exactly by num_lanes); knowing them up front lets
-        # _export_prefix skip the jitted export entirely when no snapshot
-        # can ever fit in either tier
-        self._snap_nbytes = (prefix_cache_lib.snapshot_nbytes(self.state)
-                             // num_lanes
+        # arena; knowing them up front lets _export_prefix skip the jitted
+        # export entirely when no snapshot can ever fit in either tier.
+        # eval_shape on the real export (no FLOPs, no allocation) rather than
+        # whole-state-bytes // num_lanes: state leaves need not be
+        # lane-proportional — a paged state's shared block pool has no lane
+        # axis at all, and its snapshots densify to fixed-arena shape.
+        snap_shapes = jax.eval_shape(tfm.export_lane_state, self.state,
+                                     jnp.int32(0))
+        self._snap_nbytes = (prefix_cache_lib.snapshot_nbytes(snap_shapes)
                              + int(arch.padded_vocab) * 4)  # + fp32 logits row
         self.peak_bytes = float(policy_lib.state_peak_bytes(self.state))
+        # paged-pool admission descriptors: (kv_heads, arena_blocks, block_p,
+        # pool_blocks) per pooled cache — a lane's worst-case footprint is
+        # now a real byte-budget question, answered host-side in _admit
+        self._pool_descs = []
+        for pc in policy_lib.iter_policy_caches(self.state):
+            pool = getattr(pc.cache, "pool", None)
+            if pool is not None:
+                phys = pc.cache.phys            # (nsb, B, H, NB)
+                self._pool_descs.append(
+                    (int(phys.shape[-2]), int(phys.shape[-1]),
+                     int(pool.block_p), int(pool.num_blocks)))
         self.rng = jax.random.PRNGKey(seed)
         self._host_rng = jax.random.PRNGKey(seed ^ 0x5EED0)
 
@@ -242,6 +256,13 @@ class Scheduler:
             raise ValueError("prompt + max_new exceeds scheduler max_len")
         self.queue.append(_ReqState(req, self.pad_id))
 
+    def pool_stats(self) -> Optional[Dict[str, Any]]:
+        """Paged-pool observability: live/free/allocated blocks, CoW share
+        counts, fragmentation, high-water mark — aggregated over every pooled
+        cache in the decode state (host-side sync; None when nothing is
+        paged).  Surfaced by launch/serve.py's run summary."""
+        return policy_lib.state_pool_stats(self.state)
+
     def run(self) -> List[RequestResult]:
         """Run the queue to completion; results in completion order."""
         results: List[RequestResult] = []
@@ -263,6 +284,36 @@ class Scheduler:
     def _idle_lanes(self) -> List[int]:
         return [l for l in range(self.num_lanes) if self.owner[l] is None]
 
+    def _lane_pool_demand(self, tokens: int) -> List[int]:
+        """Worst-case pool blocks ONE chain of a ``tokens``-token request can
+        ever hold, per pooled descriptor: ``H * min(ceil(T / bp), NB)`` — the
+        request can't map more blocks than its tokens span, and the cache's
+        logical arena caps retention at ``NB`` blocks per head regardless.
+        Empty when nothing is paged (fixed arenas: admission is lanes-only).
+        """
+        return [h * min(-(-tokens // bp), nb)
+                for (h, nb, bp, _) in self._pool_descs]
+
+    def _pool_fits(self, req: Request) -> bool:
+        """Byte-budget admission: would admitting ``req`` let total
+        worst-case pool demand exceed any pool's block count?  Host-side
+        static arithmetic — no device sync.  With the default provisioning
+        (``pool_blocks = B*H*NB``) this can never bind (lane demand is at
+        most ``H*NB``), so fixed-arena-equivalent configs admit identically;
+        an operator shrinks ``pool_blocks`` to oversubscribe lanes against
+        live-token footprint (the hyper-scaling capacity win)."""
+        if not self._pool_descs:
+            return True
+        demand = self._lane_pool_demand(len(req.prompt) + req.max_new)
+        reserved = [0] * len(self._pool_descs)
+        for r in self.active_reqs:
+            d = self._lane_pool_demand(len(r.req.prompt) + r.req.max_new)
+            for i in range(len(reserved)):
+                reserved[i] += r.req.width * d[i]
+        return all(reserved[i] + req.width * demand[i]
+                   <= self._pool_descs[i][3]
+                   for i in range(len(self._pool_descs)))
+
     def _admit(self) -> None:
         """Admit queued requests into idle lanes — FIFO with skip-scan.
 
@@ -270,7 +321,10 @@ class Scheduler:
         later; those W-1 are *reserved* at admission (``sum(width)`` over
         admitted requests never exceeds ``num_lanes``), which makes the fork
         wait in :meth:`_fork_ready` deadlock- and starvation-free: held
-        requests' lanes can never be re-admitted out from under them."""
+        requests' lanes can never be re-admitted out from under them.  Paged
+        states add a second gate (:meth:`_pool_fits`): admission reserves
+        worst-case pool blocks too, so an oversubscribed lane count can never
+        deadlock the shared pool."""
         # idle lanes are always pristine (fresh at construction; _tick
         # reclaims every lane of a completing request, fork targets included;
         # chunk steps never mutate inactive lanes) — no reset needed here
@@ -280,7 +334,8 @@ class Scheduler:
                            for r in self.active_reqs)
             nxt = next((r for r in self.queue
                         if r.req.arrival <= self.ticks
-                        and r.req.width <= len(idle) - reserved), None)
+                        and r.req.width <= len(idle) - reserved
+                        and self._pool_fits(r.req)), None)
             if nxt is None:
                 break
             self.queue.remove(nxt)
