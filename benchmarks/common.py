@@ -1,7 +1,6 @@
 """Shared benchmark harness utilities."""
 from __future__ import annotations
 
-import dataclasses
 import json
 import time
 from pathlib import Path

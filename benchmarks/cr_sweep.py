@@ -12,14 +12,12 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, save_json
 from repro.configs import get_smoke
 from repro.core.config import DMSConfig, KVPolicyConfig
 from repro.core.policy import available_policies
 from repro.data import tasks
-from repro.data.pipeline import DataConfig, make_batch
 from repro.launch import steps as steps_lib
 from repro.models import transformer as tfm
 from repro.optim import adamw

@@ -12,7 +12,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, save_json
 from repro.configs import get_smoke

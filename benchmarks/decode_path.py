@@ -50,39 +50,10 @@ BLOCK_P = 16
 
 
 # -- jaxpr traffic counters --------------------------------------------------
+# shared with the static-analysis lint passes: repro.analysis counts the
+# same ops the same way, so the audit and these baselines can't drift apart.
 
-
-def _walk_eqns(jaxpr):
-    from jax.extend.core import ClosedJaxpr, Jaxpr
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for val in eqn.params.values():
-            for sub in jax.tree_util.tree_leaves(
-                    val, is_leaf=lambda x: isinstance(x, (Jaxpr, ClosedJaxpr))):
-                if isinstance(sub, ClosedJaxpr):
-                    yield from _walk_eqns(sub.jaxpr)
-                elif isinstance(sub, Jaxpr):
-                    yield from _walk_eqns(sub)
-
-
-def count_arena_copies(fn, *args, arena_elems: int):
-    """Count full-arena copy ops in ``fn``'s jaxpr: ``pad``/``concatenate``
-    whose output is arena-sized or larger (the seed wrapper's per-step
-    re-pad), and ``convert_element_type`` on arena-sized *integer/bool*
-    operands (the seed's ``valid.astype(int32)`` recast).  The block-table
-    step path must show zero of each."""
-    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
-    pads = casts = 0
-    for eqn in _walk_eqns(jaxpr):
-        out_sizes = [int(np.prod(v.aval.shape)) for v in eqn.outvars
-                     if hasattr(v.aval, "shape")]
-        big = any(s >= arena_elems for s in out_sizes)
-        if eqn.primitive.name in ("pad", "concatenate") and big:
-            pads += 1
-        elif eqn.primitive.name == "convert_element_type" and big and \
-                not jnp.issubdtype(eqn.invars[0].aval.dtype, jnp.floating):
-            casts += 1
-    return {"arena_pad_copies": pads, "valid_recasts": casts}
+from repro.analysis.jaxpr import count_arena_copies  # noqa: E402
 
 
 # -- arena construction ------------------------------------------------------

@@ -9,7 +9,6 @@ Paper Eq. (2)-(6) with our constants:
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, save_json
 from repro.configs import get_arch

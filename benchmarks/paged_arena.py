@@ -34,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, save_json
-from benchmarks.decode_path import _walk_eqns
+from repro.analysis.jaxpr import count_big_float_ops, trace_jaxpr
 from repro.core import block_pool, policy as policy_lib
 from repro.core.kv_cache import SlotDMSCache, _round_up
 
@@ -176,16 +176,12 @@ def run(quick=False):
     forked = fork_fn(cache)
 
     def _kv_sized_ops(tree_in, min_elems):
-        # float ops at least min_elems big = actual K/V bytes moving (the
-        # refcount recompute builds a pool-squared int32 one-hot — metadata,
-        # deliberately not counted)
-        return sum(
-            1 for eqn in _walk_eqns(jax.make_jaxpr(
-                lambda c: pol.gather_cache(c, src, axis=0))(tree_in).jaxpr)
-            for v in eqn.outvars
-            if hasattr(v.aval, "shape")
-            and jnp.issubdtype(v.aval.dtype, jnp.floating)
-            and int(np.prod(v.aval.shape)) >= min_elems)
+        # float ops at least min_elems big = actual K/V bytes moving; the
+        # shared counter deliberately skips integer metadata (the refcount
+        # recompute builds a pool-squared int32 one-hot)
+        return count_big_float_ops(
+            trace_jaxpr(lambda c: pol.gather_cache(c, src, axis=0), tree_in),
+            min_elems)
 
     big_ops = _kv_sized_ops(cache, int(np.prod(cache.pool.k.shape)))
     cow_at_fork = (int(np.asarray(forked.pool.cow_copies))

@@ -13,17 +13,14 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import numpy as np
 
-from benchmarks.common import emit, save_json, ARTIFACTS
+from benchmarks.common import emit, save_json
 from repro.configs import get_smoke
 from repro.core.config import DMSConfig, KVPolicyConfig
 from repro.core.policy import available_policies
 from repro.core.hyperscale import ScalingConfig, frontier_margin, pareto_frontier
 from repro.data import tasks
-from repro.data.pipeline import DataConfig
 from repro.serving.engine import Engine, evaluate_hyperscale
-from repro.train.loop import TrainConfig, train
 from repro.models import transformer as tfm
 from repro.optim import adamw
 

@@ -13,7 +13,6 @@ after prefilling the prompt once (KVPolicy.fork_cache), so the prefill-phase
 KV reads are 4x lower than re-prefilling per chain — and the meters report
 exactly that.
 """
-import dataclasses
 import sys
 from pathlib import Path
 

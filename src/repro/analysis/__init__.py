@@ -1,0 +1,41 @@
+"""Tracing-time program auditor for the decode path.
+
+The repo's hardest-won invariants — no full-arena pad/cast per decode step,
+zero pool-sized ops in a CoW fork, one compile per (lanes, chunk) signature,
+no host sync inside the decode loop — used to live as ad-hoc jaxpr walkers
+inside two benchmarks, or nowhere.  This package makes them first-class
+static checks that run on the *traced* program, before anything executes:
+
+* :mod:`repro.analysis.jaxpr` — the shared jaxpr walker and traffic
+  counters the benchmarks now import instead of reimplementing.
+* :mod:`repro.analysis.passes` — :class:`Finding`, the pass registry, and
+  the traffic-lint passes (arena pads/casts, KV upcasts, arena gathers,
+  device-scalar outputs).
+* :mod:`repro.analysis.retrace` — :class:`RetraceSentinel`, an exact
+  compile-budget assertion over a set of named jits.
+* :mod:`repro.analysis.hostsync` — :class:`HostSyncTripwire` and the
+  :func:`sanctioned` region marker for deliberate device→host transfers.
+* :mod:`repro.analysis.contracts` — KVPolicy lifecycle / tree-invariance /
+  sharding-coverage checkers.
+* ``python -m repro.analysis.audit`` — the CI gate: sweeps every registered
+  policy × {ref, kernel} × {fixed, paged} and exits nonzero on any finding.
+
+See docs/analysis.md for the pass catalog and how to add a pass.
+"""
+from repro.analysis.contracts import (check_policy_lifecycle,
+                                      check_sharding_coverage,
+                                      check_tree_invariance)
+from repro.analysis.hostsync import HostSyncTripwire, sanctioned
+from repro.analysis.jaxpr import (count_arena_copies, count_big_float_ops,
+                                  walk_eqns)
+from repro.analysis.passes import (Finding, LintContext, available_passes,
+                                   register_pass, run_passes)
+from repro.analysis.retrace import RetraceSentinel
+
+__all__ = [
+    "Finding", "LintContext", "register_pass", "available_passes",
+    "run_passes", "walk_eqns", "count_arena_copies", "count_big_float_ops",
+    "RetraceSentinel", "HostSyncTripwire", "sanctioned",
+    "check_policy_lifecycle", "check_sharding_coverage",
+    "check_tree_invariance",
+]

@@ -1,0 +1,196 @@
+"""Contract checkers: KVPolicy lifecycle, tree invariance, sharding coverage.
+
+These are not jaxpr lints — they check the *interfaces* the decode path is
+built on: every registered policy implements the full lifecycle protocol
+with pytree leaf shapes/dtypes invariant across a decode step, and every
+decode-state leaf maps to an explicit rule in ``parallel/sharding.py``
+(a new cache field silently falling through to the generic fallback is how
+multi-device serving rots — see ROADMAP "multi-device serving").
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.passes import Finding
+
+
+def _avals(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), jax.eval_shape(lambda: leaf)
+             if not hasattr(leaf, "shape") else leaf)
+            for path, leaf in flat]
+
+
+def _leaf_paths(tree) -> List[Tuple[str, Tuple[str, ...], Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        keys = tuple(getattr(p, "key", getattr(p, "name", str(p)))
+                     for p in path)
+        out.append((jax.tree_util.keystr(path), keys, leaf))
+    return out
+
+
+def check_tree_invariance(fn: Callable, tree: Any, *args,
+                          path: str = "") -> List[Finding]:
+    """Assert ``fn(tree, *args)`` returns a pytree with identical structure
+    and leaf shapes/dtypes (traced via ``eval_shape`` — nothing runs).
+
+    This is the jit-stability contract of ``decode_step``: a state leaf that
+    changes aval across a step retraces every caller and breaks ``scan``
+    carries."""
+    try:
+        out = jax.eval_shape(fn, tree, *args)
+    except Exception as e:  # noqa: BLE001 — the failure IS the finding
+        return [Finding("error", "tree-state",
+                        f"step function failed to trace: {e!r}", path=path)]
+    t_in = jax.tree_util.tree_structure(tree)
+    t_out = jax.tree_util.tree_structure(out)
+    if t_in != t_out:
+        return [Finding("error", "tree-state",
+                        f"pytree structure changed across step: "
+                        f"{t_in} -> {t_out}", path=path)]
+    findings: List[Finding] = []
+    for (pi, a), (_, b) in zip(_avals(tree), _avals(out)):
+        if a.shape != b.shape or a.dtype != b.dtype:
+            findings.append(Finding(
+                "error", "tree-state",
+                f"leaf aval changed across step: "
+                f"{a.dtype}{list(a.shape)} -> {b.dtype}{list(b.shape)}",
+                path=f"{path}{pi}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# KVPolicy lifecycle
+# ---------------------------------------------------------------------------
+
+
+def check_policy_lifecycle(name: str, arch, cfg, *, batch: int = 2,
+                           max_len: int = 16,
+                           dtype=None) -> List[Finding]:
+    """Exercise the full KVPolicy lifecycle for one registered policy on a
+    tiny cache: init → decode_update (avals invariant) → post_attend →
+    fork/gather/reclaim → export/import prefix roundtrip → metrics /
+    peak_bytes.  Any hook that raises, or any step that changes the cache
+    avals, is a finding."""
+    from repro.core import policy as policy_lib
+    pol = policy_lib.get_policy(name)
+    dtype = dtype or jnp.dtype(arch.dtype)
+    a = arch.attn
+    path = f"policy:{name}"
+    findings: List[Finding] = []
+
+    def bad(hook: str, e: Exception) -> None:
+        findings.append(Finding("error", "policy-protocol",
+                                f"{hook} failed: {e!r}", path=path))
+
+    try:
+        cache = pol.init_cache(arch, batch, max_len, cfg,
+                               layer_window=None, dtype=dtype)
+        fresh = pol.init_cache(arch, batch, max_len, cfg,
+                               layer_window=None, dtype=dtype)
+    except Exception as e:  # noqa: BLE001
+        bad("init_cache", e)
+        return findings
+
+    q = jnp.zeros((batch, 1, a.num_heads, a.head_dim), dtype)
+    kn = jnp.zeros((batch, a.num_kv_heads, 1, a.head_dim), dtype)
+    aux = {"alpha_bin": jnp.zeros((batch, a.num_kv_heads), bool),
+           "pos_t": jnp.zeros((batch,), jnp.int32), "attn_cfg": a,
+           "arch": arch, "dtype": dtype, "active": None}
+    spec = None
+    try:
+        stepped, spec = pol.decode_update(cache, q, kn, kn, aux)
+        findings += check_tree_invariance(
+            lambda c: pol.decode_update(c, q, kn, kn, aux)[0], cache,
+            path=f"{path}/decode_update")
+    except Exception as e:  # noqa: BLE001
+        bad("decode_update", e)
+        stepped = cache
+    if spec is not None and spec.needs_weights:
+        try:
+            w = jnp.zeros((batch, a.num_kv_heads, spec.k.shape[2]),
+                          jnp.float32)
+            findings += check_tree_invariance(
+                lambda c: pol.post_attend(c, w), stepped,
+                path=f"{path}/post_attend")
+        except Exception as e:  # noqa: BLE001
+            bad("post_attend", e)
+
+    src = jnp.arange(batch, dtype=jnp.int32)
+    mask = jnp.zeros((batch,), bool)
+    for hook, fn in (
+        ("fork_cache", lambda c: pol.gather_cache(
+            pol.fork_cache(c, 1, axis=0), src, axis=0)),
+        ("gather_cache", lambda c: pol.gather_cache(c, src, axis=0)),
+        ("reclaim_cache", lambda c: pol.reclaim_cache(c, mask, fresh,
+                                                      axis=0)),
+        ("prefix-roundtrip", lambda c: pol.import_prefix(
+            c, pol.export_prefix(c, jnp.int32(0), axis=0), jnp.int32(0),
+            axis=0)),
+    ):
+        try:
+            findings += check_tree_invariance(fn, stepped,
+                                              path=f"{path}/{hook}")
+        except Exception as e:  # noqa: BLE001
+            bad(hook, e)
+
+    try:
+        m = pol.metrics(stepped)
+        for key in ("live_tokens", "reads_tokens", "peak_bytes"):
+            if key not in m:
+                findings.append(Finding(
+                    "error", "policy-protocol",
+                    f"metrics() missing required key {key!r}", path=path))
+        for key in ("live_tokens", "reads_tokens"):
+            if key in m and np.shape(m[key]) != (batch,):
+                findings.append(Finding(
+                    "error", "policy-protocol",
+                    f"metrics()[{key!r}] must be per-lane (B,), got "
+                    f"{np.shape(m[key])}", path=path))
+    except Exception as e:  # noqa: BLE001
+        bad("metrics", e)
+    try:
+        pb = pol.peak_bytes(stepped)
+        if not isinstance(pb, int) or pb <= 0:
+            findings.append(Finding(
+                "error", "policy-protocol",
+                f"peak_bytes() must be a positive static int, got {pb!r}",
+                path=path))
+    except Exception as e:  # noqa: BLE001
+        bad("peak_bytes", e)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# sharding coverage
+# ---------------------------------------------------------------------------
+
+
+def check_sharding_coverage(state: Any, mesh, batch: int, arch,
+                            allow: Tuple[str, ...] = ()) -> List[Finding]:
+    """Every decode-state leaf must hit a *named* rule in
+    ``parallel/sharding.py`` — a leaf answered by the generic fallback means
+    someone added cache state without deciding how it shards (it would
+    silently batch-shard or replicate under pjit).  ``allow`` lists leaf
+    names for which the fallback is an explicit, commented decision."""
+    from repro.parallel import sharding
+    findings: List[Finding] = []
+    for pstr, keys, leaf in _leaf_paths(state):
+        if not hasattr(leaf, "shape"):
+            continue
+        rule, _ = sharding.cache_spec_with_rule(keys, leaf.shape, mesh,
+                                                batch, arch)
+        name = keys[-1] if keys else ""
+        if rule == "fallback" and name not in allow:
+            findings.append(Finding(
+                "error", "sharding-coverage",
+                f"leaf {name!r} {list(leaf.shape)} has no explicit sharding "
+                "rule (generic fallback would silently batch-shard dim 1)",
+                path=pstr))
+    return findings

@@ -1,0 +1,179 @@
+"""Host-sync tripwire: flag device→host transfers inside a decode region.
+
+A single stray ``np.asarray``/``.item()``/``jax.device_get`` inside the
+decode loop serializes the host against the device every step — the classic
+silent 10× serving regression.  The scheduler's design syncs the host
+exactly once per *chunk* (the tick-boundary handoff of sampled tokens) and
+the prefix cache demotes snapshots device→host lazily; everything else on
+the decode path must stay on device.
+
+Two pieces:
+
+* :func:`sanctioned` — a zero-cost region marker wrapped around the code
+  sites where a d2h transfer is *by design* (the scheduler's tick boundary,
+  the prefix cache's lazy demotion).  Unarmed, it costs a list push/pop.
+* :class:`HostSyncTripwire` — a context manager that, while armed, hooks
+  ``np.asarray``/``np.array`` (on CPU, numpy reads jax arrays through the
+  C buffer protocol, so the interception must happen at the numpy entry
+  point — ``ArrayImpl.__array__`` alone would never fire), plus
+  ``ArrayImpl.__array__``, ``ArrayImpl.item`` and ``jax.device_get``, and
+  records every transfer with the innermost repo frame that caused it.
+  Transfers inside a sanctioned region whose tag is in the allowlist are
+  recorded as ``info``; everything else is a gating finding.
+"""
+from __future__ import annotations
+
+import contextlib
+import sys
+from typing import List, Optional, Tuple
+
+from repro.analysis.passes import Finding
+
+#: sanctioned tags armed tripwires permit by default: the scheduler's
+#: once-per-chunk host handoff and the prefix cache's lazy d2h demotion.
+DEFAULT_ALLOW = ("tick-boundary", "prefix-demote")
+
+_SANCTIONED: List[str] = []          # active sanctioned-region tag stack
+_ACTIVE: List["HostSyncTripwire"] = []   # armed tripwire stack
+_PATCHED: List[Tuple] = []           # (owner, name, original) for unpatching
+_IN_EVENT = [False]                  # reentrancy guard (device_get → __array__)
+
+
+@contextlib.contextmanager
+def sanctioned(tag: str):
+    """Mark a deliberate device→host transfer site (see DEFAULT_ALLOW)."""
+    _SANCTIONED.append(tag)
+    try:
+        yield
+    finally:
+        _SANCTIONED.pop()
+
+
+def _origin() -> str:
+    """Innermost non-jax, non-analysis frame that triggered the transfer."""
+    f = sys._getframe(2)
+    fallback = ""
+    while f is not None:
+        fn = f.f_code.co_filename
+        if "repro/analysis" not in fn and "/jax/" not in fn \
+                and "/jax_" not in fn and "numpy" not in fn:
+            loc = f"{fn.rsplit('/', 1)[-1]}:{f.f_code.co_name}:{f.f_lineno}"
+            if "/repro/" in fn or "/src/" in fn:
+                return loc
+            if not fallback:
+                fallback = loc
+        f = f.f_back
+    return fallback or "<unknown>"
+
+
+def _record(kind: str) -> None:
+    if not _ACTIVE or _IN_EVENT[0]:
+        return
+    _IN_EVENT[0] = True
+    try:
+        tag = _SANCTIONED[-1] if _SANCTIONED else None
+        origin = _origin()
+        for tw in _ACTIVE:
+            tw._observe(kind, tag, origin)
+    finally:
+        _IN_EVENT[0] = False
+
+
+def _patch() -> None:
+    import jax
+    import numpy as np
+    from jax._src.array import ArrayImpl
+
+    orig_array = ArrayImpl.__array__
+    orig_item = ArrayImpl.item
+    orig_get = jax.device_get
+    orig_np_asarray = np.asarray
+    orig_np_array = np.array
+
+    def traced_array(self, *a, **kw):
+        _record("__array__")
+        return orig_array(self, *a, **kw)
+
+    def _np_wrapper(kind, orig):
+        def wrapped(a=None, *rest, **kw):
+            if isinstance(a, ArrayImpl) or (
+                    isinstance(a, (list, tuple))
+                    and any(isinstance(x, ArrayImpl) for x in a)):
+                _record(kind)
+            return orig(a, *rest, **kw)
+        return wrapped
+
+    def traced_item(self, *a, **kw):
+        _record(".item()")
+        _IN_EVENT[0] = True          # item() may sync via __array__ inside
+        try:
+            return orig_item(self, *a, **kw)
+        finally:
+            _IN_EVENT[0] = False
+
+    def traced_get(x):
+        _record("device_get")
+        _IN_EVENT[0] = True          # attribute the inner __array__ to us
+        try:
+            return orig_get(x)
+        finally:
+            _IN_EVENT[0] = False
+
+    ArrayImpl.__array__ = traced_array
+    ArrayImpl.item = traced_item
+    jax.device_get = traced_get
+    np.asarray = _np_wrapper("np.asarray", orig_np_asarray)
+    np.array = _np_wrapper("np.array", orig_np_array)
+    _PATCHED.extend([(ArrayImpl, "__array__", orig_array),
+                     (ArrayImpl, "item", orig_item),
+                     (jax, "device_get", orig_get),
+                     (np, "asarray", orig_np_asarray),
+                     (np, "array", orig_np_array)])
+
+
+def _unpatch() -> None:
+    while _PATCHED:
+        owner, name, orig = _PATCHED.pop()
+        setattr(owner, name, orig)
+
+
+class HostSyncTripwire:
+    """Arm the d2h hooks for a region that must not sync the host."""
+
+    def __init__(self, allow: Tuple[str, ...] = DEFAULT_ALLOW):
+        self.allow = tuple(allow)
+        #: every observed transfer: (kind, sanctioned tag or None, origin)
+        self.events: List[Tuple[str, Optional[str], str]] = []
+
+    def _observe(self, kind: str, tag: Optional[str], origin: str) -> None:
+        self.events.append((kind, tag, origin))
+
+    def __enter__(self) -> "HostSyncTripwire":
+        if not _ACTIVE:
+            _patch()
+        _ACTIVE.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _ACTIVE.remove(self)
+        if not _ACTIVE:
+            _unpatch()
+        return None
+
+    def findings(self) -> List[Finding]:
+        out: List[Finding] = []
+        for kind, tag, origin in self.events:
+            if tag in self.allow:
+                out.append(Finding("info", "host-sync",
+                                   f"sanctioned d2h ({tag}) via {kind}",
+                                   path=origin))
+            else:
+                where = f"sanctioned({tag})" if tag else "unsanctioned"
+                out.append(Finding("error", "host-sync",
+                                   f"{where} device→host transfer via {kind} "
+                                   "inside a decode region",
+                                   path=origin))
+        return out
+
+    def violations(self) -> List[Finding]:
+        return [f for f in self.findings() if f.severity == "error"]

@@ -1,0 +1,94 @@
+"""Retrace sentinel: exact compile budgets over a set of named jits.
+
+The serving contract (docs/serving.md) is that the engine compiles each of
+its jits once per *signature* — one chunk step per (num_lanes, chunk), one
+reset per (b, ml) — and that admission order, prompt lengths, fork widths,
+and EOS timing never retrace.  The sentinel pins that: it snapshots each
+jit's compile-cache size on entry and, on exit, turns any compile beyond the
+declared budget into a :class:`Finding`.
+
+Usage::
+
+    with RetraceSentinel(engine_jits(eng), budget=1) as sentinel:
+        ...  # drive a mixed scheduler trace
+    assert not sentinel.findings(), sentinel.compiles
+
+``budget`` may be an int (applied to every jit), a dict of per-name budgets,
+or an *exact* expectation via ``exact=`` (a compile count that must match
+exactly — catching both retraces and silently-dead entry points).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Union
+
+from repro.analysis.passes import Finding
+
+
+def engine_jits(engine) -> Dict[str, Any]:
+    """The compile-budgeted jits an :class:`repro.serving.engine.Engine`
+    owns (its schedulers share them, so budgets span scheduler instances)."""
+    return {
+        "chunk": engine._chunk_jit,
+        "gather": engine._gather_jit,
+        "reset": engine._reset_jit,
+        "prefill": engine._prefill_jit,
+        "export": engine._export_jit,
+        "import": engine._import_jit,
+    }
+
+
+def scheduler_jits(scheduler) -> Dict[str, Any]:
+    """Same, for a bare :class:`repro.serving.scheduler.Scheduler`."""
+    return {
+        "chunk": scheduler._chunk_jit,
+        "gather": scheduler._gather_jit,
+        "reset": scheduler._reset_jit,
+        "export": scheduler._export_jit,
+        "import": scheduler._import_jit,
+    }
+
+
+class RetraceSentinel:
+    """Context manager asserting a compile budget for a traced region."""
+
+    def __init__(self, jits: Dict[str, Any],
+                 budget: Union[int, Dict[str, int], None] = None,
+                 exact: Optional[Dict[str, int]] = None):
+        for name, fn in jits.items():
+            if not hasattr(fn, "_cache_size"):
+                raise TypeError(f"{name!r} is not a jitted function")
+        self._jits = dict(jits)
+        self._budget = budget
+        self._exact = exact
+        self._start: Dict[str, int] = {}
+        #: compiles observed inside the region, per jit name (set on exit)
+        self.compiles: Dict[str, int] = {}
+
+    def __enter__(self) -> "RetraceSentinel":
+        self._start = {n: f._cache_size() for n, f in self._jits.items()}
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.compiles = {n: f._cache_size() - self._start[n]
+                         for n, f in self._jits.items()}
+        return None
+
+    def findings(self) -> List[Finding]:
+        """Budget violations as gating findings (empty = within budget)."""
+        out: List[Finding] = []
+        for name, n in self.compiles.items():
+            if self._exact is not None and name in self._exact \
+                    and n != self._exact[name]:
+                out.append(Finding(
+                    "error", "retrace",
+                    f"expected exactly {self._exact[name]} compile(s), "
+                    f"saw {n}", path=name))
+                continue
+            cap = (self._budget.get(name) if isinstance(self._budget, dict)
+                   else self._budget)
+            if cap is not None and n > cap:
+                out.append(Finding(
+                    "error", "retrace",
+                    f"compile budget {cap} exceeded: {n} compiles "
+                    "(a static argument is varying per call)", path=name))
+        return out

@@ -22,7 +22,7 @@ prefill up to the budget (§F.1), which we mirror in the serving engine.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -351,7 +351,8 @@ class QuestCache(LaneSliceable):
 
     def positions(self):
         s = self.k.shape[2]
-        return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, None], self.k.shape[:2] + (s,))
+        return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, None],
+                                self.k.shape[:2] + (s,))
 
     def retained_tokens(self):
         # memory footprint is FULL — that is Quest's trade-off

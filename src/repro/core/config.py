@@ -317,7 +317,7 @@ class ArchConfig:
             w = r.lru_width or d
             n += 2 * d * w + w * d                     # in (x,y branches) + out
             n += w * r.conv_kernel
-            n += 2 * w * w // 1                        # input & recurrence gates (diag-block approx)
+            n += 2 * w * w // 1          # input & recurrence gates (diag-block approx)
             n += self._mlp_params(active_only)
         return n
 

@@ -182,7 +182,8 @@ def train_alphas(
     return alpha, q
 
 
-def infer_alphas(q_raw: jnp.ndarray, num_kv_heads: int, cfg: DMSConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def infer_alphas(q_raw: jnp.ndarray, num_kv_heads: int,
+                 cfg: DMSConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(binary alpha, zeroed q) for the inference path."""
     logits = alpha_logits_from_q(q_raw, num_kv_heads, cfg.logit_bias)
     return binary_alpha(logits), zero_borrowed_neuron(q_raw, num_kv_heads)

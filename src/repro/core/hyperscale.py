@@ -19,9 +19,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -29,7 +29,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import block_pool
-from repro.core.config import DMSConfig
 
 INVALID_POS = jnp.iinfo(jnp.int32).max
 
@@ -746,9 +745,11 @@ class SlotDMSCache(LaneSliceable, HasBlockTable):
             # scatter (padded with an extra dump column)
             ps = jnp.concatenate([pend_slot, jnp.zeros((b, h, 1), jnp.int32)], axis=2)
             pa = jnp.concatenate([pend_alpha, jnp.zeros((b, h, 1), bool)], axis=2)
-            ps = ps.at[jnp.arange(b)[:, None, None], jnp.arange(h)[None, :, None], idx[None, None, :]].set(
+            bi = jnp.arange(b)[:, None, None]
+            hi = jnp.arange(h)[None, :, None]
+            ps = ps.at[bi, hi, idx[None, None, :]].set(
                 jnp.where(in_window[None, None, :], rank, -1).astype(jnp.int32))
-            pa = pa.at[jnp.arange(b)[:, None, None], jnp.arange(h)[None, :, None], idx[None, None, :]].set(
+            pa = pa.at[bi, hi, idx[None, None, :]].set(
                 jnp.where(in_window[None, None, :], alpha_bin, False))
             cache = dataclasses.replace(cache, pending_slot=ps[..., :w], pending_alpha=pa[..., :w])
         return cache

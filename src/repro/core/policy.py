@@ -54,7 +54,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import block_pool
-from repro.core import dms as dms_lib
 from repro.core.baselines import DMCCache, H2OCache, QuestCache, TOVACache
 from repro.core.config import ArchConfig, KVPolicyConfig
 from repro.core.kv_cache import (MaskedDMSCache, SlotDMSCache, VanillaCache,

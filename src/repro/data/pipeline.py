@@ -13,12 +13,9 @@ Two sources:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -9,7 +9,7 @@ the hand-written Pallas forward/backward kernels.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --all          # 40 cells x 2 meshes
 """
 import argparse
-import dataclasses
 import json
 import sys
 import time
@@ -25,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ASSIGNED_ARCHS, get_arch
-from repro.core.config import KVPolicyConfig, SHAPES, ShapeConfig
+from repro.core.config import KVPolicyConfig, SHAPES
 from repro.launch import roofline, steps
 from repro.launch.mesh import make_production_mesh
 from repro.optim import adamw

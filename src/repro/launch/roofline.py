@@ -21,10 +21,9 @@ and are tallied separately (`dci_bytes`).
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 # TPU v5e (per chip)
 PEAK_FLOPS = 197e12          # bf16

@@ -6,8 +6,6 @@ input — shardable, no device allocation.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

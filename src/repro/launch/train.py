@@ -12,7 +12,6 @@ import argparse
 import json
 
 from repro.configs import get_arch, get_smoke
-from repro.core.config import SHAPES
 from repro.data.pipeline import DataConfig
 from repro.train.loop import TrainConfig, train
 

@@ -273,13 +273,16 @@ def full_attention(
     if mode == "dms_train" and dms.enabled:
         alpha, q_raw = dms_lib.train_alphas(q_raw, cfg.num_kv_heads, dms, dms_rng)
         aux["alpha_sum"] = jnp.sum(alpha)
-        aux["alpha_count"] = jnp.asarray(alpha.size, jnp.float32)
+        # static python float: alpha.size is shape-derived — materializing it
+        # as a traced f32 scalar per layer per step is exactly what the
+        # literal-materialize lint (repro.analysis) flags
+        aux["alpha_count"] = float(alpha.size)
     elif mode == "dms_eval" and dms.enabled:
         alpha_bin, q_raw = dms_lib.infer_alphas(q_raw, cfg.num_kv_heads, dms)
         alpha = alpha_bin.astype(jnp.float32)
         aux["alpha_bin"] = alpha_bin
         aux["alpha_sum"] = jnp.sum(alpha)
-        aux["alpha_count"] = jnp.asarray(alpha.size, jnp.float32)
+        aux["alpha_count"] = float(alpha.size)     # static (see above)
     elif mode == "dms_phase1" and dms.enabled:
         # phase-1 retrofit: gradually zero the borrowed neuron, no masking yet
         q_raw = dms_lib.zero_borrowed_neuron(q_raw, cfg.num_kv_heads, neuron_scale)

@@ -11,7 +11,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.config import ArchConfig, MLPConfig, MoEConfig
+from repro.core.config import ArchConfig, MLPConfig
 
 
 def _dtype(cfg: ArchConfig):

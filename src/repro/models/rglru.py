@@ -14,7 +14,6 @@ these layers (it applies to the hybrid's local-attention layers).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax

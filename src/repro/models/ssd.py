@@ -13,7 +13,6 @@ rather than one fused in_proj so each shards cleanly on the ``model`` axis
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax

@@ -17,7 +17,6 @@ Caches for decode mirror the same structure: ``{"0": stacked-cache, ...}``.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

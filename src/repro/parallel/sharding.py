@@ -22,7 +22,6 @@ from __future__ import annotations
 from typing import Any, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.config import ArchConfig
@@ -156,14 +155,20 @@ def batch_shardings(mesh, batch_tree: Any, microbatched: bool = False,
 # ---------------------------------------------------------------------------
 
 
-def cache_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh,
-               batch: int, arch: ArchConfig) -> P:
-    """Sharding for one decode-state leaf (stacked over superblocks: dim 0).
+def cache_spec_with_rule(path: Tuple[str, ...], shape: Tuple[int, ...], mesh,
+                         batch: int, arch: ArchConfig) -> Tuple[str, P]:
+    """(rule name, PartitionSpec) for one decode-state leaf (stacked over
+    superblocks: dim 0).
 
-    Layouts: k/v (L,B,H,P,Dh); slot metadata (L,B,H,P); rings (L,B,H,w);
-    per-lane lengths (L,B) — batch-sharded via the fallback (lanes advance
-    independently under continuous batching); ssd state (L,B,H,Dh,N);
-    conv buffers (L,B,K-1,C); rglru h (L,B,W).
+    Layouts: k/v (L,B,H,P,Dh); slot metadata/masks (L,B,H,P); rings
+    (L,B,H,w); per-lane lengths (L,B); ssd state (L,B,H,Dh,N); conv buffers
+    (L,B,K-1,C); rglru h (L,B,W); paged pool pages (L,NPOOL,bp,Dh) with
+    refcounts (L,NPOOL) and scalar counters (L,); page maps (L,B,H,NB).
+
+    Every leaf the decode state can contain must hit a *named* rule here —
+    ``repro.analysis.contracts.check_sharding_coverage`` (the CI audit)
+    flags any leaf answered by the "fallback" rule, so adding cache state
+    forces an explicit sharding decision instead of silent replication.
     """
     tp = mesh.shape["model"]
     ba = batch_axes(mesh)
@@ -171,10 +176,19 @@ def cache_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh,
     for a in ba:
         dp *= mesh.shape[a]
     bspec = ba if batch % dp == 0 else None
-    name = path[-1]
+    name = path[-1] if path else ""
     nd = len(shape)
+
+    # paged block-pool leaves: pages are *shared mutable state* across every
+    # lane mapping them (CoW fork, event-masked writes), so they cannot ride
+    # the batch axes — deliberately replicated until multi-device pjit
+    # serving lands (ROADMAP "multi-device serving"; pages would shard over
+    # a dedicated pool axis with phys-aware routing, not over lanes).
+    if "pool" in path:
+        return "pool-replicated", P(*([None] * nd))
     if nd <= 1:
-        return P(*([None] * nd))
+        return "low-rank", P(*([None] * nd))
+
     def slot_specs(h, p):
         """(head_spec, slot_spec): TP on heads when divisible; otherwise
         split-KV over 'model'; context parallelism over 'data' (or both) when
@@ -197,30 +211,50 @@ def cache_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh,
     # insert/evict mix them elementwise every step).
     if "blocks" in path:
         if nd == 4:                        # count / tbl / pos: (L,B,H,NB)
-            return P(None, bspec, _model_if(shape[2], tp), None)
-        return P(None, bspec, _model_if(shape[2], tp))   # n: (L,B,H)
+            return "block-table", P(None, bspec, _model_if(shape[2], tp),
+                                    None)
+        return "block-table", P(None, bspec, _model_if(shape[2], tp))
+    # per-cache page map (L,B,H,NB): logical-block → pool-page indices —
+    # lane-owned like the block table it translates, entries replicated.
+    if name == "phys" and nd == 4:
+        return "page-map", P(None, bspec, _model_if(shape[2], tp), None)
     if name in ("k", "v") and nd == 5:
         hspec, pspec = slot_specs(shape[2], shape[3])
-        return P(None, bspec, hspec, pspec, None)
-    if name in ("pos", "valid", "free_ring", "acc", "z") and nd == 4:
+        return "kv-arena", P(None, bspec, hspec, pspec, None)
+    # per-slot metadata/masks aligned with the arena slot axis (pos/valid
+    # rings, H2O mass, DMC weights, masked-DMS retained/alpha, Keyformer
+    # scores) — sharded exactly like the slots they annotate.
+    if name in ("pos", "valid", "free_ring", "acc", "z", "retained",
+                "alpha", "score") and nd == 4:
         hspec, pspec = slot_specs(shape[2], shape[3])
-        return P(None, bspec, hspec, pspec)
+        return "slot-meta", P(None, bspec, hspec, pspec)
     if name in ("kmin", "kmax") and nd == 5:
-        return P(None, bspec, _model_if(shape[2], tp), None, None)
+        return "quest-pages", P(None, bspec, _model_if(shape[2], tp), None,
+                                None)
     if name in ("pending_slot", "pending_alpha") and nd == 4:
-        return P(None, bspec, _model_if(shape[2], tp), None)
+        return "pending-ring", P(None, bspec, _model_if(shape[2], tp), None)
     if name in ("free_head", "free_count", "overflowed", "count") and nd == 3:
-        return P(None, bspec, _model_if(shape[2], tp))
+        return "slot-scalars", P(None, bspec, _model_if(shape[2], tp))
+    # per-lane lengths (L,B): lanes advance independently under continuous
+    # batching — batch-sharded, nothing else to decide.
+    if name == "length" and nd == 2:
+        return "lane-length", P(None, bspec)
     if name == "ssm" and nd == 5:
-        return P(None, bspec, _model_if(shape[2], tp), None, None)
+        return "ssd-state", P(None, bspec, _model_if(shape[2], tp), None,
+                              None)
     if name in ("conv_x", "conv_b", "conv_c") and nd == 4:
-        return P(None, bspec, None, _model_if(shape[3], tp))
+        return "ssd-conv", P(None, bspec, None, _model_if(shape[3], tp))
     if name == "h" and nd == 3:                      # rglru state (L,B,W)
-        return P(None, bspec, _model_if(shape[2], tp))
+        return "rglru-state", P(None, bspec, _model_if(shape[2], tp))
     if name == "conv" and nd == 4:
-        return P(None, bspec, None, _model_if(shape[3], tp))
+        return "rglru-conv", P(None, bspec, None, _model_if(shape[3], tp))
     # fallback: batch on dim1 if present
-    return P(None, bspec, *([None] * (nd - 2)))
+    return "fallback", P(None, bspec, *([None] * (nd - 2)))
+
+
+def cache_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh,
+               batch: int, arch: ArchConfig) -> P:
+    return cache_spec_with_rule(path, shape, mesh, batch, arch)[1]
 
 
 def cache_shardings(cache_shape: Any, mesh, batch: int, arch: ArchConfig) -> Any:

@@ -22,15 +22,13 @@ land on the meters' ``kv_reads_saved`` axis, paid reads stay honest.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import policy as policy_lib
 from repro.core.config import ArchConfig, KVPolicyConfig
 from repro.core.hyperscale import BudgetMeter, ScalingConfig, majority_vote
 from repro.models import transformer as tfm

@@ -98,8 +98,16 @@ def snapshot_nbytes(snapshot: Any) -> int:
 
 
 def to_host(tree: Any) -> Any:
-    """Device→host: numpy leaves, releasing device buffers for storage."""
-    return jax.tree_util.tree_map(lambda a: np.asarray(a), jax.device_get(tree))
+    """Device→host: numpy leaves, releasing device buffers for storage.
+
+    This is the prefix cache's only d2h funnel — the *lazy demotion* of a
+    hot-tier snapshot to the host LRU (plus cold-tier inserts).  It is the
+    one sanctioned d2h inside the serving loop; everything else must stay
+    on device (``repro.analysis.hostsync`` enforces this)."""
+    from repro.analysis.hostsync import sanctioned
+    with sanctioned("prefix-demote"):
+        return jax.tree_util.tree_map(lambda a: np.asarray(a),
+                                      jax.device_get(tree))
 
 
 def _is_device(a) -> bool:

@@ -44,14 +44,14 @@ replaces the lockstep fixed batch with a real scheduler:
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.hostsync import sanctioned
 from repro.core import policy as policy_lib
 from repro.core.hyperscale import BudgetMeter
 from repro.models import transformer as tfm
@@ -372,7 +372,8 @@ class Scheduler:
         r.consumed = hit.length
         r.prefill_meter.observe_saved_reads(hit.reads_cum)
         if hit.length == len(r.req.prompt):
-            r.hold_logits = np.asarray(hit.logits).copy()
+            with sanctioned("tick-boundary"):  # once per admission
+                r.hold_logits = np.asarray(hit.logits).copy()
 
     def _want_prefix_export(self, r: _ReqState) -> bool:
         """Gate the per-chunk snapshot export on pure host checks, so the
@@ -446,7 +447,8 @@ class Scheduler:
                                            axis=-1)
         else:
             first = jnp.argmax(logits, axis=-1)
-        first = np.asarray(first, np.int32)
+        with sanctioned("tick-boundary"):      # once per request, not per step
+            first = np.asarray(first, np.int32)
         r.decode_meter.observe_step([0.0], new_tokens=w,
                                     reads_tokens_per_layer=[0.0])
         for c, lane in enumerate(r.lanes):
@@ -486,13 +488,16 @@ class Scheduler:
             jnp.asarray(self.lane_eos), jnp.asarray(budget_left), self.rng)
         (self.state, cur_tok, pos, finished, _, self.rng, last_logits,
          emitted, live, reads, act) = out
-        self.cur_tok = np.array(cur_tok)       # writable host copies
-        self.pos = np.array(pos)
-        self.finished = np.array(finished)
-        emitted = np.asarray(emitted)          # (C, B)
-        live = np.asarray(live)
-        reads = np.asarray(reads)
-        act = np.asarray(act)
+        # the scheduler's ONE sanctioned host sync: once per chunk, never
+        # per step (the host-sync tripwire in repro.analysis enforces this)
+        with sanctioned("tick-boundary"):
+            self.cur_tok = np.array(cur_tok)   # writable host copies
+            self.pos = np.array(pos)
+            self.finished = np.array(finished)
+            emitted = np.asarray(emitted)      # (C, B)
+            live = np.asarray(live)
+            reads = np.asarray(reads)
+            act = np.asarray(act)
         self.ticks += 1
         self.steps += c
 
@@ -517,7 +522,8 @@ class Scheduler:
             r.prefill_chunks += 1
             if r.consumed == len(r.req.prompt):
                 if ll is None:
-                    ll = np.asarray(last_logits)
+                    with sanctioned("tick-boundary"):   # prefill completion
+                        ll = np.asarray(last_logits)
                 r.hold_logits = ll[lane].copy()
             if self._want_prefix_export(r):
                 # deferred export: the device logits row rides along unsynced

@@ -6,16 +6,12 @@ repro.parallel) a multi-pod production job — the launcher decides.
 """
 from __future__ import annotations
 
-import dataclasses
 import signal
-import time
 from dataclasses import dataclass
-from pathlib import Path
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.config import ArchConfig

@@ -22,9 +22,8 @@ from repro.core import policy as policy_lib
 from repro.core.config import KVPolicyConfig
 from repro.core.keyformer import KeyformerCache
 from repro.core.kv_cache import MaskedDMSCache, SlotDMSCache
-from repro.core.policy import (AttendSpec, KVPolicy, PolicyCache,
-                               available_policies, get_policy,
-                               iter_policy_caches, register_policy)
+from repro.core.policy import (AttendSpec, KVPolicy, available_policies,
+                               get_policy, iter_policy_caches, register_policy)
 from repro.models import transformer as tfm
 from repro.serving.engine import Engine
 

@@ -26,7 +26,6 @@ import pytest
 
 from repro.core.config import KVPolicyConfig
 from repro.core.policy import available_policies
-from repro.models import transformer as tfm
 from repro.serving.engine import Engine
 from repro.serving.prefix_cache import PrefixCache, snapshot_nbytes
 from repro.serving.scheduler import Request

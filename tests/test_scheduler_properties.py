@@ -21,7 +21,7 @@ import dataclasses
 import jax
 import numpy as np
 import pytest
-from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_smoke
 from repro.core import policy as policy_lib

@@ -1,6 +1,5 @@
 """Substrate tests: data determinism, checkpoint manager, optimizer,
 gradient compression, hyper-scaling accounting, sharding rules."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -7,14 +7,10 @@
 """
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.config import DMSConfig, KVPolicyConfig
 from repro.data.pipeline import DataConfig
-from repro.models import transformer as tfm
 from repro.serving.engine import Engine
 from repro.train.loop import TrainConfig, train
 
