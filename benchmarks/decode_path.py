@@ -25,6 +25,14 @@ block-table contract (docs/kernels.md):
   dtype recasts (the seed wrapper re-padded and re-reshaped the whole arena
   and recast the bitmap every step of every layer).  Counted from the
   jaxpr, not eyeballed; the legacy/dense path is recorded as the contrast.
+* **policy sweep** — every *registered* policy's real ``decode_update``
+  stream (registry caches, fragmented tables) measured against the same
+  contract: fetched K/V bytes vs the visible-block lower bound.  The three
+  score-based policies (TOVA/H2O/Keyformer) are pinned ≤ 1.25× of it — they
+  used to fall back silently to the reference path in kernel mode, which
+  streamed the whole provisioned arena; the weights-out kernel makes the
+  block-table byte model hold for them too, with zero arena copies on the
+  ``need_weights=True`` wrapper path.
 * **wall-clock columns** — per-step decode latency for the table vs dense
   path (``us_*`` keys: machine-local, skipped by ``--check``; on CPU both
   run in Pallas interpret mode, which executes every grid step regardless
@@ -35,11 +43,16 @@ Baseline: ``artifacts/bench/decode_path.json`` (committed); CI runs
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, save_json, timeit
+from repro.configs import get_smoke
+from repro.core import policy as policy_lib
+from repro.core.config import KVPolicyConfig
 from repro.core.kv_cache import BlockTable, SlotDMSCache
 from repro.kernels.dms_decode import ops as dkops
 
@@ -47,6 +60,9 @@ B, HKV, HQ, DH = 2, 2, 4, 32
 MAX_LEN = 512                    # provisioning horizon for the DMS arenas
 WINDOW = 8
 BLOCK_P = 16
+
+POLICY_STEPS = 20                # decode stream length for the policy sweep
+WEIGHT_POLICIES = ("tova", "h2o", "keyformer")
 
 
 # -- jaxpr traffic counters --------------------------------------------------
@@ -154,6 +170,72 @@ def _row(cache, iters):
     }
 
 
+# -- policy sweep: the block-table byte contract per registered policy -------
+
+
+def _policy_spec(kind):
+    """Drive a registry policy's real ``decode_update`` stream for
+    ``POLICY_STEPS`` tokens (evictions, free-list holes, incremental tables)
+    and return the last AttendSpec + the matching query."""
+    arch = get_smoke("qwen-r1-1.5b")
+    arch = dataclasses.replace(
+        arch, dms=dataclasses.replace(arch.dms, window=4, target_cr=4.0,
+                                      steps_per_cr_unit=5))
+    cfg = KVPolicyConfig(kind=kind, cr=2.0, window=4, block_p=8,
+                         quest_page_size=8, quest_top_pages=2)
+    pc = policy_lib.init_policy_cache(arch, 2, 32, cfg)
+    pol = policy_lib.get_policy(pc.policy)
+    a = arch.attn
+    dt = jnp.dtype(arch.dtype)
+    key = jax.random.PRNGKey(7)
+    cache, spec, q = pc.cache, None, None
+    for i in range(POLICY_STEPS):
+        key, k1, k2, k3, k4 = jax.random.split(key, 5)
+        q = jax.random.normal(k1, (2, 1, a.num_heads, a.head_dim), dt)
+        k_new = jax.random.normal(k2, (2, a.num_kv_heads, 1, a.head_dim), dt)
+        v_new = jax.random.normal(k3, (2, a.num_kv_heads, 1, a.head_dim), dt)
+        aux = {"alpha_bin": jax.random.bernoulli(k4, 0.5,
+                                                 (2, a.num_kv_heads)),
+               "pos_t": jnp.full((2,), i, jnp.int32),
+               "attn_cfg": a, "arch": arch, "dtype": dt}
+        cache, spec = pol.decode_update(cache, q, k_new, v_new, aux)
+        if spec.needs_weights:
+            w = jax.random.uniform(k4, spec.visible.shape, jnp.float32)
+            cache = pol.post_attend(cache, jnp.where(spec.visible, w, 0.0))
+    return spec, q, a
+
+
+def _policy_row(kind):
+    spec, q, a = _policy_spec(kind)
+    bp = spec.block_p
+    row = {"needs_weights": bool(spec.needs_weights),
+           "live_tokens": int(jnp.sum(spec.visible))}
+    if not bp:
+        return row
+    fetched = dkops.modeled_hbm_bytes(spec.block_n, bp, a.head_dim,
+                                      spec.k.dtype, spec.v.dtype)
+    p = spec.visible.shape[-1]
+    blk_live = jnp.any(
+        spec.visible.reshape(*spec.visible.shape[:2], p // bp, bp), axis=-1)
+    per_blk = bp * a.head_dim * (spec.k.dtype.itemsize + spec.v.dtype.itemsize)
+    lower = int(jnp.sum(blk_live)) * per_blk
+    row.update(fetched_bytes=int(fetched), lower_bound_bytes=lower,
+               fetched_over_lower=fetched / lower)
+    if spec.needs_weights:
+        # the weights-out wrapper path must be as copy-free as the plain one
+        arena_elems = int(np.prod(spec.k.shape))
+        copies = count_arena_copies(
+            lambda q, k, v, vis, tbl, n: dkops.dms_decode_attention(
+                q, k, v, vis, block_tbl=tbl, block_n=n, block_p=bp,
+                need_weights=True)[0],
+            q, spec.k, spec.v, spec.visible, spec.block_tbl, spec.block_n,
+            arena_elems=arena_elems)
+        assert copies["arena_pad_copies"] == 0, (kind, copies)
+        assert copies["valid_recasts"] == 0, (kind, copies)
+        row["weights_out_arena_copies"] = copies["arena_pad_copies"]
+    return row
+
+
 def run(quick=False):
     iters = 1 if quick else 3
     payload = {}
@@ -202,6 +284,20 @@ def run(quick=False):
     # legitimately touch every block (that IS its lower bound)
     assert frag["packed"]["fetched_over_dense"] <= 0.30
     payload["fragmentation"] = frag
+
+    # -- policy sweep: every registered policy, same byte contract ----------
+    pol = {}
+    for kind in policy_lib.available_policies():
+        row = _policy_row(kind)
+        pol[kind] = row
+        emit(f"decode_path/policy_{kind}", 0.0, row)
+    # acceptance: the newly kernel-enabled weight policies fetch within
+    # 1.25x of the visible-block lower bound — the silent reference
+    # fallback used to stream the whole provisioned arena here
+    for kind in WEIGHT_POLICIES:
+        assert pol[kind]["needs_weights"], pol[kind]
+        assert pol[kind]["fetched_over_lower"] <= 1.25, (kind, pol[kind])
+    payload["policy_sweep"] = pol
 
     # -- zero full-arena copies on the step path ----------------------------
     cache = _dms_arena(4.0, 128)

@@ -4,7 +4,9 @@ Sweeps every registered KV policy × {ref, kernel} × {fixed, paged}:
 
 * traffic lints over the traced (and DCE'd) decode / fork / reclaim jaxprs
   (full-arena pads/casts, KV upcasts, whole-arena gathers in table mode,
-  literal materialization);
+  literal materialization, and — in kernel mode — the ``ref-fallback`` lint
+  proving the decode program actually traced the Pallas kernel rather than
+  the reference einsum);
 * tree-state invariance of ``decode_step`` (leaf avals stable across steps);
 * the KVPolicy lifecycle contract per policy;
 * sharding-rule coverage of every decode-state leaf.

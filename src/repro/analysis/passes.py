@@ -193,6 +193,50 @@ def _arena_gather(jaxpr, ctx):
                           eqn=_eqn_str(eqn), nbytes=_out_nbytes(eqn))
 
 
+@register_pass("ref-fallback")
+def _ref_fallback(jaxpr, ctx):
+    """In table (kernel) mode, the decode step must trace the Pallas decode
+    kernel — a policy that requested ``use_kernel`` but traced the reference
+    einsum instead used to be a *silent* fallback (the pre-weights-out
+    ``needs_weights`` bypass), lying about HBM traffic for every score-based
+    policy.  Two signals, both gating:
+
+    * no ``pallas_call`` anywhere in the step program — attention fell back
+      wholesale;
+    * a ``dot_general`` with ≥2 batch dims over an arena-sized float operand
+      — the reference ``bhgd,bhpd->bhgp`` score einsum streaming the whole
+      provisioned arena (param matmuls have 0 batch dims; Quest's page
+      scoring has small sub-arena operands — neither trips this).
+    """
+    if not ctx.table_mode:
+        return
+    saw_kernel = False
+    for eqn in walk_eqns(jaxpr):
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            saw_kernel = True
+            continue
+        if name != "dot_general":
+            continue
+        batch_dims = eqn.params["dimension_numbers"][1]
+        if len(batch_dims[0]) < 2:
+            continue
+        for v in eqn.invars:
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape") \
+                    and jnp.issubdtype(aval.dtype, jnp.floating) \
+                    and int(np.prod(aval.shape)) >= ctx.arena_elems:
+                yield Finding("error", "ref-fallback",
+                              "reference attention einsum traced where the "
+                              "kernel was requested",
+                              eqn=_eqn_str(eqn), nbytes=_out_nbytes(eqn))
+                break
+    if not saw_kernel:
+        yield Finding("error", "ref-fallback",
+                      "no pallas_call in the decode program in kernel mode "
+                      "— attention silently fell back to the reference path")
+
+
 @register_pass("scalar-output")
 def _scalar_output(jaxpr, ctx):
     """Size-1 float *outputs* of the traced step (e.g. the old

@@ -386,6 +386,7 @@ class DMCCache(LaneSliceable):
     z: jnp.ndarray        # (B, H, P) accumulation weights
     count: jnp.ndarray    # (B, H) number of live entries
     length: jnp.ndarray   # (B,) — per lane
+    pos: jnp.ndarray      # (B, H, P) newest-contribution position per entry
     block_p: int = dataclasses.field(metadata={"static": True}, default=0)
     pool: Optional[block_pool.BlockPool] = None   # fp32 pages (accumulators)
     phys: Optional[jnp.ndarray] = None       # (B, H, NB) int32, -1 = unmapped
@@ -403,7 +404,8 @@ class DMCCache(LaneSliceable):
         return DMCCache(z4, z4,
                         jnp.zeros((batch, kv_heads, p), jnp.float32),
                         jnp.zeros((batch, kv_heads), jnp.int32),
-                        jnp.zeros((batch,), jnp.int32), block_p,
+                        jnp.zeros((batch,), jnp.int32),
+                        jnp.zeros((batch, kv_heads, p), jnp.int32), block_p,
                         pool=pool, phys=phys)
 
     def block_spec(self):
@@ -456,12 +458,20 @@ class DMCCache(LaneSliceable):
         z = jnp.where(hit, jnp.where(merge[..., None], self.z, 0.0) + omega[..., None],
                       self.z)
         count = jnp.where(merge, self.count, self.count + 1)
+        # a merged entry is "as recent as" its newest contribution: stamp the
+        # touched slot with the current position so layer_map window layers
+        # can mask DMC entries (no active masking — lane_select rolls back)
+        pos = jnp.where(hit, self.length[:, None, None], self.pos)
         return dataclasses.replace(self, k=k, v=v, z=z, count=count,
-                                   length=self.length + 1, pool=pool, phys=phys)
+                                   length=self.length + 1, pos=pos,
+                                   pool=pool, phys=phys)
 
     def valid_mask(self):
         p = self.k.shape[2]
         return jnp.arange(p)[None, None] < self.count[..., None]
+
+    def positions(self):
+        return self.pos
 
     def retained_tokens(self):
         return self.count

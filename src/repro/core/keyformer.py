@@ -42,6 +42,7 @@ class KeyformerCache(LaneSliceable, HasBlockTable):
     valid: jnp.ndarray   # (B, H, P) bool
     score: jnp.ndarray   # (B, H, P) f32 — accumulated regularised scores
     length: jnp.ndarray  # (B,) — per lane
+    salt: jnp.ndarray    # (B,) uint32 — per-layer noise salt (see insert)
     blocks: BlockTable   # incremental live-block table (flash-decode)
     recent_window: int = dataclasses.field(metadata={"static": True})
     slots: int = dataclasses.field(metadata={"static": True})  # logical arena
@@ -66,6 +67,7 @@ class KeyformerCache(LaneSliceable, HasBlockTable):
             jnp.zeros((batch, kv_heads, p), bool),
             jnp.zeros((batch, kv_heads, p), jnp.float32),
             jnp.zeros((batch,), jnp.int32),
+            jnp.zeros((batch,), jnp.uint32),
             BlockTable.init(batch, kv_heads, p, block_p),
             recent_window, budget, tau, pool=pool, phys=phys)
 
@@ -73,7 +75,8 @@ class KeyformerCache(LaneSliceable, HasBlockTable):
     def budget(self) -> int:
         return self.slots - 1   # arena is budget + 1 (insert-then-evict)
 
-    def insert(self, k_new, v_new, active=None) -> "KeyformerCache":
+    def insert(self, k_new, v_new, active=None,
+               salt=None) -> "KeyformerCache":
         p = self.k.shape[2]
         free = ~self.valid & (jnp.arange(p)[None, None] < self.slots)
         slot = jnp.argmax(free, axis=2).astype(jnp.int32)         # first free
@@ -88,6 +91,18 @@ class KeyformerCache(LaneSliceable, HasBlockTable):
         else:
             k = jnp.where(hit[..., None], k_new.astype(self.k.dtype), self.k)
             v = jnp.where(hit[..., None], v_new.astype(self.v.dtype), self.v)
+        # Stash the layer salt for this step's Gumbel draw.  It must be
+        # derived from something bit-identical between the kernel and
+        # reference attention paths — activations (k_new, attention weights)
+        # differ by float ulps at layers > 0 and a bitcast salt would fork
+        # the whole noise stream — so the policy passes a per-layer PARAM
+        # scalar (decorrelating layers) and the draw folds it with the
+        # per-lane logical step (decorrelating steps; see
+        # ``accumulate_and_evict``).
+        if salt is None:
+            salt = jnp.zeros((), jnp.uint32)
+        salt = jnp.broadcast_to(jnp.asarray(salt, jnp.uint32),
+                                self.length.shape)
         return dataclasses.replace(
             self,
             k=k, v=v,
@@ -95,6 +110,7 @@ class KeyformerCache(LaneSliceable, HasBlockTable):
             valid=self.valid | hit,
             score=jnp.where(hit, 0.0, self.score),
             length=self.length + 1,
+            salt=salt,
             blocks=self.blocks.insert(slot, newly),
             pool=pool, phys=phys)
 
@@ -108,22 +124,28 @@ class KeyformerCache(LaneSliceable, HasBlockTable):
         """
         p = self.k.shape[2]
         w = attn_weights.astype(jnp.float32)
-        # Noise is derived PER LANE from (lane step, lane content): lanes are
+        # Noise is derived PER LANE from (lane step, layer salt): lanes are
         # independent streams under continuous batching, so the draw must not
         # see other lanes (batch invariance — a forked chain replays exactly
-        # the same noise as an independently-prefilled one).  The content
-        # salt decorrelates layers (all caches share `length` at a step).
+        # the same noise as an independently-prefilled one).  The layer salt
+        # (stored by ``insert`` from a per-layer param scalar) decorrelates
+        # layers while staying attention-implementation-independent, which
+        # is what keeps ``use_kernel`` decode token-equal to the reference.
         base = jax.random.PRNGKey(_NOISE_SEED)
-        salt = jax.lax.bitcast_convert_type(
-            jnp.sum(w, axis=(1, 2)).astype(jnp.float32), jnp.uint32)  # (B,)
 
         def draw(len_b, salt_b):
             k = jax.random.fold_in(base, len_b)
             k = jax.random.fold_in(k, salt_b)
-            return jax.random.uniform(k, w.shape[1:], minval=_SCORE_EPS,
-                                      maxval=1.0 - _SCORE_EPS)
+            return jax.random.bits(k, w.shape[1:], jnp.uint32)
 
-        u = jax.vmap(draw)(self.length, salt)
+        bits = jax.vmap(draw)(self.length, self.salt)
+        # bits -> uniform via exact steps only: mantissa-fill to [1, 2),
+        # the exact -1.0, and a clip.  ``jax.random.uniform``'s affine
+        # minval/maxval rescale FMA-fuses differently at different batch
+        # shapes, breaking the bitwise fork == tiled-prefill contract.
+        u01 = jax.lax.bitcast_convert_type(
+            (bits >> 9) | jnp.uint32(0x3F800000), jnp.float32) - 1.0
+        u = jnp.clip(u01, _SCORE_EPS, 1.0 - _SCORE_EPS)
         gumbel = -jnp.log(-jnp.log(u))
         logits = jnp.where(self.valid, jnp.log(w + _SCORE_EPS) + gumbel, -jnp.inf)
         reg = jax.nn.softmax(logits / self.tau, axis=-1)
@@ -172,7 +194,8 @@ class KeyformerPolicy(KVPolicy):
                                    pool_blocks=cfg.pool_blocks)
 
     def decode_update(self, cache, q, k_new, v_new, aux):
-        cache = cache.insert(k_new, v_new, active=aux.get("active"))
+        cache = cache.insert(k_new, v_new, active=aux.get("active"),
+                             salt=aux.get("layer_salt"))
         return cache, _attend_spec(cache, needs_weights=True)
 
     def post_attend(self, cache, weights, active=None):

@@ -69,9 +69,12 @@ from repro.core.kv_cache import (MaskedDMSCache, SlotDMSCache, VanillaCache,
 class AttendSpec:
     """What one decode step's attention should read.
 
-    ``k``/``v``: (B, Hkv, P, Dh); ``visible``: (B, Hkv, P) bool (broadcastable);
+    ``k``/``v``: (B, Hkv, P, Dh); ``visible``: (B, Hkv, P) bool — canonical:
+    construction broadcasts lazily-shaped masks (VanillaCache's (B, 1, P))
+    up to the full per-head shape so the reference einsum, the kernel
+    dispatch, and the weights-out scatter all see one mask layout.
     ``positions``: per-slot logical positions for local-window masking, or
-    ``None`` when positions are meaningless (merged DMC entries).
+    ``None`` when no positions are available.
     ``needs_weights`` requests the group-summed post-softmax weights back via
     :meth:`KVPolicy.post_attend`.
 
@@ -107,6 +110,14 @@ class AttendSpec:
     pool_k: Optional[jnp.ndarray] = None     # (NPOOL, block_p, Dh)
     pool_v: Optional[jnp.ndarray] = None
     phys: Optional[jnp.ndarray] = None       # (B, Hkv, NB) int32
+
+    def __post_init__(self):
+        # canonicalize lazy (B, 1, P) visibility masks to (B, Hkv, P) at the
+        # single construction chokepoint — a broadcast is free under jit and
+        # both attention paths (and the weights scatter) rely on the shape
+        tgt = self.k.shape[:3]
+        if self.visible.shape != tgt:
+            self.visible = jnp.broadcast_to(self.visible, tgt)
 
 
 @_tree_dataclass
@@ -746,9 +757,11 @@ class DMCPolicy(KVPolicy):
             kd, vd = block_pool.dense_kv(cache.pool, cache.phys)
         else:
             kd, vd = cache.k, cache.v
-        # merged entries have no single logical position: skip window masking
+        # merged entries carry their newest contribution's position, so
+        # layer_map window layers mask DMC slots like every other policy
+        # (a merged entry is "as recent as" its last absorbed token)
         return cache, AttendSpec(kd.astype(dtype), vd.astype(dtype),
-                                 cache.valid_mask(), None,
+                                 cache.valid_mask(), cache.positions(),
                                  block_tbl=tbl, block_n=n, block_p=bp)
 
 

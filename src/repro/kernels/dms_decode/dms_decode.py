@@ -42,10 +42,18 @@ class DecodeConfig(NamedTuple):
                                 # (1, NPOOL*block_p, Dh); table entries are
                                 # pool page ids and `valid` rides pre-gathered
                                 # in table order (bh, NB_tbl*block_p)
+    weights_out: bool = False   # also emit per-block unnormalized post-softmax
+                                # weights (table order) + per-block running max
+                                # + final per-head (m, l) — the wrapper
+                                # renormalizes host-side (see ops.py)
 
 
 def _decode_kernel(tbl_ref, n_ref, q_ref, k_ref, v_ref, valid_ref,
-                   o_ref, acc_ref, m_ref, l_ref, *, cfg: DecodeConfig):
+                   o_ref, *rest, cfg: DecodeConfig):
+    if cfg.weights_out:
+        w_ref, mb_ref, mo_ref, lo_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        acc_ref, m_ref, l_ref = rest
     h, i = pl.program_id(0), pl.program_id(1)
     ni = pl.num_programs(1)
 
@@ -76,12 +84,20 @@ def _decode_kernel(tbl_ref, n_ref, q_ref, k_ref, v_ref, valid_ref,
             p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         m_ref[...] = m_new
+        if cfg.weights_out:
+            # unnormalized weights relative to the running max at THIS block;
+            # the wrapper rescales by exp(m_blk - m_final) / l_final
+            w_ref[0, 0] = p                               # (G, BP)
+            mb_ref[0, 0] = m_new[:, 0]                    # (G,)
 
     @pl.when(i == ni - 1)
     def _finish():
         l = l_ref[...]
         l_safe = jnp.where(l <= 0.0, 1.0, l)
         o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+        if cfg.weights_out:
+            mo_ref[0] = m_ref[...][:, 0]                  # (G,)
+            lo_ref[0] = l_ref[...][:, 0]                  # (G,)
 
 
 def _live_i(h, i, n_ref):
@@ -101,7 +117,15 @@ def _live_block(h, i, tbl_ref, n_ref):
 
 def decode_fwd(q, k, v, valid, block_tbl, block_n, cfg: DecodeConfig):
     """q: (BHkv, G, Dh); block_n: (BHkv,) int32 live counts.
-    Returns (BHkv, G, Dh).
+    Returns (BHkv, G, Dh) — or, with ``cfg.weights_out``, the tuple
+    ``(out, w_blk, m_blk, m_out, l_out)`` where ``w_blk`` is
+    (BHkv, NB_tbl, G, block_p) per-block unnormalized post-softmax weights
+    (``exp(s - m_blk)``, table order), ``m_blk`` (BHkv, NB_tbl, G) the
+    running max when each block was processed, and ``m_out``/``l_out``
+    (BHkv, G) the final flash statistics.  The normalized weight of a slot
+    in table row ``i`` is ``w_blk[i] * exp(m_blk[i] - m_out) / l_out`` —
+    a per-(row, g) scalar rescale the wrapper applies host-side, writing
+    weight bytes ∝ table width (never arena capacity).
 
     Fixed-arena mode: k/v (BHkv, P, Dh) with P a block_p multiple; valid
     (BHkv, P) in its stored dtype (bool/int — only ``!= 0`` is used);
@@ -129,6 +153,30 @@ def decode_fwd(q, k, v, valid, block_tbl, block_n, cfg: DecodeConfig):
         kv_map = lambda h, i, tbl, n: (h, _live_block(h, i, tbl, n), 0)
         val_map = lambda h, i, tbl, n: (h, _live_block(h, i, tbl, n))
 
+    out_specs = pl.BlockSpec((1, g, dh), lambda h, i, tbl, n: (h, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((bh, g, dh), q.dtype)
+    if cfg.weights_out:
+        # per-block outputs revisit the same (clamped) table row on the dead
+        # tail — like the K/V inputs, a repeated index means no new copy; the
+        # wrapper masks rows ≥ n so tail garbage never escapes.
+        wmap = lambda h, i, tbl, n: (h, _live_i(h, i, n), 0, 0)
+        mbmap = lambda h, i, tbl, n: (h, _live_i(h, i, n), 0)
+        stat = lambda h, i, tbl, n: (h, 0)
+        out_specs = [
+            out_specs,
+            pl.BlockSpec((1, 1, g, cfg.block_p), wmap),
+            pl.BlockSpec((1, 1, g), mbmap),
+            pl.BlockSpec((1, g), stat),
+            pl.BlockSpec((1, g), stat),
+        ]
+        out_shape = [
+            out_shape,
+            jax.ShapeDtypeStruct((bh, nb_tbl, g, cfg.block_p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nb_tbl, g), jnp.float32),
+            jax.ShapeDtypeStruct((bh, g), jnp.float32),
+            jax.ShapeDtypeStruct((bh, g), jnp.float32),
+        ]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(bh, nb_tbl),
@@ -138,7 +186,7 @@ def decode_fwd(q, k, v, valid, block_tbl, block_n, cfg: DecodeConfig):
             pl.BlockSpec((1, cfg.block_p, dh), kv_map),
             pl.BlockSpec((1, cfg.block_p), val_map),
         ],
-        out_specs=pl.BlockSpec((1, g, dh), lambda h, i, tbl, n: (h, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((g, dh), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),
@@ -148,7 +196,7 @@ def decode_fwd(q, k, v, valid, block_tbl, block_n, cfg: DecodeConfig):
     return pl.pallas_call(
         functools.partial(_decode_kernel, cfg=cfg),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((bh, g, dh), q.dtype),
+        out_shape=out_shape,
         interpret=cfg.interpret,
         name="dms_decode",
     )(block_tbl, block_n, q, k, v, valid)

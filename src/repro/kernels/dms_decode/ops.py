@@ -74,6 +74,7 @@ def dms_decode_attention(
     pool_k: Optional[jnp.ndarray] = None,      # (NPOOL, block_p, Dh) page arena
     pool_v: Optional[jnp.ndarray] = None,
     phys: Optional[jnp.ndarray] = None,        # (B, Hkv, NB) page map, -1 free
+    need_weights: bool = False,
 ) -> jnp.ndarray:
     b, _, hq, dh = q.shape
     hkv, p = k.shape[1], k.shape[2]
@@ -91,6 +92,8 @@ def dms_decode_attention(
         bp = block_p
         tblf = block_tbl.reshape(b * hkv, -1)
         nf = block_n.reshape(b * hkv)
+        ltbl = tblf             # LOGICAL arena rows — weights scatter target
+        p_arena = p
         if pool_k is not None:
             # paged: stream the shared page arena.  Translate logical block
             # ids -> pool page ids through the page map (the one-liner twin
@@ -129,9 +132,42 @@ def dms_decode_attention(
         blk_live = jnp.any(valf.reshape(b * hkv, nb, bp) != 0, axis=-1)
         tblf = jnp.argsort(~blk_live, axis=-1, stable=True).astype(jnp.int32)
         nf = jnp.sum(blk_live, axis=-1).astype(jnp.int32)
+        ltbl = tblf
+        p_arena = pp
 
     qf = q[:, 0].reshape(b, hkv, g, dh).reshape(b * hkv, g, dh)
     cfg = DecodeConfig(orig_dh=dh, g=g, block_p=bp, logit_cap=logit_cap,
-                       interpret=bool(interpret), shared_kv=shared_kv)
-    out = decode_fwd(qf, kf, vf, valf, tblf, nf, cfg)
-    return out.reshape(b, hkv, g, dh).reshape(b, 1, hq, dh)
+                       interpret=bool(interpret), shared_kv=shared_kv,
+                       weights_out=need_weights)
+    if not need_weights:
+        out = decode_fwd(qf, kf, vf, valf, tblf, nf, cfg)
+        return out.reshape(b, hkv, g, dh).reshape(b, 1, hq, dh)
+
+    out, w_blk, m_blk, m_out, l_out = decode_fwd(qf, kf, vf, valf, tblf, nf,
+                                                 cfg)
+    # Renormalize per table row: each block's weights were emitted as
+    # exp(s - m_blk) with m_blk the running max at that block; the true
+    # softmax weight is exp(s - m_out) / l_out.  For live rows
+    # m_blk <= m_out always, so the clamp is the identity there — it only
+    # silences dead-tail/empty-head garbage (masked to zero below anyway)
+    # from overflowing the exp.  Per-g rescale BEFORE the group sum: the
+    # query heads of a group have distinct (m, l).
+    nb_tbl = tblf.shape[1]
+    l_safe = jnp.where(l_out <= 0.0, 1.0, l_out)                  # (BH, G)
+    corr = jnp.exp(jnp.minimum(m_blk - m_out[:, None, :], 0.0)) \
+        / l_safe[:, None, :]                                      # (BH, NB, G)
+    w_tbl = jnp.sum(w_blk * corr[..., None], axis=2)              # (BH, NB, BP)
+    row_live = jnp.arange(nb_tbl)[None, :] < nf[:, None]
+    w_tbl = jnp.where(row_live[..., None], w_tbl, 0.0)
+    # Scatter table rows back to LOGICAL arena rows.  Weight bytes written
+    # ∝ table width; the zeros init is (B·Hkv, P) f32 — group-summed, not
+    # Dh-wide, so it stays under the arena-traffic lint threshold.  Dead
+    # rows route to the out-of-range dump index and are dropped, so a stale
+    # duplicate table id can never clobber a live row.
+    nb_arena = p_arena // bp
+    safe_rows = jnp.where(row_live, jnp.clip(ltbl, 0, nb_arena - 1), nb_arena)
+    w_arena = jnp.zeros((b * hkv, nb_arena, bp), jnp.float32)
+    w_arena = w_arena.at[jnp.arange(b * hkv)[:, None], safe_rows].set(
+        w_tbl, mode="drop")
+    weights = w_arena.reshape(b, hkv, nb_arena * bp)[:, :, :p]
+    return out.reshape(b, hkv, g, dh).reshape(b, 1, hq, dh), weights

@@ -416,7 +416,7 @@ def decode_attention(
 
     if cross_kv is not None:
         k_all, v_all, valid = cross_kv                    # encoder memory: no update
-        out, _ = _masked_decode(
+        out, _, _ = _masked_decode(
             q, policy_lib.AttendSpec(k_all, v_all, valid), None, cfg,
             use_kernel)
         y = out.reshape(b, 1, cfg.num_heads * cfg.head_dim) @ p["wo"].astype(dtype)
@@ -427,10 +427,17 @@ def decode_attention(
     if pol is None:
         raise TypeError(f"decode_attention needs a PolicyCache, got {type(cache)}")
 
+    # Per-layer noise salt for stochastic policies (Keyformer): a param
+    # scalar is distinct per layer (incl. across superblocks — params are
+    # never broadcast) yet bit-identical between the kernel and reference
+    # attention paths, so policy noise streams decorrelate across layers
+    # WITHOUT forking on float-ulp differences in activations.
     pol_aux = {"alpha_bin": alpha_bin, "pos_t": pos_lane, "attn_cfg": cfg,
-               "arch": arch, "dtype": dtype, "active": active}
+               "arch": arch, "dtype": dtype, "active": active,
+               "layer_salt": jax.lax.bitcast_convert_type(
+                   p["wo"].reshape(-1)[0].astype(jnp.float32), jnp.uint32)}
     inner, spec = pol.decode_update(cache.cache, q, k_new_c, v_new_c, pol_aux)
-    out, w_group = _masked_decode(
+    out, w_group, impl = _masked_decode(
         q, spec, window if spec.positions is not None else None, cfg,
         use_kernel, pos_lane, need_weights=spec.needs_weights)
     if spec.needs_weights:
@@ -441,6 +448,10 @@ def decode_attention(
     metrics = pol.metrics(inner)
     aux["live_tokens"] = metrics["live_tokens"]
     aux["reads_tokens"] = metrics["reads_tokens"]
+    # trace-time constant ("kernel" | "ref"): which attention implementation
+    # this layer actually traced — decode_step aggregates it so a requested
+    # kernel that silently fell back is loud in the step metrics
+    aux["attn_impl"] = impl
     return y.astype(x_t.dtype), cache, aux
 
 
@@ -453,7 +464,8 @@ def _masked_decode(q, spec, window, cfg, use_kernel,
     Local-window layers additionally hide slots with position <= t - window
     (a *subset* restriction of ``spec.visible``, so the spec's live-block
     table stays a valid cover — the kernel masks the hidden slots in-block).
-    Returns (out (B,1,Hq,Dh), group-summed weights (B,Hkv,P) or None).
+    Returns (out (B,1,Hq,Dh), group-summed weights (B,Hkv,P) or None, and
+    the implementation actually traced — the static string "kernel" | "ref").
     """
     k, v, valid, pos = spec.k, spec.v, spec.visible, spec.positions
     b, _, hq, dh = q.shape
@@ -463,15 +475,17 @@ def _masked_decode(q, spec, window, cfg, use_kernel,
     if window is not None and pos is not None and pos_t is not None:
         ptl = jnp.broadcast_to(jnp.asarray(pos_t, jnp.int32), (b,))
         vis = vis & (pos > (ptl[:, None, None] - window))
-    if use_kernel and not need_weights:
+    if use_kernel:
         from repro.kernels.dms_decode import ops as dkops
-        if vis.shape[1] != hkv:       # lazy (B,1,P) masks (VanillaCache)
-            vis = jnp.broadcast_to(vis, (b, hkv, k.shape[2]))
-        out = dkops.dms_decode_attention(
+        res = dkops.dms_decode_attention(
             q, k, v, vis, block_tbl=spec.block_tbl, block_n=spec.block_n,
             block_p=spec.block_p or None, logit_cap=cfg.logit_softcap,
-            pool_k=spec.pool_k, pool_v=spec.pool_v, phys=spec.phys)
-        return out, None
+            pool_k=spec.pool_k, pool_v=spec.pool_v, phys=spec.phys,
+            need_weights=need_weights)
+        if need_weights:
+            out, weights = res
+            return out, weights, "kernel"
+        return res, None, "kernel"
     # MXU-style mixed precision: bf16 operands, fp32 accumulation — the cache
     # is never converted/materialised in fp32 (that would double decode traffic)
     qg = q[:, 0].reshape(b, hkv, g, dh).astype(k.dtype)
@@ -484,7 +498,7 @@ def _masked_decode(q, spec, window, cfg, use_kernel,
     out = jnp.einsum("bhgp,bhpd->bhgd", w.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     out = out.reshape(b, 1, hq, dh).astype(q.dtype)
-    return out, (jnp.sum(w, axis=2) if need_weights else None)
+    return out, (jnp.sum(w, axis=2) if need_weights else None), "ref"
 
 
 def _cache_length(cache) -> jnp.ndarray:

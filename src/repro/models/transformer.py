@@ -531,6 +531,7 @@ def decode_step(
     """
     x = (embed_override if embed_override is not None
          else embed_tokens(params, token, arch))
+    impls = set()   # trace-time: attention implementations actually traced
 
     def body(carry, xs):
         x_t, live, reads = carry
@@ -544,6 +545,7 @@ def decode_step(
                     p["attn"], h, cache[str(pi)], arch.attn, arch,
                     layer_window=_layer_window(arch, kind), pos_t=pos_t,
                     use_kernel=use_kernel, active=active)
+                impls.add(aux["attn_impl"])
                 if arch.post_norm:
                     a_out = norm_apply(p["attn_post_norm"], a_out, arch.norm, arch.norm_eps)
                 x_t = x_t + a_out
@@ -608,7 +610,12 @@ def decode_step(
         new_state = lane_select(active, new_state, state)
         reads = reads * active.astype(reads.dtype)
     logits = lm_logits(params, x, arch)[:, 0]
-    return logits, new_state, {"live_tokens": live, "reads_tokens": reads}
+    # static int (i32 under jit, lint-clean): 1 iff every attention layer
+    # traced the Pallas kernel — a requested kernel that silently fell back
+    # to the reference einsum is visible in the step metrics
+    kernel_only = 1 if (impls and impls == {"kernel"}) else 0
+    return logits, new_state, {"live_tokens": live, "reads_tokens": reads,
+                               "attn_impl_kernel": kernel_only}
 
 
 def lane_select(mask: jnp.ndarray, on_true: Any, on_false: Any) -> Any:

@@ -235,9 +235,10 @@ def cache_spec_with_rule(path: Tuple[str, ...], shape: Tuple[int, ...], mesh,
         return "pending-ring", P(None, bspec, _model_if(shape[2], tp), None)
     if name in ("free_head", "free_count", "overflowed", "count") and nd == 3:
         return "slot-scalars", P(None, bspec, _model_if(shape[2], tp))
-    # per-lane lengths (L,B): lanes advance independently under continuous
-    # batching — batch-sharded, nothing else to decide.
-    if name == "length" and nd == 2:
+    # per-lane scalars (L,B): lengths and Keyformer's per-step content salt —
+    # lanes advance independently under continuous batching: batch-sharded,
+    # nothing else to decide.
+    if name in ("length", "salt") and nd == 2:
         return "lane-length", P(None, bspec)
     if name == "ssm" and nd == 5:
         return "ssd-state", P(None, bspec, _model_if(shape[2], tp), None,

@@ -109,10 +109,12 @@ class TestArenaGather:
         return jnp.take(arena, idx, axis=2)
 
     def test_red_table_mode(self):
+        # pass-scoped: a kernel-free toy program also (correctly) trips the
+        # ref-fallback lint in table mode, exercised by its own tests below
         arena = jnp.zeros(ARENA)
         idx = jnp.arange(ARENA[2])
         got = _findings(self._dense_rematerialize, arena, idx,
-                        table_mode=True)
+                        table_mode=True, passes=["arena-gather"])
         assert _rules(got) == ["arena-gather"]
 
     def test_green_ref_mode_gathers_allowed(self):
@@ -126,7 +128,57 @@ class TestArenaGather:
         embed = jnp.zeros((ELEMS * 2, 8))
         tok = jnp.zeros((2, 1), jnp.int32)
         assert not _findings(lambda e, t: e[t], embed, tok,
-                             table_mode=True)
+                             table_mode=True, passes=["arena-gather"])
+
+
+class TestRefFallback:
+    @staticmethod
+    def _ref_attention(q, arena):
+        # the reference bhgd,bhpd->bhgp score einsum over the whole arena
+        return jnp.einsum("bhgd,bhpd->bhgp", q, arena)
+
+    def test_red_reference_einsum_in_kernel_mode(self):
+        q = jnp.zeros((2, 2, 2, 4))
+        got = _findings(self._ref_attention, q, jnp.zeros(ARENA),
+                        table_mode=True, passes=["ref-fallback"])
+        assert _rules(got) == ["ref-fallback"]
+        # both signals fire: the arena-sized score einsum itself, and the
+        # absence of any pallas_call in the program
+        assert len(gating(got)) == 2
+
+    def test_green_ref_mode_is_silent(self):
+        q = jnp.zeros((2, 2, 2, 4))
+        assert not _findings(self._ref_attention, q, jnp.zeros(ARENA),
+                             passes=["ref-fallback"])
+
+    def test_param_matmul_not_flagged_as_einsum_fallback(self):
+        # 0-batch-dim matmuls (the MLP/projection path) never trip the
+        # einsum signal, however large — only the missing-kernel signal
+        # remains for this (kernel-free) toy program
+        w = jnp.zeros((ELEMS, 8))
+        x = jnp.zeros((2, ELEMS))
+        got = _findings(lambda x, w: x @ w, x, w, table_mode=True,
+                        passes=["ref-fallback"])
+        msgs = [f.message for f in gating(got)]
+        assert msgs and all("no pallas_call" in m for m in msgs)
+
+    def test_red_real_reference_decode_in_table_mode(self, tiny_arch,
+                                                     tiny_params,
+                                                     paged_state):
+        # the actual pre-fix pathology: a decode program that traced the
+        # reference einsum where the kernel was requested is caught
+        cfg, state = paged_state
+        elems = min(int(np.prod((pc.cache.pool.k if pc.cache.pool is not None
+                                 else pc.cache.k).shape))
+                    for pc in analysis_iter(state))
+        tok = jnp.zeros((2, 1), jnp.int32)
+        pos = jnp.zeros((2,), jnp.int32)
+        jaxpr = dce(trace_jaxpr(
+            lambda s: tfm.decode_step(tiny_params, tok, s, tiny_arch, pos,
+                                      use_kernel=False), state))
+        ctx = LintContext(arena_elems=elems, table_mode=True)
+        got = run_passes(jaxpr, ctx, passes=("ref-fallback",))
+        assert _rules(got) == ["ref-fallback"]
 
 
 class TestScalarOutput:

@@ -81,8 +81,8 @@ def _assert_spec_parity(sf, sp, q, acfg):
     np.testing.assert_array_equal(np.asarray(sf.visible),
                                   np.asarray(sp.visible))
     for use_kernel in (False, True):
-        of, _ = _masked_decode(q, sf, None, acfg, use_kernel=use_kernel)
-        op, _ = _masked_decode(q, sp, None, acfg, use_kernel=use_kernel)
+        of, _, _ = _masked_decode(q, sf, None, acfg, use_kernel=use_kernel)
+        op, _, _ = _masked_decode(q, sp, None, acfg, use_kernel=use_kernel)
         np.testing.assert_array_equal(np.asarray(of), np.asarray(op),
                                       err_msg=f"use_kernel={use_kernel}")
 

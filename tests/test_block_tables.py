@@ -140,12 +140,12 @@ ALL_POLICIES = ["vanilla", "window", "dms", "dms_masked", "tova", "h2o",
 
 
 def _policy_cache_after_steps(tiny_arch, kind, steps, dtype, batch=2,
-                              max_len=40):
+                              max_len=40, paged=False):
     """Fragment a registry policy's cache with a random decode trace; return
     (cache pytree, last AttendSpec, q used at the last step, attn cfg)."""
     arch = dataclasses.replace(tiny_arch, dtype=dtype)
     cfg = KVPolicyConfig(kind=kind, cr=2.0, window=arch.dms.window,
-                         block_p=BP, quest_page_size=BP)
+                         block_p=BP, quest_page_size=BP, paged=paged)
     pc = policy_lib.init_policy_cache(arch, batch, max_len, cfg)
     pol = policy_lib.get_policy(pc.policy)
     a = arch.attn
@@ -178,12 +178,72 @@ def test_policy_parity_kernel_vs_ref(tiny_arch, kind, dtype):
     if spec.block_p:
         assert spec.block_tbl is not None
         assert spec.k.shape[2] % spec.block_p == 0
-    out_k, _ = _masked_decode(q, spec, None, acfg, use_kernel=True)
-    out_r, _ = _masked_decode(q, spec, None, acfg, use_kernel=False)
+    out_k, w_k, impl_k = _masked_decode(q, spec, None, acfg, use_kernel=True,
+                                        need_weights=spec.needs_weights)
+    out_r, w_r, impl_r = _masked_decode(q, spec, None, acfg, use_kernel=False,
+                                        need_weights=spec.needs_weights)
+    assert (impl_k, impl_r) == ("kernel", "ref")
     tol = dict(rtol=2e-2, atol=2e-2) if dtype == "bfloat16" else \
         dict(rtol=2e-5, atol=2e-5)
     np.testing.assert_allclose(np.asarray(out_k, np.float32),
                                np.asarray(out_r, np.float32), **tol)
+    if spec.needs_weights:
+        np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_r), **tol)
+
+
+@pytest.mark.parametrize("kind", ["tova", "h2o", "keyformer"])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("paged", [False, True])
+def test_weights_out_parity(tiny_arch, kind, dtype, paged):
+    """The kernel's weights-out path returns the exact group-summed softmax
+    the reference computes — fragmented tables, GQA, {fixed, paged} layouts.
+    These weights drive eviction, so parity here is what makes
+    ``use_kernel=True`` serving token-equal for the score-based policies."""
+    _, spec, q, acfg = _policy_cache_after_steps(tiny_arch, kind, 18, dtype,
+                                                 paged=paged)
+    assert spec.needs_weights and spec.block_tbl is not None
+    out_k, w_k, _ = _masked_decode(q, spec, None, acfg, use_kernel=True,
+                                   need_weights=True)
+    out_r, w_r, _ = _masked_decode(q, spec, None, acfg, use_kernel=False,
+                                   need_weights=True)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == "bfloat16" else \
+        dict(rtol=2e-5, atol=2e-5)
+    assert w_k.shape == spec.visible.shape == w_r.shape
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_r), **tol)
+    # weights on invisible slots are exactly zero on BOTH paths (the scatter
+    # drops dead table rows; the reference masks to NEG_INF pre-softmax)
+    dead = ~np.asarray(spec.visible)
+    assert not np.asarray(w_k)[dead].any()
+    assert not np.asarray(w_r)[dead].any()
+
+
+@pytest.mark.parametrize("kind", ALL_POLICIES)
+def test_policy_window_layer_masking(tiny_arch, kind):
+    """Every registry policy must supply slot positions so ``layer_map``
+    window layers can mask — and the window must actually zero attention
+    (and returned weights) on slots older than ``pos_t - window``.  DMC
+    historically returned ``positions=None`` and silently attended beyond
+    the window on window layers; its entries now carry their newest
+    contribution's position."""
+    steps, window = 12, 4
+    _, spec, q, acfg = _policy_cache_after_steps(tiny_arch, kind, steps,
+                                                 "float32")
+    assert spec.positions is not None, \
+        f"{kind}: no positions — window layers would attend beyond the window"
+    b = q.shape[0]
+    pos_t = jnp.full((b,), steps - 1, jnp.int32)
+    for use_kernel in (False, True):
+        _, w, _ = _masked_decode(q, spec, window, acfg,
+                                 use_kernel=use_kernel, pos_t=pos_t,
+                                 need_weights=True)
+        w = np.asarray(w)
+        pos = np.asarray(jnp.broadcast_to(spec.positions, spec.visible.shape))
+        old = pos <= (steps - 1 - window)
+        assert not w[old].any(), f"{kind}: weight on slots beyond the window"
+        # the window never hides everything: the newest entry is inside it
+        assert (w.sum(axis=-1) > 0.5).all(), f"{kind}: window hid all slots"
 
 
 @pytest.mark.parametrize("kind", ALL_POLICIES)
@@ -232,3 +292,49 @@ def test_quest_scheduler_smoke_use_kernel(tiny_arch, tiny_params):
     res_r = Engine(tiny_arch, tiny_params, cfg).generate(prompts, 5)
     np.testing.assert_array_equal(res_k.tokens, res_r.tokens)
     assert np.isfinite(res_k.meter.kv_reads)
+
+
+@pytest.mark.parametrize("kind", ["tova", "h2o", "keyformer"])
+def test_weight_policy_scheduler_smoke_use_kernel(tiny_arch, tiny_params,
+                                                  kind):
+    """End-to-end: the score-based eviction policies serve through the
+    weights-out kernel path token-equal to the reference decode path —
+    the silent ``needs_weights`` fallback is gone, so ``use_kernel=True``
+    here really means the Pallas kernel (pinned by the audit's
+    ``ref-fallback`` lint and the ``attn_impl_kernel`` step metric).
+
+    Token equality is a per-trace pin, not a universal guarantee: these
+    policies *evict by the returned weights*, and the kernel's blockwise
+    softmax differs from the dense reference by float reassociation ulps,
+    so a near-tied eviction argmin can legitimately flip on some traces
+    (the per-dtype weights tolerance in ``test_weights_out_parity`` is the
+    numerical contract).  The seed is chosen tie-free for all three."""
+    from repro.serving.engine import Engine
+    prompts = np.random.default_rng(3).integers(
+        3, tiny_arch.vocab_size, size=(2, 11)).astype(np.int32)
+    cfg = KVPolicyConfig(kind=kind, cr=2.0, window=tiny_arch.dms.window,
+                         block_p=BP)
+    res_k = Engine(tiny_arch, tiny_params, cfg,
+                   use_kernel=True).generate(prompts, 5)
+    res_r = Engine(tiny_arch, tiny_params, cfg).generate(prompts, 5)
+    np.testing.assert_array_equal(res_k.tokens, res_r.tokens)
+    assert np.isfinite(res_k.meter.kv_reads)
+
+
+@pytest.mark.parametrize("kind", ["tova", "vanilla"])
+def test_decode_step_reports_attn_impl(tiny_arch, tiny_params, kind):
+    """``decode_step``'s aux pins which attention implementation was traced:
+    1 iff every attention layer went through the Pallas kernel.  A silent
+    kernel→reference fallback (the bug this PR removes) flips it to 0."""
+    from repro.models import transformer as tfm
+    cfg = KVPolicyConfig(kind=kind, cr=2.0, window=tiny_arch.dms.window,
+                         block_p=BP)
+    state = tfm.init_decode_state(tiny_arch, 2, 16, cfg)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    _, _, aux_k = tfm.decode_step(tiny_params, tok, state, tiny_arch, pos,
+                                  use_kernel=True)
+    _, _, aux_r = tfm.decode_step(tiny_params, tok, state, tiny_arch, pos,
+                                  use_kernel=False)
+    assert int(aux_k["attn_impl_kernel"]) == 1
+    assert int(aux_r["attn_impl_kernel"]) == 0
