@@ -34,6 +34,10 @@ Suites (↔ paper artifact):
     paged_arena       serving: paged KV block pool — footprint ∝ live
                       tokens, 4x lanes per byte budget, zero-copy CoW fork
                       (see docs/serving.md)
+    preemption        serving: preemptive lane eviction under an
+                      oversubscribed pool — bitwise snapshot resume, zero
+                      re-prefill, deterministic lifecycle counters (see
+                      docs/serving.md "Failure semantics & preemption")
 """
 from __future__ import annotations
 
@@ -58,8 +62,8 @@ def main(argv=None) -> int:
     from benchmarks import common
     from benchmarks import (ablation_eviction, continuous_batching, cr_profile,
                             cr_sweep, data_efficiency, decode_path,
-                            latency_model, paged_arena, pareto, prefix_cache,
-                            roofline_table)
+                            latency_model, paged_arena, pareto, preemption,
+                            prefix_cache, roofline_table)
     suites = {
         "latency_model": latency_model.run,
         "roofline_table": roofline_table.run,
@@ -72,6 +76,7 @@ def main(argv=None) -> int:
         "prefix_cache": prefix_cache.run,
         "decode_path": decode_path.run,
         "paged_arena": paged_arena.run,
+        "preemption": preemption.run,
     }
     if args.only:
         suites = {k: v for k, v in suites.items() if k == args.only}

@@ -54,6 +54,11 @@ ALLOW: Dict[str, Tuple[str, ...]] = {
         "arena-pad",
     ),
     "reclaim": (),
+    # preempt-snapshot/resume entry points: a preemption must move ONE
+    # lane's state, never a full arena — any arena-sized pad/cast/gather in
+    # these programs means eviction copies scale with the pool, not the lane
+    "export": (),
+    "import": (),
 }
 
 #: leaf names where the sharding fallback is an explicit decision.
@@ -114,6 +119,13 @@ def audit_combo(arch, params, policy: str, paged: bool,
         lint("fork", tfm.gather_lanes, state, src)
         fresh = tfm.init_decode_state(arch, B, MAX_LEN, cfg)
         lint("reclaim", tfm.reclaim_lanes, state, mask, fresh)
+        # preempt snapshot/resume programs (scheduler._preempt/_resume)
+        lane = jnp.zeros((), jnp.int32)
+        lint("export", tfm.export_lane_state, state, lane)
+        snap = jax.eval_shape(tfm.export_lane_state, state, lane)
+        snap = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), snap)
+        lint("import", tfm.import_lane_state, state, snap, lane)
         findings.extend(contracts.check_tree_invariance(
             lambda s: tfm.decode_step(params, tok, s, arch, pos,
                                       active=act)[1],
@@ -167,6 +179,41 @@ def audit_scheduler(arch, params, paged: bool) -> List[Finding]:
     return findings
 
 
+def audit_preempt(arch, params, paged: bool) -> List[Finding]:
+    """Drive a forced preempt→resume round-trip under the retrace sentinel
+    and host-sync tripwire: the snapshot/resume path must compile its
+    export/import programs exactly once, never retrace the chunk fn, and
+    read back device state only at sanctioned boundaries
+    (``preempt-snapshot`` / ``pool-pressure`` / ``tick-boundary``)."""
+    from repro.serving.engine import Engine
+    from repro.serving.faults import Fault, FaultPlan
+    from repro.serving.scheduler import Request
+
+    cfg = policy_cfg("dms", paged)
+    eng = Engine(arch, params, cfg, chunk=4)
+    plan = FaultPlan([Fault("preempt", tick=1, lane=0)])
+    sched = eng.scheduler(num_lanes=2, max_len=MAX_LEN, faults=plan)
+    prompt = np.random.default_rng(1).integers(
+        1, 50, size=7).astype(np.int32)
+    sched.submit(Request(uid=0, prompt=prompt, max_new=4))
+    with RetraceSentinel(engine_jits(eng),
+                         exact={"chunk": 1},
+                         budget={"gather": 0, "reset": 1, "prefill": 0,
+                                 "export": 1, "import": 1}) as sentinel, \
+            HostSyncTripwire() as tripwire:
+        results = sched.run()
+    tag = f"preempt/{'paged' if paged else 'fixed'}"
+    findings = [dataclasses.replace(f, path=f"{tag}:{f.path}")
+                for f in sentinel.findings() + tripwire.violations()]
+    if (len(results) != 1 or results[0].status != "ok"
+            or results[0].preempt_count != 1):
+        findings.append(Finding(
+            "error", "scheduler",
+            f"expected 1 ok result with preempt_count=1, got "
+            f"{[(r.status, r.preempt_count) for r in results]}", path=tag))
+    return findings
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--policies", default=None,
@@ -195,6 +242,9 @@ def main(argv=None) -> int:
         for paged in (False, True):
             findings += audit_scheduler(arch, params, paged)
             print(f"  audited scheduler/{'paged' if paged else 'fixed'}",
+                  flush=True)
+            findings += audit_preempt(arch, params, paged)
+            print(f"  audited preempt/{'paged' if paged else 'fixed'}",
                   flush=True)
 
     bad = gating(findings)

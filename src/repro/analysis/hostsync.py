@@ -30,8 +30,13 @@ from typing import List, Optional, Tuple
 from repro.analysis.passes import Finding
 
 #: sanctioned tags armed tripwires permit by default: the scheduler's
-#: once-per-chunk host handoff and the prefix cache's lazy d2h demotion.
-DEFAULT_ALLOW = ("tick-boundary", "prefix-demote")
+#: once-per-chunk host handoff, the prefix cache's lazy d2h demotion, the
+#: scheduler's free-page readback when preemption is armed, and the
+#: preempt-snapshot d2h (same funnel as prefix demotion).  The fault
+#: injector's own readbacks tag as "fault-inject" and are deliberately NOT
+#: allowed here: injection is a test-harness act, never a serving path.
+DEFAULT_ALLOW = ("tick-boundary", "prefix-demote", "pool-pressure",
+                 "preempt-snapshot")
 
 _SANCTIONED: List[str] = []          # active sanctioned-region tag stack
 _ACTIVE: List["HostSyncTripwire"] = []   # armed tripwire stack

@@ -119,7 +119,10 @@ def alloc(pool: BlockPool, need: jnp.ndarray
     Deterministic lowest-free-id-first order.  Returns ``(pool, page, ok)``;
     where ``ok`` is False the pool was exhausted — the caller must drop the
     write (``exhausted`` is latched for observability, other lanes' pages are
-    never touched)."""
+    never touched).  A dropped write silently corrupts the victim lane's
+    decode, so the serving scheduler must read the latch at its tick boundary
+    and fail/preempt rather than keep decoding (see
+    ``serving/scheduler.py`` and :func:`clear_flags`)."""
     npool = pool.num_blocks
     free = pool.ref == 0
     n_free = jnp.sum(free.astype(jnp.int32))
@@ -135,6 +138,18 @@ def alloc(pool: BlockPool, need: jnp.ndarray
         high_water=jnp.maximum(pool.high_water, used),
         exhausted=pool.exhausted | jnp.any(need & ~ok))
     return pool, page, ok
+
+
+def clear_flags(pool: BlockPool) -> BlockPool:
+    """Un-latch ``exhausted`` after the failure has been handled host-side.
+
+    The latch is sticky device state by design (a dropped write anywhere in a
+    chunk must survive to the tick boundary); once the scheduler has failed
+    the affected requests and reclaimed their pages, leaving it set would
+    condemn every *later* request on the same pool.  See the scheduler's
+    exhausted backstop and docs/serving.md "Failure semantics & preemption"
+    for the dropped-write pitfall this closes."""
+    return dataclasses.replace(pool, exhausted=jnp.zeros_like(pool.exhausted))
 
 
 def recount(phys: jnp.ndarray, num_blocks: int) -> jnp.ndarray:

@@ -195,6 +195,27 @@ def iter_policy_caches(tree: Any) -> Iterator[PolicyCache]:
             yield leaf
 
 
+def map_pooled_caches(state: Any, fn: Callable[[int, Any], Any]) -> Any:
+    """Rebuild a decode state with ``fn(pooled_idx, cache)`` applied to every
+    *pooled* cache (non-pooled caches pass through untouched).
+
+    ``pooled_idx`` counts pooled caches in :func:`iter_policy_caches` order —
+    the same order the scheduler's ``_pool_descs`` and the fault injector's
+    ghost-ref ledgers use, so per-pool host arrays line up by index."""
+    counter = [0]
+
+    def visit(node):
+        if isinstance(node, PolicyCache) \
+                and getattr(node.cache, "pool", None) is not None:
+            idx = counter[0]
+            counter[0] += 1
+            return dataclasses.replace(node, cache=fn(idx, node.cache))
+        return node
+
+    return jax.tree_util.tree_map(
+        visit, state, is_leaf=lambda x: isinstance(x, PolicyCache))
+
+
 def state_peak_bytes(state: Any) -> int:
     """Physical KV arena bytes of a decode state (uniform metrics contract).
 

@@ -72,6 +72,21 @@ def main(argv=None):
                          "(default: lanes*heads*arena_blocks — never binds; "
                          "shrink to oversubscribe lanes against live "
                          "footprint, admission then gates on pool blocks)")
+    ap.add_argument("--oversub", type=float, default=1.0,
+                    help="admission oversubscription factor: reserve only "
+                         "worst-case-demand/oversub pool blocks per request "
+                         "(1.0 = sound admission, pool can never exhaust; "
+                         ">1 admits more and lets preemption absorb real "
+                         "divergence)")
+    ap.add_argument("--on-pressure", default="preempt",
+                    choices=["preempt", "ignore"],
+                    help="pool-pressure response: 'preempt' snapshots and "
+                         "requeues the youngest request at the tick boundary; "
+                         "'ignore' keeps the seed behaviour (silent dropped "
+                         "writes) for demonstration only")
+    ap.add_argument("--deadline", type=int, default=None,
+                    help="per-request deadline in scheduler ticks from "
+                         "arrival; exceeded -> status 'timeout'")
     args = ap.parse_args(argv)
 
     arch = get_smoke(args.arch)
@@ -88,7 +103,9 @@ def main(argv=None):
     shared = rng.integers(3, arch.vocab_size,
                           size=(args.shared_prefix,)).astype(np.int32)
     max_len = args.shared_prefix + args.prompt_len + args.max_new
-    sched = engine.scheduler(num_lanes=args.num_lanes, max_len=max_len)
+    sched = engine.scheduler(num_lanes=args.num_lanes, max_len=max_len,
+                             on_pressure=args.on_pressure,
+                             oversub=args.oversub)
     for i in range(args.requests):
         plen = (int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
                 if args.stagger else args.prompt_len)
@@ -96,12 +113,14 @@ def main(argv=None):
         sched.submit(Request(
             uid=i, prompt=np.concatenate([shared, own]),
             max_new=args.max_new, width=args.width,
-            eos_id=args.eos_id, arrival=i if args.stagger else 0))
+            eos_id=args.eos_id, arrival=i if args.stagger else 0,
+            deadline=args.deadline))
     results = sched.run()
 
     for r in sorted(results, key=lambda r: r.uid):
         print(json.dumps({
             "uid": r.uid, "chains": len(r.lengths),
+            "status": r.status, "preempts": r.preempt_count,
             "generated": r.lengths.tolist(),
             "kv_reads": r.meter.kv_reads,
             "kv_reads_prefill": r.prefill_meter.kv_reads,
@@ -110,12 +129,14 @@ def main(argv=None):
             "peak_tokens": r.meter.peak_tokens,
             "peak_bytes": r.meter.peak_bytes,
             "ticks": [r.admitted_tick, r.finished_tick],
+            "latency_ticks": r.latency_ticks,
         }))
     print(json.dumps({
         "policy": args.policy, "cr": args.cr,
         "requests": len(results), "lanes": args.num_lanes,
         "scheduler_ticks": sched.ticks, "scheduler_steps": sched.steps,
     }))
+    print(json.dumps({"lifecycle": sched.lifecycle_stats()}))
     pool = sched.pool_stats()
     if pool is not None:
         print(json.dumps({"block_pool": pool}))

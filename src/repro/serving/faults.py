@@ -1,0 +1,279 @@
+"""Deterministic fault injection for the serving stack (the chaos harness).
+
+Robustness claims are only as strong as the faults they were tested under.
+This module gives the scheduler's chaos tests a seeded, replayable way to
+hurt a live serving trace at chosen ticks:
+
+* ``pool_shrink`` — reserve free pages in every paged block pool (as if a
+  co-tenant grabbed them), optionally releasing them at a later tick.  The
+  reservations are *ghost refs*: refcount bumps on pages that map to no
+  lane, tracked host-side so the conservation oracle stays checkable as
+  ``ref == recount(phys) + ghost``.
+* ``cow_storm`` — duplicate every page one lane currently maps (ghost refs
+  again), so the lane's next writes all take the copy-on-write slow path
+  and the pool drains at CoW speed.
+* ``nan_logits`` — poison a chosen lane's logits with NaN for one chunk,
+  exercising the scheduler's tick-boundary numeric tripwire.
+* ``stall`` — jump the scheduler clock forward, exercising deadlines and
+  arrival/backoff arithmetic.
+* ``preempt`` — force-preempt whatever request owns a lane, exercising the
+  snapshot→requeue→resume path without needing real pool pressure.
+
+Determinism: a :class:`FaultPlan` is a plain list of :class:`Fault` records;
+:meth:`FaultPlan.random` derives one from a seed.  Replaying the same plan
+against the same trace reproduces the same failure bit-for-bit (the
+scheduler is host-driven and greedy decoding carries no RNG stream).
+
+The injector's own device readbacks run under ``sanctioned("fault-inject")``
+— a tag deliberately *not* in ``hostsync.DEFAULT_ALLOW``: injection is a
+test-harness act, and an armed tripwire should attribute its syncs loudly
+rather than fold them into the serving budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hostsync import sanctioned
+from repro.core import policy as policy_lib
+
+KINDS = ("pool_shrink", "cow_storm", "nan_logits", "stall", "preempt")
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scheduled injury.
+
+    ``tick`` is the earliest scheduler tick the fault fires at (it fires
+    once, at the first tick boundary where ``scheduler.ticks >= tick``).
+    ``lane`` targets ``nan_logits`` / ``cow_storm`` / ``preempt`` (taken
+    modulo ``num_lanes``); ``blocks`` sizes ``pool_shrink`` (free pages
+    reserved per pool row); ``duration`` sizes ``stall`` (ticks skipped);
+    ``release`` optionally schedules the tick a shrink/storm's ghost refs
+    are returned to the pool."""
+
+    kind: str
+    tick: int
+    lane: int = 0
+    blocks: int = 0
+    duration: int = 0
+    release: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"one of {KINDS}")
+
+
+class FaultPlan:
+    """A deterministic schedule of :class:`Fault` records plus the host-side
+    ghost-ref ledger that keeps pool conservation checkable under injection.
+
+    The scheduler calls :meth:`on_tick` once per tick (before admission) and
+    :meth:`poison` once per chunk dispatch; :meth:`reapply` re-adds ghost
+    refs after any lifecycle op that recomputed ``ref = recount(phys)``
+    (gather / reclaim / prefix import), which would otherwise silently wipe
+    the injected pressure."""
+
+    def __init__(self, faults: Sequence[Fault] = ()):
+        self.faults: List[Fault] = sorted(faults, key=lambda f: f.tick)
+        self._fired = [False] * len(self.faults)
+        #: pooled_idx -> int32 ghost refcounts, shaped like that pool's
+        #: ``ref`` (iter_policy_caches order restricted to pooled caches)
+        self.ghosts: Dict[int, np.ndarray] = {}
+        self._releases: List[Tuple[int, Dict[int, np.ndarray]]] = []
+        self.log: List[Tuple[int, str]] = []
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def random(seed: int, *, lanes: int, horizon: int = 12,
+               max_faults: int = 3, paged: bool = True) -> "FaultPlan":
+        """A seeded plan: 1..max_faults faults over the first ``horizon``
+        ticks.  Pool faults are only drawn for paged states (they are no-ops
+        on fixed arenas, which would waste fuzz budget)."""
+        rng = np.random.default_rng(seed)
+        kinds = list(KINDS) if paged else ["nan_logits", "stall", "preempt"]
+        faults = []
+        for _ in range(int(rng.integers(1, max_faults + 1))):
+            kind = kinds[int(rng.integers(len(kinds)))]
+            tick = int(rng.integers(1, horizon))
+            if kind == "pool_shrink":
+                release = (tick + int(rng.integers(2, horizon))
+                           if rng.random() < 0.5 else None)
+                faults.append(Fault(kind, tick,
+                                    blocks=int(rng.integers(1, 5)),
+                                    release=release))
+            elif kind == "cow_storm":
+                faults.append(Fault(kind, tick,
+                                    lane=int(rng.integers(lanes)),
+                                    release=tick + int(rng.integers(2, 6))))
+            elif kind == "stall":
+                faults.append(Fault(kind, tick,
+                                    duration=int(rng.integers(1, 4))))
+            else:
+                faults.append(Fault(kind, tick,
+                                    lane=int(rng.integers(lanes))))
+        return FaultPlan(faults)
+
+    # -- ledger queries ------------------------------------------------------
+
+    def has_ghosts(self) -> bool:
+        return any(int(g.sum()) > 0 for g in self.ghosts.values())
+
+    def can_unblock(self) -> bool:
+        """True while a future injector action could *free* pool pages —
+        pending ghost releases, or unfired faults that schedule one.  The
+        scheduler's starvation detector must keep waiting through these
+        (a request blocked on ghost-held pages is waiting, not starved)."""
+        if self._releases:
+            return True
+        return any(f.release is not None and not self._fired[i]
+                   for i, f in enumerate(self.faults))
+
+    def ghost_total(self, idx: int) -> int:
+        g = self.ghosts.get(idx)
+        return 0 if g is None else int(g.sum())
+
+    # -- scheduler hooks -----------------------------------------------------
+
+    def on_tick(self, sched, results) -> None:
+        """Fire every due fault against ``sched`` (called once per tick,
+        before admission).  ``nan_logits`` is consumed by :meth:`poison` at
+        chunk dispatch instead; ``preempt`` stays pending until its target
+        lane is actually owned."""
+        for rel in list(self._releases):
+            tick, deltas = rel
+            if tick <= sched.ticks:
+                self._releases.remove(rel)
+                self._bump(sched, deltas, sign=-1)
+                for i, d in deltas.items():
+                    self.ghosts[i] = self.ghosts[i] - d
+                self.log.append((sched.ticks, "release ghost refs"))
+        for i, f in enumerate(self.faults):
+            if self._fired[i] or f.tick > sched.ticks \
+                    or f.kind == "nan_logits":
+                continue
+            if f.kind == "preempt":
+                lane = f.lane % sched.num_lanes
+                victim = sched.owner[lane]
+                if victim is None:
+                    continue              # pending until the lane is owned
+                self._fired[i] = True
+                self.log.append((sched.ticks, f"force-preempt lane {lane}"))
+                sched._preempt(victim, results, reason="fault")
+            elif f.kind == "stall":
+                self._fired[i] = True
+                self.log.append((sched.ticks, f"stall {f.duration} ticks"))
+                sched.ticks += f.duration
+            elif f.kind == "pool_shrink":
+                self._fired[i] = True
+                self._shrink(sched, f)
+            elif f.kind == "cow_storm":
+                self._fired[i] = True
+                self._storm(sched, f)
+
+    def poison(self, tick: int, num_lanes: int) -> Optional[np.ndarray]:
+        """The (B,) NaN mask for the chunk dispatched at ``tick`` — None when
+        no ``nan_logits`` fault is due (the common case: the scheduler then
+        passes a cached all-False mask, and the jitted select is identity)."""
+        out = None
+        for i, f in enumerate(self.faults):
+            if self._fired[i] or f.kind != "nan_logits" or f.tick > tick:
+                continue
+            self._fired[i] = True
+            if out is None:
+                out = np.zeros((num_lanes,), bool)
+            out[f.lane % num_lanes] = True
+            self.log.append((tick, f"nan logits lane {f.lane % num_lanes}"))
+        return out
+
+    def reapply(self, state):
+        """Re-add ghost refs after an op that recomputed ``ref`` from
+        ``phys`` (fork gather / reclaim / prefix import all call
+        ``set_refcounts``, which sees only real mappings)."""
+        def fn(idx, cache):
+            g = self.ghosts.get(idx)
+            if g is None or not int(g.sum()):
+                return cache
+            pool = cache.pool
+            return dataclasses.replace(
+                cache,
+                pool=dataclasses.replace(pool, ref=pool.ref + jnp.asarray(g)))
+        return policy_lib.map_pooled_caches(state, fn)
+
+    # -- injectors -----------------------------------------------------------
+
+    def _pooled_host(self, sched, want_phys: bool):
+        """Host copies of every pooled cache's (ref[, phys]) — the injector's
+        sanctioned readback."""
+        out = []
+        with sanctioned("fault-inject"):
+            for pc in policy_lib.iter_policy_caches(sched.state):
+                pool = getattr(pc.cache, "pool", None)
+                if pool is None:
+                    continue
+                ref = np.asarray(pool.ref)
+                phys = np.asarray(pc.cache.phys) if want_phys else None
+                out.append((ref, phys))
+        return out
+
+    def _bump(self, sched, deltas: Dict[int, np.ndarray], sign: int) -> None:
+        def fn(idx, cache):
+            d = deltas.get(idx)
+            if d is None:
+                return cache
+            pool = cache.pool
+            return dataclasses.replace(
+                cache, pool=dataclasses.replace(
+                    pool, ref=pool.ref + sign * jnp.asarray(d)))
+        sched.state = policy_lib.map_pooled_caches(sched.state, fn)
+
+    def _charge(self, sched, f: Fault, deltas: Dict[int, np.ndarray],
+                what: str) -> None:
+        if not deltas:
+            self.log.append((sched.ticks, f"{what}: nothing to grab"))
+            return
+        self._bump(sched, deltas, sign=+1)
+        for i, d in deltas.items():
+            self.ghosts[i] = self.ghosts.get(i, np.zeros_like(d)) + d
+        if f.release is not None:
+            self._releases.append((f.release, deltas))
+        self.log.append((sched.ticks, what))
+
+    def _shrink(self, sched, f: Fault) -> None:
+        """Reserve up to ``f.blocks`` *free* pages per pool row: a co-tenant
+        shrinking the effective pool out from under the scheduler."""
+        deltas: Dict[int, np.ndarray] = {}
+        for idx, (ref, _) in enumerate(self._pooled_host(sched, False)):
+            flat = ref.reshape(-1, ref.shape[-1])
+            grab = np.zeros_like(flat)
+            for row in range(flat.shape[0]):
+                free = np.flatnonzero(flat[row] == 0)[:f.blocks]
+                grab[row, free] = 1
+            if grab.any():
+                deltas[idx] = grab.reshape(ref.shape).astype(ref.dtype)
+        self._charge(sched, f, deltas,
+                     f"pool_shrink {f.blocks} pages/row")
+
+    def _storm(self, sched, f: Fault) -> None:
+        """Ghost-share every page one lane maps, so the lane's next writes
+        all CoW-copy (worst-case post-fork divergence, on demand)."""
+        deltas: Dict[int, np.ndarray] = {}
+        for idx, (ref, phys) in enumerate(self._pooled_host(sched, True)):
+            lane = f.lane % phys.shape[-3]
+            flat_ref = np.zeros_like(ref).reshape(-1, ref.shape[-1])
+            lane_map = phys[..., lane, :, :].reshape(flat_ref.shape[0], -1)
+            for row in range(flat_ref.shape[0]):
+                mapped = lane_map[row][lane_map[row] >= 0]
+                ids, cnt = np.unique(mapped, return_counts=True)
+                flat_ref[row, ids] += cnt.astype(flat_ref.dtype)
+            add = flat_ref.reshape(ref.shape)
+            if add.any():
+                deltas[idx] = add
+        self._charge(sched, f, deltas,
+                     f"cow_storm lane {f.lane}")

@@ -97,15 +97,18 @@ def snapshot_nbytes(snapshot: Any) -> int:
                    for a in jax.tree_util.tree_leaves(snapshot)))
 
 
-def to_host(tree: Any) -> Any:
+def to_host(tree: Any, tag: str = "prefix-demote") -> Any:
     """Device→host: numpy leaves, releasing device buffers for storage.
 
-    This is the prefix cache's only d2h funnel — the *lazy demotion* of a
-    hot-tier snapshot to the host LRU (plus cold-tier inserts).  It is the
-    one sanctioned d2h inside the serving loop; everything else must stay
-    on device (``repro.analysis.hostsync`` enforces this)."""
+    This is the serving stack's only snapshot d2h funnel — the *lazy
+    demotion* of a hot-tier snapshot to the host LRU (plus cold-tier
+    inserts), and — under ``tag="preempt-snapshot"`` — the scheduler's
+    preemption path materializing an evicted lane's state for later resume.
+    It is the one sanctioned snapshot d2h inside the serving loop;
+    everything else must stay on device (``repro.analysis.hostsync``
+    enforces this)."""
     from repro.analysis.hostsync import sanctioned
-    with sanctioned("prefix-demote"):
+    with sanctioned(tag):
         return jax.tree_util.tree_map(lambda a: np.asarray(a),
                                       jax.device_get(tree))
 

@@ -41,17 +41,42 @@ replaces the lockstep fixed batch with a real scheduler:
   :class:`BudgetMeter`\\ s (prefill phase / decode phase) fed only by its own
   lanes' per-step ``live_tokens`` / ``reads_tokens``.  Finished lanes
   contribute zero reads; idle lanes are never attributed to anyone.
+* **Failure semantics & preemption.**  Oversubscribed paged pools used to
+  fail *silently*: :func:`repro.core.block_pool.alloc` latches ``exhausted``
+  and drops the write, and the victim lane keeps decoding against zeroed
+  keys.  The scheduler now defines what happens instead.  Before each chunk
+  it checks that the active set's worst-case pool demand (plus any
+  fault-injected ghost pages) still fits the pool — an exact bound, pure
+  host arithmetic — and when it does not, **preempts** the youngest
+  request: every lane's full decode state is
+  snapshotted to host through the prefix-cache export machinery
+  (:meth:`_preempt`), its lanes and pool pages are freed, and it requeues
+  with exponential backoff and a bounded retry count — on re-admission it
+  resumes *bitwise-exactly* from the snapshot, zero prompt re-prefill
+  (:meth:`_resume`).  The tick boundary also arms two tripwires: a NaN/Inf
+  logit check that **fails** the poisoned request (reclaiming its lanes
+  instead of letting it squat), and an ``exhausted``-latch backstop that
+  fails every request whose chunk raced a mid-chunk exhaustion (post-hoc
+  attribution of a dropped write is impossible, so nobody keeps tokens from
+  that chunk).  Every request ends in a definite
+  :attr:`RequestResult.status`: ``ok`` (possibly after N preemptions —
+  ``preempt_count``), ``failed``, or ``timeout`` (per-request deadline
+  ticks).  docs/serving.md "Failure semantics & preemption" is the contract;
+  ``serving/faults.py`` is the chaos harness that proves it.
 """
 from __future__ import annotations
 
+import dataclasses
+import math
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.hostsync import sanctioned
+from repro.core import block_pool
 from repro.core import policy as policy_lib
 from repro.core.hyperscale import BudgetMeter
 from repro.models import transformer as tfm
@@ -66,7 +91,11 @@ class Request:
     ``width`` > 1 asks for W parallel hyper-scaling chains sharing one
     prefill.  ``eos_id`` enables early exit (None = decode the full budget).
     ``arrival`` delays admission until that scheduler tick (staggered-arrival
-    simulation for benchmarks/tests)."""
+    simulation for benchmarks/tests).  ``deadline`` bounds end-to-end latency
+    in ticks from arrival: a request still running (or still queued) past it
+    times out with a definite status instead of squatting lanes forever.
+    ``max_preempts`` bounds how often the scheduler may evict-and-resume this
+    request before giving up and failing it."""
 
     uid: int
     prompt: np.ndarray            # (T0,) int32
@@ -74,10 +103,19 @@ class Request:
     width: int = 1
     eos_id: Optional[int] = None
     arrival: int = 0
+    deadline: Optional[int] = None
+    max_preempts: int = 3
 
 
 @dataclass
 class RequestResult:
+    """``status`` is always definite: ``"ok"`` (``preempt_count`` > 0 means
+    preempted×N then completed — tokens still bitwise-equal to an
+    uninterrupted run), ``"failed"`` (pool exhaustion backstop, NaN/Inf
+    logits, retry budget exhausted, or unservable under injected pressure),
+    or ``"timeout"`` (deadline ticks exceeded).  ``latency_ticks`` is
+    end-to-end (arrival → finished), queueing and backoff included."""
+
     uid: int
     tokens: np.ndarray            # (W, max_new) int32, padded after EOS
     lengths: np.ndarray           # (W,) generated tokens per chain (incl. EOS)
@@ -86,6 +124,9 @@ class RequestResult:
     decode_meter: BudgetMeter
     admitted_tick: int = 0
     finished_tick: int = 0
+    status: str = "ok"
+    preempt_count: int = 0
+    latency_ticks: int = 0
 
 
 class _ReqState:
@@ -100,11 +141,20 @@ class _ReqState:
         self.prefill_meter = BudgetMeter()
         self.decode_meter = BudgetMeter()
         self.pad_id = pad_id
-        self.admitted_tick = 0
+        self.admitted_tick = -1                # -1 = never admitted
+        self.status = "ok"
+        self.preempt_count = 0
+        self.resume_at = 0                     # backoff: earliest re-admission
+        # preemption snapshot: per-lane host state trees + host lane scalars
+        self.snaps: Optional[List[Any]] = None
+        self.saved: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def done(self) -> bool:
         return bool(self.lanes) and all(self.chain_done)
+
+    def ready(self, tick: int) -> bool:
+        return self.req.arrival <= tick and self.resume_at <= tick
 
     def result(self, peak_bytes: float, finished_tick: int) -> RequestResult:
         w, m = self.req.width, self.req.max_new
@@ -119,7 +169,9 @@ class _ReqState:
             uid=self.req.uid, tokens=toks, lengths=lens,
             meter=self.prefill_meter.merge_sequential(self.decode_meter),
             prefill_meter=self.prefill_meter, decode_meter=self.decode_meter,
-            admitted_tick=self.admitted_tick, finished_tick=finished_tick)
+            admitted_tick=self.admitted_tick, finished_tick=finished_tick,
+            status=self.status, preempt_count=self.preempt_count,
+            latency_ticks=finished_tick - self.req.arrival)
 
 
 def make_chunk_fn(arch, *, use_kernel: bool = False,
@@ -133,10 +185,11 @@ def make_chunk_fn(arch, *, use_kernel: bool = False,
     prompt length, and EOS timing never retrace."""
 
     def chunk_fn(params, state, feed, feed_valid, cur_tok, pos, decoding,
-                 finished, lane_eos, budget_left, rng):
+                 finished, lane_eos, budget_left, rng, poison):
         # feed/feed_valid: (B, C); every other lane array: (B,)
         def body(carry, xs):
-            state, cur_tok, pos, finished, emit_cnt, rng, last_logits = carry
+            (state, cur_tok, pos, finished, emit_cnt, rng, last_logits,
+             bad) = carry
             tok_feed, fv = xs
             prefill_now = fv & ~decoding & ~finished
             decode_now = decoding & ~finished & (emit_cnt < budget_left)
@@ -146,6 +199,14 @@ def make_chunk_fn(arch, *, use_kernel: bool = False,
             logits, state, aux = tfm.decode_step(
                 params, token, state, arch, pos,
                 use_kernel=use_kernel, active=active)
+            # fault injection + numeric tripwire: ``poison`` NaNs chosen
+            # lanes' logits for this chunk (the chaos harness); ``bad``
+            # latches any non-finite logit row an *active* lane produced —
+            # injected or real — for the scheduler's tick-boundary check.
+            # All-False poison is an identity select: the common path is
+            # bitwise-unchanged.
+            logits = jnp.where(poison[:, None], jnp.float32(jnp.nan), logits)
+            bad = bad | (active & ~jnp.all(jnp.isfinite(logits), axis=-1))
             if temperature > 0.0:
                 nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
             else:
@@ -158,17 +219,20 @@ def make_chunk_fn(arch, *, use_kernel: bool = False,
             emit_cnt = emit_cnt + decode_now.astype(jnp.int32)
             pos = pos + active.astype(jnp.int32)
             last_logits = jnp.where(active[:, None], logits, last_logits)
-            return ((state, cur_tok, pos, finished, emit_cnt, rng, last_logits),
+            return ((state, cur_tok, pos, finished, emit_cnt, rng,
+                     last_logits, bad),
                     (emitted, aux["live_tokens"], aux["reads_tokens"], active))
 
         b = feed.shape[0]
         carry0 = (state, cur_tok, pos, finished, jnp.zeros((b,), jnp.int32),
-                  rng, jnp.zeros((b, arch.padded_vocab), jnp.float32))
+                  rng, jnp.zeros((b, arch.padded_vocab), jnp.float32),
+                  jnp.zeros((b,), bool))
         carry, ys = jax.lax.scan(body, carry0, (feed.T, feed_valid.T))
-        state, cur_tok, pos, finished, emit_cnt, rng, last_logits = carry
+        (state, cur_tok, pos, finished, emit_cnt, rng, last_logits,
+         bad) = carry
         emitted, live, reads, act = ys                 # each (C, B)
         return (state, cur_tok, pos, finished, emit_cnt, rng, last_logits,
-                emitted, live, reads, act)
+                emitted, live, reads, act, bad)
 
     return chunk_fn
 
@@ -185,10 +249,32 @@ class Scheduler:
                  gather_jit=None, use_kernel: bool = False,
                  temperature: float = 0.0, seed: int = 0, pad_id: int = 0,
                  prefix_cache: Optional[PrefixCache] = None,
-                 export_jit=None, import_jit=None):
+                 export_jit=None, import_jit=None, faults=None,
+                 on_pressure: str = "preempt", oversub: float = 1.0):
         self.arch, self.params, self.policy = arch, params, policy
         self.num_lanes, self.max_len, self.chunk = num_lanes, max_len, chunk
         self.pad_id = pad_id
+        # failure-semantics knobs: ``faults`` is a serving.faults.FaultPlan
+        # (tests/benchmarks only); ``on_pressure`` picks what pool pressure
+        # does ("preempt" = evict-and-resume, "ignore" = the seed behaviour —
+        # silent dropped writes, kept only to demonstrate the corruption);
+        # ``oversub`` > 1 admits against 1/oversub of worst-case pool demand
+        # (the documented oversubscription contract preemption absorbs).
+        if on_pressure not in ("preempt", "ignore"):
+            raise ValueError(f"on_pressure must be 'preempt' or 'ignore', "
+                             f"got {on_pressure!r}")
+        if oversub < 1.0:
+            raise ValueError("oversub < 1 would reserve more than worst-case "
+                             "demand; shrink pool_blocks instead")
+        self.faults = faults
+        self.on_pressure = on_pressure
+        self.oversub = float(oversub)
+        # lifecycle observability (lifecycle_stats / pool_stats / serve.py)
+        self.preemptions = 0
+        self.resumes = 0
+        self.failures = 0
+        self.timeouts = 0
+        self.completed = 0
         self._chunk_jit = chunk_jit or jax.jit(make_chunk_fn(
             arch, use_kernel=use_kernel, temperature=temperature))
         self._reset_jit = reset_jit or jax.jit(self._reset_fn,
@@ -254,26 +340,66 @@ class Scheduler:
             raise ValueError("empty prompt: nothing to sample from")
         if len(req.prompt) + req.max_new > self.max_len:
             raise ValueError("prompt + max_new exceeds scheduler max_len")
+        # a request whose worst-case pool demand exceeds the pool can never
+        # be admitted (it would spin the run loop forever) — and mid-flight
+        # it could exhaust the pool solo, which no victim selection can fix.
+        # Rejecting here also guarantees the solo-fit invariant the
+        # preemption layer relies on: one active request alone always fits.
+        demand = self._lane_pool_demand(len(req.prompt) + req.max_new)
+        for i, d in enumerate(demand):
+            if req.width * d > self._pool_descs[i][3]:
+                raise ValueError(
+                    f"request {req.uid}: worst-case pool demand "
+                    f"{req.width * d} blocks exceeds pool {i} capacity "
+                    f"{self._pool_descs[i][3]} — unservable at any load")
         self.queue.append(_ReqState(req, self.pad_id))
 
     def pool_stats(self) -> Optional[Dict[str, Any]]:
         """Paged-pool observability: live/free/allocated blocks, CoW share
         counts, fragmentation, high-water mark — aggregated over every pooled
         cache in the decode state (host-side sync; None when nothing is
-        paged).  Surfaced by launch/serve.py's run summary."""
-        return policy_lib.state_pool_stats(self.state)
+        paged), plus the scheduler's request-lifecycle counters under
+        ``"lifecycle"``.  Surfaced by launch/serve.py's run summary."""
+        out = policy_lib.state_pool_stats(self.state)
+        if out is not None:
+            out["lifecycle"] = self.lifecycle_stats()
+        return out
+
+    def lifecycle_stats(self) -> Dict[str, int]:
+        """Preemption / failure observability: how this scheduler's requests
+        left the system.  ``preemptions`` counts evictions (a request can
+        contribute several), ``resumes`` successful snapshot re-admissions;
+        ``completed``/``failures``/``timeouts`` partition finished requests
+        by terminal status."""
+        return {"preemptions": self.preemptions, "resumes": self.resumes,
+                "completed": self.completed, "failures": self.failures,
+                "timeouts": self.timeouts}
 
     def run(self) -> List[RequestResult]:
-        """Run the queue to completion; results in completion order."""
+        """Run the queue to completion; results in completion order.
+
+        Termination is unconditional: every iteration either advances the
+        clock (idle or chunk tick) or retires a request (completion, failure,
+        timeout, retry exhaustion), and a queue that can never admit again —
+        idle lanes, every request ready, no pending fault release — is
+        failed out rather than spun on (see :meth:`_starved`)."""
         results: List[RequestResult] = []
         while self.queue or self.active_reqs:
+            if self.faults is not None:
+                self.faults.on_tick(self, results)
+            self._expire_queued(results)
             # fork before admitting: freed lanes must reach held hyperscale
             # requests before new admissions can take them
             self._fork_ready()
             self._admit()
             self._fork_ready()
             if not any(o is not None for o in self.owner):
-                # nothing admitted yet (future arrivals only): advance time
+                if not self.queue and not self.active_reqs:
+                    break
+                if self._starved():
+                    self._fail_starved(results)
+                    continue
+                # nothing admitted yet (future arrivals / backoff): tick time
                 self.ticks += 1
                 continue
             self._tick(results)
@@ -294,24 +420,38 @@ class Scheduler:
         return [h * min(-(-tokens // bp), nb)
                 for (h, nb, bp, _) in self._pool_descs]
 
+    def _reserved_demand(self, req: Request) -> List[int]:
+        """Pool blocks admission reserves for ``req``: worst case scaled by
+        the oversubscription factor.  ``oversub == 1`` (the default) reserves
+        the full width-W worst case — a fixed-arena-sound contract under
+        which the pool can *never* exhaust via the public API (the CoW fork
+        shares pages, so divergence only grows demand toward the reserved
+        bound, never past it).  ``oversub > 1`` is the explicit contract
+        change: admit more, and let the preemption layer absorb the overflow
+        when divergence actually materializes."""
+        return [math.ceil(req.width * d / self.oversub)
+                for d in self._lane_pool_demand(
+                    len(req.prompt) + req.max_new)]
+
     def _pool_fits(self, req: Request) -> bool:
         """Byte-budget admission: would admitting ``req`` let total
-        worst-case pool demand exceed any pool's block count?  Host-side
+        *reserved* pool demand exceed any pool's block count?  Host-side
         static arithmetic — no device sync.  With the default provisioning
         (``pool_blocks = B*H*NB``) this can never bind (lane demand is at
         most ``H*NB``), so fixed-arena-equivalent configs admit identically;
         an operator shrinks ``pool_blocks`` to oversubscribe lanes against
-        live-token footprint (the hyper-scaling capacity win)."""
+        live-token footprint (the hyper-scaling capacity win), and
+        ``oversub > 1`` additionally under-reserves worst-case demand (see
+        :meth:`_reserved_demand` — preemption absorbs what materializes)."""
         if not self._pool_descs:
             return True
-        demand = self._lane_pool_demand(len(req.prompt) + req.max_new)
+        demand = self._reserved_demand(req)
         reserved = [0] * len(self._pool_descs)
         for r in self.active_reqs:
-            d = self._lane_pool_demand(len(r.req.prompt) + r.req.max_new)
+            d = self._reserved_demand(r.req)
             for i in range(len(reserved)):
-                reserved[i] += r.req.width * d[i]
-        return all(reserved[i] + req.width * demand[i]
-                   <= self._pool_descs[i][3]
+                reserved[i] += d[i]
+        return all(reserved[i] + demand[i] <= self._pool_descs[i][3]
                    for i in range(len(self._pool_descs)))
 
     def _admit(self) -> None:
@@ -323,22 +463,46 @@ class Scheduler:
         wait in :meth:`_fork_ready` deadlock- and starvation-free: held
         requests' lanes can never be re-admitted out from under them.  Paged
         states add a second gate (:meth:`_pool_fits`): admission reserves
-        worst-case pool blocks too, so an oversubscribed lane count can never
-        deadlock the shared pool."""
+        worst-case pool blocks too (scaled by ``oversub``), so an
+        oversubscribed lane count can never deadlock the shared pool.
+
+        Preempted requests re-admit through the same scan once their backoff
+        expires, with one extra gate: actual free pages must cover their full
+        unscaled demand (a resumed victim that would land straight back
+        under pressure ping-pongs forever — better to keep waiting)."""
         # idle lanes are always pristine (fresh at construction; _tick
         # reclaims every lane of a completing request, fork targets included;
         # chunk steps never mutate inactive lanes) — no reset needed here
-        idle = self._idle_lanes()
-        while idle:
+        while True:
+            idle = self._idle_lanes()
+            if not idle:
+                break
             reserved = sum(r.req.width - len(r.lanes)
                            for r in self.active_reqs)
-            nxt = next((r for r in self.queue
-                        if r.req.arrival <= self.ticks
-                        and r.req.width <= len(idle) - reserved
-                        and self._pool_fits(r.req)), None)
+            avail = len(idle) - reserved
+            free = None                  # lazy free-page readback, ≤1 / pass
+            nxt = None
+            for r in self.queue:
+                if not r.ready(self.ticks) or r.req.width > avail \
+                        or not self._pool_fits(r.req):
+                    continue
+                if r.snaps is not None and self._pool_descs \
+                        and self._pressure_possible():
+                    if free is None:
+                        free = self._free_blocks()
+                    need = self._lane_pool_demand(
+                        len(r.req.prompt) + r.req.max_new)
+                    if any(free[i] < len(r.snaps) * need[i]
+                           for i in range(len(need))):
+                        continue         # resume free-gate: wait it out
+                nxt = r
+                break
             if nxt is None:
                 break
             self.queue.remove(nxt)
+            if nxt.snaps is not None:
+                self._resume(nxt, idle)
+                continue
             lane = idle.pop(0)
             self.owner[lane] = nxt
             self.chain_of[lane] = 0
@@ -350,6 +514,206 @@ class Scheduler:
             self.finished[lane] = False
             self.lane_eos[lane] = -1 if nxt.req.eos_id is None else nxt.req.eos_id
             self._import_prefix(nxt, lane)
+
+    # -- preemption, failure semantics, pool pressure ------------------------
+
+    def _pressure_possible(self) -> bool:
+        """Can the pool come under pressure at all?  With the default sound
+        admission (``oversub == 1``) and no fault injector, reserved demand
+        bounds real demand and exhaustion is impossible — every pressure
+        readback and preemption check is skipped, so the sound path pays
+        zero extra host syncs."""
+        return self.faults is not None or self.oversub > 1.0
+
+    def _free_blocks(self) -> List[int]:
+        """Free pages per pooled descriptor, worst row over stacked
+        superblocks (each superblock row allocates independently, so the
+        scarcest row binds first).  A ``sanctioned("pool-pressure")``
+        readback — only taken when :meth:`_pressure_possible`."""
+        out = []
+        with sanctioned("pool-pressure"):
+            for pc in policy_lib.iter_policy_caches(self.state):
+                pool = getattr(pc.cache, "pool", None)
+                if pool is None:
+                    continue
+                ref = np.asarray(pool.ref)
+                flat = ref.reshape(-1, ref.shape[-1])
+                out.append(int((flat == 0).sum(axis=-1).min()))
+        return out
+
+    def _ghost_rows(self) -> List[int]:
+        """Worst-row injector-held ghost pages per pooled descriptor (all
+        zero without a fault plan) — pages reserved by nobody the scheduler
+        can evict, so they shrink the effective pool."""
+        out = [0] * len(self._pool_descs)
+        if self.faults is None:
+            return out
+        for i in range(len(out)):
+            g = self.faults.ghosts.get(i)
+            if g is not None:
+                out[i] = int(np.asarray(g).reshape(-1, g.shape[-1])
+                             .sum(axis=-1).max())
+        return out
+
+    def _relieve_pressure(self, results: List[RequestResult]) -> None:
+        """Preemptive eviction at the tick boundary: while the worst-case
+        pool demand of the active set (plus injector-held ghost pages) does
+        not fit the pool, preempt the youngest active request (latest
+        admission: its eviction wastes the least finished work, and FIFO
+        order keeps the oldest request making progress — no starvation).
+
+        The check is exact, not heuristic: a request never holds more pages
+        than its worst-case demand (logical blocks cap retention; a CoW copy
+        replaces a mapping, it doesn't add one), so an active set whose
+        worst cases fit can never exhaust the pool mid-chunk — the same
+        bound :meth:`submit` enforces for a single request.  Pure host
+        arithmetic over the admission descriptors and the host-side ghost
+        ledger: the sound path costs zero device syncs."""
+        ghost = self._ghost_rows()
+        while self.active_reqs:
+            total = [0] * len(self._pool_descs)
+            for r in self.active_reqs:
+                d = self._lane_pool_demand(
+                    len(r.req.prompt) + r.req.max_new)
+                w = max(len(r.lanes), r.req.width)
+                for i in range(len(total)):
+                    total[i] += w * d[i]
+            if all(total[i] + ghost[i] <= self._pool_descs[i][3]
+                   for i in range(len(total))):
+                return
+            victim = max(self.active_reqs,
+                         key=lambda r: (r.admitted_tick, r.req.uid))
+            self._preempt(victim, results)
+
+    def _preempt(self, r: _ReqState, results: List[RequestResult],
+                 reason: str = "pool pressure") -> None:
+        """Evict ``r`` without corrupting it: snapshot every lane's complete
+        decode state to host (the same per-policy export the prefix cache's
+        cold tier round-trips bitwise), free its lanes and pool pages, and
+        requeue with exponential backoff.  Chains, meters, and consumed
+        prompt ride the host-side request state, so resume re-prefills
+        nothing.  Past ``max_preempts`` the request fails instead — retries
+        are bounded, statuses definite."""
+        r.preempt_count += 1
+        self.preemptions += 1
+        lanes = list(r.lanes)
+        give_up = r.preempt_count > r.req.max_preempts
+        if not give_up:
+            r.snaps = [prefix_cache_lib.to_host(
+                self._export_jit(self.state, jnp.int32(lane)),
+                tag="preempt-snapshot") for lane in lanes]
+            r.saved = {
+                "pos": self.pos[lanes].copy(),
+                "cur_tok": self.cur_tok[lanes].copy(),
+                "decoding": self.decoding[lanes].copy(),
+                "finished": self.finished[lanes].copy(),
+                "lane_eos": self.lane_eos[lanes].copy(),
+            }
+        self.active_reqs.remove(r)
+        self._release_lanes(r, lanes)
+        if give_up:
+            r.status = "failed"
+            self.failures += 1
+            results.append(r.result(self._req_peak(len(lanes)), self.ticks))
+        else:
+            r.resume_at = self.ticks + (1 << (r.preempt_count - 1))
+            self.queue.append(r)
+
+    def _resume(self, r: _ReqState, idle: List[int]) -> None:
+        """Re-admit a preempted request from its host snapshots: import each
+        lane's snapshot into a pristine lane (zero prompt re-prefill),
+        restore the host lane scalars, and continue exactly where the
+        preemption stopped.  Greedy decoding carries no RNG stream, so the
+        continuation is bitwise-equal to the uninterrupted run (ref
+        attention; the kernel's paged table order is reassociation-sensitive
+        — see docs/serving.md)."""
+        lanes = idle[:len(r.snaps)]
+        for j, lane in enumerate(lanes):
+            self.state = self._import_jit(self.state, r.snaps[j],
+                                          jnp.int32(lane))
+            self._reapply_ghosts()
+            self.owner[lane] = r
+            self.chain_of[lane] = j
+            self.pos[lane] = r.saved["pos"][j]
+            self.cur_tok[lane] = r.saved["cur_tok"][j]
+            self.decoding[lane] = r.saved["decoding"][j]
+            self.finished[lane] = r.saved["finished"][j]
+            self.lane_eos[lane] = r.saved["lane_eos"][j]
+        r.lanes = list(lanes)
+        r.snaps = None
+        r.saved = None
+        self.active_reqs.append(r)
+        self.resumes += 1
+
+    def _retire(self, r: _ReqState, status: str,
+                results: List[RequestResult]) -> None:
+        """Terminal non-ok transition: reclaim lanes + pool pages, count,
+        emit the result.  The failed/timed-out request stops squatting the
+        arena immediately."""
+        r.status = status
+        if status == "timeout":
+            self.timeouts += 1
+        else:
+            self.failures += 1
+        self.active_reqs.remove(r)
+        lanes = list(r.lanes)
+        self._release_lanes(r, lanes)
+        results.append(r.result(self._req_peak(len(lanes)), self.ticks))
+
+    def _release_lanes(self, r: _ReqState, lanes: List[int]) -> None:
+        reclaim = np.zeros((self.num_lanes,), bool)
+        for lane in lanes:
+            self.owner[lane] = None
+            reclaim[lane] = True
+            self.decoding[lane] = False
+            self.finished[lane] = False
+            self.pos[lane] = 0
+            self.cur_tok[lane] = 0
+            self.lane_eos[lane] = -1
+        r.lanes = []
+        self._reset(reclaim)
+
+    def _req_peak(self, n_lanes: int) -> float:
+        return self.peak_bytes * n_lanes / self.num_lanes
+
+    def _reapply_ghosts(self) -> None:
+        # lifecycle ops (gather/reclaim/import) recompute ref = recount(phys),
+        # which would silently drop fault-injected ghost refs — re-add them so
+        # injected pool pressure survives the ops it is meant to stress
+        if self.faults is not None and self.faults.has_ghosts():
+            self.state = self.faults.reapply(self.state)
+
+    def _expire_queued(self, results: List[RequestResult]) -> None:
+        """Deadline enforcement for requests still *waiting* (never admitted,
+        or preempted and backing off): past the deadline they time out
+        without ever touching a lane."""
+        for r in list(self.queue):
+            dl = r.req.deadline
+            if dl is not None and self.ticks - r.req.arrival > dl:
+                self.queue.remove(r)
+                r.status = "timeout"
+                self.timeouts += 1
+                results.append(r.result(0.0, self.ticks))
+
+    def _starved(self) -> bool:
+        """True when nothing can ever change: all lanes idle, every queued
+        request past arrival and backoff, the admission scan just admitted
+        none of them, and no pending fault release can free the pages they
+        are waiting on.  (Unreachable without injected ghost pages: with
+        idle lanes and an empty pool the solo-fit bound admits any submitted
+        request.)"""
+        if any(not r.ready(self.ticks) for r in self.queue):
+            return False
+        if self.faults is not None and self.faults.can_unblock():
+            return False
+        return True
+
+    def _fail_starved(self, results: List[RequestResult]) -> None:
+        for r in list(self.queue):
+            self.queue.remove(r)
+            r.status = "failed"
+            self.failures += 1
+            results.append(r.result(0.0, self.ticks))
 
     def _import_prefix(self, r: _ReqState, lane: int) -> None:
         """Longest-cached-prefix import: the lane resumes at token boundary L
@@ -366,8 +730,17 @@ class Scheduler:
         hit = self.prefix_cache.lookup(self.signature, r.req.prompt)
         if hit is None:
             return
+        if self._pool_descs and self._pressure_possible():
+            # a paged prefix import bulk-allocates the whole boundary's pages
+            # up front; under pressure that can exhaust the pool mid-import —
+            # degrade to a cold prefill instead (pays reads, stays correct)
+            free = self._free_blocks()
+            need = self._lane_pool_demand(hit.length)
+            if any(free[i] < need[i] for i in range(len(need))):
+                return
         self.state = self._import_jit(self.state, hit.snapshot,
                                       jnp.int32(lane))
+        self._reapply_ghosts()
         self.pos[lane] = hit.length
         r.consumed = hit.length
         r.prefill_meter.observe_saved_reads(hit.reads_cum)
@@ -429,6 +802,7 @@ class Scheduler:
                 self.chain_of[lane] = len(r.lanes)
                 r.lanes.append(lane)
             self.state = self._gather_jit(self.state, jnp.asarray(src))
+            self._reapply_ghosts()
             self.pos[r.lanes] = self.pos[r.lanes[0]]
             self.lane_eos[r.lanes] = self.lane_eos[r.lanes[0]]
             self._start_decode(r)
@@ -462,6 +836,15 @@ class Scheduler:
         r.hold_logits = None
 
     def _tick(self, results: List[RequestResult]) -> None:
+        # preemptive pressure relief BEFORE dispatch: post-hoc preemption
+        # cannot be bitwise (writes were already dropped mid-chunk), so the
+        # margin check runs at the boundary, where snapshots are still exact
+        if self.on_pressure == "preempt" and self._pool_descs \
+                and self._pressure_possible():
+            self._relieve_pressure(results)
+            if not self.active_reqs:
+                self.ticks += 1        # everything evicted: time still passes
+                return
         b, c = self.num_lanes, self.chunk
         feed = np.zeros((b, c), np.int32)
         feed_valid = np.zeros((b, c), bool)
@@ -480,16 +863,24 @@ class Scheduler:
                     feed[lane, :take] = r.req.prompt[r.consumed:r.consumed + take]
                     feed_valid[lane, :take] = True
                     prefill_take[lane] = take
+        poison = (self.faults.poison(self.ticks, b)
+                  if self.faults is not None else None)
+        if poison is None:
+            poison = np.zeros((b,), bool)
 
         out = self._chunk_jit(
             self.params, self.state, jnp.asarray(feed), jnp.asarray(feed_valid),
             jnp.asarray(self.cur_tok), jnp.asarray(self.pos),
             jnp.asarray(self.decoding), jnp.asarray(self.finished),
-            jnp.asarray(self.lane_eos), jnp.asarray(budget_left), self.rng)
+            jnp.asarray(self.lane_eos), jnp.asarray(budget_left), self.rng,
+            jnp.asarray(poison))
         (self.state, cur_tok, pos, finished, _, self.rng, last_logits,
-         emitted, live, reads, act) = out
+         emitted, live, reads, act, bad) = out
         # the scheduler's ONE sanctioned host sync: once per chunk, never
-        # per step (the host-sync tripwire in repro.analysis enforces this)
+        # per step (the host-sync tripwire in repro.analysis enforces this).
+        # The failure tripwires ride the same boundary: the chunk's latched
+        # bad-logit mask and the pool's exhausted latch are chunk outputs,
+        # not extra stalls.
         with sanctioned("tick-boundary"):
             self.cur_tok = np.array(cur_tok)   # writable host copies
             self.pos = np.array(pos)
@@ -498,8 +889,33 @@ class Scheduler:
             live = np.asarray(live)
             reads = np.asarray(reads)
             act = np.asarray(act)
+            bad = np.asarray(bad)              # (B,) non-finite logits seen
+            exhausted = (self._pools_exhausted()
+                         if self._pool_descs and self.on_pressure != "ignore"
+                         else False)
         self.ticks += 1
         self.steps += c
+
+        # failure semantics, decided BEFORE token/hold collection: a doomed
+        # request keeps nothing from a corrupt or poisoned chunk
+        doomed: Dict[int, Tuple[_ReqState, str]] = {}
+        if exhausted:
+            # the pool latched exhausted INSIDE the chunk: some write was
+            # silently dropped, and post-hoc attribution is impossible —
+            # every request that stepped this chunk is suspect.  The
+            # preemptive margin check above makes this a loud backstop (it
+            # fires only when injected faults ate pages mid-chunk or the
+            # margin bound was defeated), never the normal pressure path.
+            for r in self.active_reqs:
+                if any(act[:, lane].any() for lane in r.lanes):
+                    doomed[id(r)] = (r, "failed")
+            self._clear_pool_flags()
+        for lane in range(b):
+            r = self.owner[lane]
+            if r is not None and bad[lane]:
+                # NaN/Inf logit tripwire: fail the poisoned request and
+                # reclaim its lanes instead of decoding garbage forever
+                doomed[id(r)] = (r, "failed")
 
         # per-request, per-step metering from this request's own lanes only
         for r in self.active_reqs:
@@ -518,6 +934,8 @@ class Scheduler:
         ll = None
         for lane, take in prefill_take.items():
             r = self.owner[lane]
+            if id(r) in doomed:
+                continue
             r.consumed += take
             r.prefill_chunks += 1
             if r.consumed == len(r.req.prompt):
@@ -530,10 +948,12 @@ class Scheduler:
                 # (ll materialization above is only for prefill completion)
                 self._export_prefix(r, lane, last_logits[lane])
 
-        # collect emitted tokens; EOS / budget exhaustion finishes chains
+        # collect emitted tokens; EOS / budget exhaustion finishes chains.
+        # Doomed requests collect nothing: a token sampled after a dropped
+        # pool write or from poisoned logits must never reach a result.
         for lane in range(b):
             r = self.owner[lane]
-            if r is None or not self.decoding[lane]:
+            if r is None or not self.decoding[lane] or id(r) in doomed:
                 continue
             chain = r.chains[self.chain_of[lane]]
             for t in range(c):
@@ -545,11 +965,13 @@ class Scheduler:
                 self.finished[lane] = True
 
         # reclaim lanes of completed requests
-        done = [r for r in self.active_reqs if r.done]
+        done = [r for r in self.active_reqs
+                if r.done and id(r) not in doomed]
         if done:
             reclaim = np.zeros((b,), bool)
             for r in done:
                 self.active_reqs.remove(r)
+                self.completed += 1
                 if self.prefix_cache is not None:
                     # EOS reclamation offers the finished prompt's prefix
                     # chain back to the tree (LRU recency refresh)
@@ -565,6 +987,34 @@ class Scheduler:
                     self.pos[lane] = 0
             self._reset(reclaim)
 
+        # deadlines: completion above wins a tie; anything still active past
+        # its deadline times out now (definite status, lanes reclaimed)
+        for r in list(self.active_reqs):
+            dl = r.req.deadline
+            if dl is not None and self.ticks - r.req.arrival > dl:
+                doomed.setdefault(id(r), (r, "timeout"))
+        for r, status in doomed.values():
+            self._retire(r, status, results)
+
+    def _pools_exhausted(self) -> bool:
+        # reads only the per-pool exhausted scalars — part of the chunk's
+        # output state, synced inside the caller's tick-boundary region
+        for pc in policy_lib.iter_policy_caches(self.state):
+            pool = getattr(pc.cache, "pool", None)
+            if pool is not None and bool(np.asarray(pool.exhausted).any()):
+                return True
+        return False
+
+    def _clear_pool_flags(self) -> None:
+        """Un-latch ``exhausted`` once the backstop has failed the affected
+        requests — the latch is sticky device state, and leaving it set
+        would condemn every later request on the same pool."""
+        self.state = policy_lib.map_pooled_caches(
+            self.state,
+            lambda idx, cache: dataclasses.replace(
+                cache, pool=block_pool.clear_flags(cache.pool)))
+
     def _reset(self, mask: np.ndarray) -> None:
         self.state = self._reset_jit(self.state, jnp.asarray(mask),
                                      b=self.num_lanes, ml=self.max_len)
+        self._reapply_ghosts()

@@ -245,3 +245,168 @@ def test_answer_from_chain_scans_for_eq_token():
     # trailing "=" has no following token -> falls back to first token
     assert answer_from_chain(np.array([4, 1]), eq_token=1) == 4
     assert answer_from_chain(np.array([], dtype=np.int32)) is None
+
+
+# -- failure semantics & preemption ----------------------------------------
+
+
+def _fault_engine(tiny_arch, tiny_params, pool_blocks=8):
+    """Paged engine with a deliberately tight pool: solo worst-case demand
+    at max_len=24 is 6 pages/lane, so two lanes oversubscribe 8 pages."""
+    return Engine(tiny_arch, tiny_params,
+                  KVPolicyConfig(kind="dms", cr=2.0,
+                                 window=tiny_arch.dms.window,
+                                 paged=True, block_p=8,
+                                 pool_blocks=pool_blocks),
+                  chunk=4)
+
+
+def _solo_tokens(eng, req):
+    sched = eng.scheduler(num_lanes=2, max_len=24)
+    sched.submit(req)
+    return sched.run()[0].tokens
+
+
+def test_oversubscribed_ignore_mode_corrupts_silently(tiny_arch, tiny_params):
+    """Regression pin of the seed failure mode this PR fixes: with
+    ``on_pressure="ignore"`` an oversubscribed decode exhausts the pool,
+    drops writes, and emits WRONG tokens with status still "ok" — no error
+    anywhere.  If this test ever fails because the divergence disappeared,
+    the demonstration scenario needs retuning, not deletion."""
+    eng = _fault_engine(tiny_arch, tiny_params)
+    reqs = [Request(uid=i,
+                    prompt=_prompt(10, seed=50 + i, vocab=tiny_arch.vocab_size),
+                    max_new=8)
+            for i in range(2)]
+    solo = [_solo_tokens(eng, r) for r in reqs]
+
+    sched = eng.scheduler(num_lanes=2, max_len=24, oversub=2.0,
+                          on_pressure="ignore")
+    for r in reqs:
+        sched.submit(r)
+    results = {r.uid: r for r in sched.run()}
+
+    stats = sched.pool_stats()
+    assert stats["exhausted"], "scenario no longer exhausts the pool"
+    assert all(results[i].status == "ok" for i in range(2))
+    assert any(not np.array_equal(results[i].tokens, solo[i])
+               for i in range(2)), "dropped writes no longer corrupt tokens"
+
+
+def test_oversubscribed_preempt_mode_absorbs_pressure(tiny_arch, tiny_params):
+    """The fix: same oversubscribed trace under ``on_pressure="preempt"``
+    preempts the youngest request ahead of exhaustion, resumes it from its
+    snapshot, and every request finishes bitwise-correct."""
+    eng = _fault_engine(tiny_arch, tiny_params)
+    reqs = [Request(uid=i,
+                    prompt=_prompt(10, seed=50 + i, vocab=tiny_arch.vocab_size),
+                    max_new=8)
+            for i in range(2)]
+    solo = [_solo_tokens(eng, r) for r in reqs]
+
+    sched = eng.scheduler(num_lanes=2, max_len=24, oversub=2.0,
+                          on_pressure="preempt")
+    for r in reqs:
+        sched.submit(r)
+    results = {r.uid: r for r in sched.run()}
+
+    stats = sched.pool_stats()
+    assert not stats["exhausted"]
+    assert stats["lifecycle"]["preemptions"] > 0
+    assert stats["lifecycle"]["resumes"] == stats["lifecycle"]["preemptions"]
+    for i in range(2):
+        assert results[i].status == "ok"
+        np.testing.assert_array_equal(results[i].tokens, solo[i])
+    # latency observability: preempted requests report end-to-end ticks
+    assert all(results[i].latency_ticks > 0 for i in range(2))
+
+
+def test_pool_exhausted_backstop_fails_instead_of_corrupting(tiny_arch,
+                                                             tiny_params):
+    """Defense-in-depth: if pressure relief somehow misses (here: disabled
+    by hand), the tick-boundary exhaustion check must FAIL the affected
+    requests rather than let a single corrupt token reach a result."""
+    eng = _fault_engine(tiny_arch, tiny_params)
+    reqs = [Request(uid=i,
+                    prompt=_prompt(10, seed=50 + i, vocab=tiny_arch.vocab_size),
+                    max_new=8)
+            for i in range(2)]
+    solo = [_solo_tokens(eng, r) for r in reqs]
+
+    sched = eng.scheduler(num_lanes=2, max_len=24, oversub=2.0,
+                          on_pressure="preempt")
+    sched._relieve_pressure = lambda results: None   # corner the backstop
+    for r in reqs:
+        sched.submit(r)
+    results = {r.uid: r for r in sched.run()}
+
+    assert any(results[i].status == "failed" for i in range(2))
+    for i in range(2):
+        if results[i].status == "ok":
+            np.testing.assert_array_equal(results[i].tokens, solo[i])
+    # the latch was consumed at the boundary, not left to re-doom later work
+    assert not sched.pool_stats()["exhausted"]
+
+
+def test_deadline_timeouts_active_and_queued(tiny_arch, tiny_params):
+    """Active requests past their deadline retire as "timeout" with partial
+    output; queued requests expire without ever taking a lane."""
+    eng = _fault_engine(tiny_arch, tiny_params)
+    sched = eng.scheduler(num_lanes=1, max_len=24)
+    sched.submit(Request(uid=0,
+                         prompt=_prompt(8, seed=9, vocab=tiny_arch.vocab_size),
+                         max_new=10, deadline=3))
+    sched.submit(Request(uid=1,
+                         prompt=_prompt(8, seed=9, vocab=tiny_arch.vocab_size),
+                         max_new=2, deadline=1))
+    results = {r.uid: r for r in sched.run()}
+
+    assert results[0].status == "timeout"
+    assert results[0].latency_ticks > 3      # the tick that tripped it
+    assert results[1].status == "timeout"
+    assert results[1].admitted_tick == -1    # expired while queued
+    assert sched.lifecycle_stats()["timeouts"] == 2
+
+
+def test_nan_tripwire_fails_lane_and_isolates_neighbours(tiny_arch,
+                                                         tiny_params):
+    """Poisoned logits on one lane fail THAT request at the tick boundary
+    (no NaN-derived token ever reaches a result); the co-resident lane is
+    untouched and finishes bitwise-equal to its solo run."""
+    from repro.serving.faults import Fault, FaultPlan
+
+    eng = _fault_engine(tiny_arch, tiny_params, pool_blocks=None)
+    reqs = [Request(uid=i,
+                    prompt=_prompt(8, seed=60 + i, vocab=tiny_arch.vocab_size),
+                    max_new=6)
+            for i in range(2)]
+    solo = [_solo_tokens(eng, r) for r in reqs]
+
+    plan = FaultPlan([Fault("nan_logits", tick=2, lane=0)])
+    sched = eng.scheduler(num_lanes=2, max_len=24, faults=plan)
+    for r in reqs:
+        sched.submit(r)
+    results = {r.uid: r for r in sched.run()}
+
+    statuses = {uid: r.status for uid, r in results.items()}
+    assert "failed" in statuses.values() and "ok" in statuses.values()
+    ok_uid = next(u for u, s in statuses.items() if s == "ok")
+    np.testing.assert_array_equal(results[ok_uid].tokens, solo[ok_uid])
+    assert sched.lifecycle_stats()["failures"] == 1
+
+
+def test_submit_rejects_unservable_request(tiny_arch, tiny_params):
+    """Solo-fit invariant: a request whose worst-case pool demand exceeds
+    the whole pool can never be served at ANY load — reject at submit, not
+    after it wedges the arena."""
+    eng = _fault_engine(tiny_arch, tiny_params)   # 8-page pool, 6 pages/lane
+    sched = eng.scheduler(num_lanes=2, max_len=24)
+    with pytest.raises(ValueError, match="pool"):
+        # 18 tokens -> 6 pages/lane worst-case; width 2 -> 12 > 8-page pool
+        sched.submit(Request(
+            uid=0, prompt=_prompt(10, seed=3, vocab=tiny_arch.vocab_size),
+            max_new=8, width=2))
+    # the same shape at width 1 is servable (6 <= 8)
+    sched.submit(Request(
+        uid=1, prompt=_prompt(10, seed=3, vocab=tiny_arch.vocab_size),
+        max_new=8))

@@ -15,6 +15,15 @@ The checker is plain code shared by two drivers: a seeded deterministic
 test (always runs, also under the no-hypothesis shim) and a hypothesis
 ``@given`` fuzzer (runs when hypothesis is installed; degrades to a skip
 via ``tests/_hypothesis_compat``).
+
+The chaos half of the file turns the same oracle discipline on the failure
+path: random :class:`~repro.serving.faults.FaultPlan` schedules (pool
+shrinkage, CoW storms, NaN logits, clock stalls, forced preemptions) against
+random traces, on both fixed and paged arenas, asserting the four serving
+robustness invariants — termination, lane+pool conservation
+(``ref == recount(phys) + ghost``), a definite status per request, and fault
+isolation (every ``ok`` request is token-equal to its solo oracle, which
+also makes preempt→resume round-trips bitwise).
 """
 import dataclasses
 
@@ -24,10 +33,12 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_smoke
-from repro.core import policy as policy_lib
+from repro.core import block_pool, policy as policy_lib
 from repro.core.config import KVPolicyConfig
+from repro.core.policy import available_policies
 from repro.models import transformer as tfm
 from repro.serving.engine import Engine
+from repro.serving.faults import Fault, FaultPlan
 from repro.serving.scheduler import Request
 
 NUM_LANES = 3
@@ -43,6 +54,7 @@ def _prime(arch, params) -> None:
     chunk) and are shared across all trace and oracle runs."""
     if "eng" not in _CTX:
         _CTX["arch"] = arch
+        _CTX["params"] = params
         _CTX["eng"] = Engine(arch, params,
                              KVPolicyConfig(kind="dms", cr=2.0,
                                             window=arch.dms.window),
@@ -172,3 +184,155 @@ def test_random_trace_matches_solo_oracle_fuzzed(spec):
     spec = [(min(plen, MAX_LEN - max_new - 1) or 1, width, max_new, arr, eos)
             for (plen, width, max_new, arr, eos) in spec]
     check_trace(spec)
+
+
+# -- chaos: fault injection vs the robustness invariants ---------------------
+
+# policy sample for the chaos fuzz (the bitwise preempt→resume sweep below
+# covers the full registry); engines are cached per (kind, paged) so every
+# seed/fuzz example reuses the compiled chunk/export/import jits
+CHAOS_POLICIES = ("dms", "tova", "quest")
+POOL_BLOCKS = 12
+_CHAOS = {}
+
+
+def _chaos_engine(kind, paged):
+    key = (kind, paged)
+    if key not in _CHAOS:
+        _engine()                      # make sure _CTX carries arch + params
+        arch = _CTX["arch"]
+        cfg = KVPolicyConfig(kind=kind, cr=2.0, budget=12,
+                             window=arch.dms.window, quest_page_size=4,
+                             paged=paged, block_p=8,
+                             pool_blocks=POOL_BLOCKS if paged else None)
+        _CHAOS[key] = Engine(arch, _CTX["params"], cfg, chunk=CHUNK)
+    return _CHAOS[key]
+
+
+def _solo_chaos(eng, req: Request):
+    """Fault-free oracle on the same engine and lane count (shared jits)."""
+    sched = eng.scheduler(num_lanes=NUM_LANES, max_len=MAX_LEN)
+    sched.submit(dataclasses.replace(req, arrival=0, deadline=None))
+    return sched.run()[0]
+
+
+def check_chaos(seed, paged, kind):
+    """One chaos episode: a seeded request trace under a seeded FaultPlan."""
+    eng = _chaos_engine(kind, paged)
+    rng = np.random.default_rng(seed)
+    reqs = [Request(uid=i,
+                    prompt=_prompt(int(rng.integers(4, 13)),
+                                   seed=2000 + 10 * seed + i),
+                    max_new=int(rng.integers(3, 8)),
+                    arrival=int(rng.integers(0, 5)), deadline=40)
+            for i in range(3)]
+    plan = FaultPlan.random(seed, lanes=NUM_LANES, paged=paged)
+
+    sched = eng.scheduler(num_lanes=NUM_LANES, max_len=MAX_LEN, faults=plan)
+    for r in reqs:
+        sched.submit(r)
+    results = {r.uid: r for r in sched.run()}   # invariant 1: terminates
+
+    # invariant 2: exactly one result per request, with a definite status
+    assert sorted(results) == [0, 1, 2]
+    for uid, got in results.items():
+        assert got.status in ("ok", "failed", "timeout"), (uid, got.status)
+
+    # invariant 3: conservation — lanes idle + reset, pool refcounts exactly
+    # the recount of live mappings plus the injector's ghost ledger, and the
+    # exhausted latch never survives the run
+    assert not sched.queue and not sched.active_reqs
+    assert all(o is None for o in sched.owner)
+    assert not sched.decoding.any() and not sched.finished.any()
+    pooled = [pc for pc in policy_lib.iter_policy_caches(sched.state)
+              if getattr(pc.cache, "pool", None) is not None]
+    for idx, pc in enumerate(pooled):
+        pool = pc.cache.pool
+        want = np.asarray(block_pool.recount(pc.cache.phys,
+                                             pool.ref.shape[-1]))
+        ghost = plan.ghosts.get(idx)
+        if ghost is not None:
+            want = want + ghost
+        np.testing.assert_array_equal(np.asarray(pool.ref), want,
+                                      err_msg=f"pool {idx} refcount leak")
+        assert not bool(np.asarray(pool.exhausted).any())
+
+    # invariant 4: fault isolation — every ok request (preempted or not) is
+    # bitwise what its solo run produces; a token from a poisoned chunk or a
+    # dropped-write lane must never have reached a result
+    for r in reqs:
+        got = results[r.uid]
+        if got.status != "ok":
+            continue
+        ref = _solo_chaos(eng, r)
+        np.testing.assert_array_equal(got.tokens, ref.tokens,
+                                      err_msg=f"uid {r.uid} diverged")
+        np.testing.assert_array_equal(got.lengths, ref.lengths)
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["fixed", "paged"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_faults_keep_invariants_seeded(seed, paged, tiny_arch,
+                                             tiny_params):
+    """Deterministic chaos driver — runs in every environment."""
+    _prime(tiny_arch, tiny_params)
+    check_chaos(seed, paged, CHAOS_POLICIES[seed % len(CHAOS_POLICIES)])
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6), st.booleans(),
+       st.sampled_from(CHAOS_POLICIES))
+def test_chaos_faults_keep_invariants_fuzzed(seed, paged, kind):
+    """Hypothesis chaos driver: same invariants, adversarial seeds."""
+    check_chaos(seed, paged, kind)
+
+
+# -- bitwise preempt→resume, full policy registry ----------------------------
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["fixed", "paged"])
+@pytest.mark.parametrize("kind", sorted(available_policies()))
+def test_preempt_resume_bitwise_per_policy(kind, paged, tiny_arch,
+                                           tiny_params):
+    """Acceptance: for every registry policy, on fixed and paged arenas, a
+    request force-preempted mid-prefill (tick 1) AND mid-decode (tick 5)
+    resumes from its host snapshot and finishes bitwise-identical to an
+    undisturbed run — zero re-prefill, greedy decode carries no RNG."""
+    _prime(tiny_arch, tiny_params)
+    eng = _chaos_engine(kind, paged)
+    req = Request(uid=0, prompt=_prompt(9, seed=77), max_new=6)
+    oracle = _solo_chaos(eng, req)
+
+    plan = FaultPlan([Fault("preempt", tick=1, lane=0),
+                      Fault("preempt", tick=5, lane=0)])
+    sched = eng.scheduler(num_lanes=NUM_LANES, max_len=MAX_LEN, faults=plan)
+    sched.submit(req)
+    got = sched.run()[0]
+
+    assert got.status == "ok"
+    assert got.preempt_count == 2, plan.log
+    np.testing.assert_array_equal(got.tokens, oracle.tokens, err_msg=kind)
+    np.testing.assert_array_equal(got.lengths, oracle.lengths)
+    assert sched.lifecycle_stats() == {
+        "preemptions": 2, "resumes": 2, "completed": 1,
+        "failures": 0, "timeouts": 0}
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["fixed", "paged"])
+def test_preempt_resume_bitwise_hyperscale_width(paged, tiny_arch,
+                                                 tiny_params):
+    """A width-2 hyperscale request preempts as a unit (both lanes snapshot,
+    both resume) and still matches its undisturbed fork bitwise."""
+    _prime(tiny_arch, tiny_params)
+    eng = _chaos_engine("dms", paged)
+    req = Request(uid=0, prompt=_prompt(8, seed=78), max_new=5, width=2)
+    oracle = _solo_chaos(eng, req)
+
+    plan = FaultPlan([Fault("preempt", tick=2, lane=0)])
+    sched = eng.scheduler(num_lanes=NUM_LANES, max_len=MAX_LEN, faults=plan)
+    sched.submit(req)
+    got = sched.run()[0]
+
+    assert got.status == "ok" and got.preempt_count == 1
+    np.testing.assert_array_equal(got.tokens, oracle.tokens)
+    np.testing.assert_array_equal(got.lengths, oracle.lengths)
