@@ -38,6 +38,11 @@ Suites (↔ paper artifact):
                       oversubscribed pool — bitwise snapshot resume, zero
                       re-prefill, deterministic lifecycle counters (see
                       docs/serving.md "Failure semantics & preemption")
+    slo_harness       serving: SLO-driven overload control — the same 2x
+                      burst trace with and without the degradation ladder;
+                      gates the goodput win, zero-prefill sheds, and solo
+                      token equality of degraded requests (see
+                      docs/serving.md "SLO & overload control")
 """
 from __future__ import annotations
 
@@ -63,7 +68,7 @@ def main(argv=None) -> int:
     from benchmarks import (ablation_eviction, continuous_batching, cr_profile,
                             cr_sweep, data_efficiency, decode_path,
                             latency_model, paged_arena, pareto, preemption,
-                            prefix_cache, roofline_table)
+                            prefix_cache, roofline_table, slo_harness)
     suites = {
         "latency_model": latency_model.run,
         "roofline_table": roofline_table.run,
@@ -77,6 +82,7 @@ def main(argv=None) -> int:
         "decode_path": decode_path.run,
         "paged_arena": paged_arena.run,
         "preemption": preemption.run,
+        "slo_harness": slo_harness.run,
     }
     if args.only:
         suites = {k: v for k, v in suites.items() if k == args.only}

@@ -11,9 +11,12 @@ Sweeps every registered KV policy × {ref, kernel} × {fixed, paged}:
 * the KVPolicy lifecycle contract per policy;
 * sharding-rule coverage of every decode-state leaf.
 
-Then drives one real mini scheduler trace (mixed prompt lengths, a width-2
-fork, EOS-free budget exhaustion) under the retrace sentinel (exactly one
-chunk compile) and the host-sync tripwire (no unsanctioned d2h).
+Then drives real mini scheduler traces under the retrace sentinel (exactly
+one chunk compile) and the host-sync tripwire (no unsanctioned d2h): a
+mixed-length width-2-fork trace, a forced preempt→resume round-trip, and a
+generated burst workload through the SLO overload ladder (shed +
+width-throttle coverage — the control projections are host arithmetic and
+must add zero syncs/compiles).
 
 Exits nonzero on any gating finding.  Intentional exceptions are declared
 in ``ALLOW`` below with a comment — see docs/analysis.md for the policy.
@@ -214,6 +217,49 @@ def audit_preempt(arch, params, paged: bool) -> List[Finding]:
     return findings
 
 
+def audit_slo(arch, params, paged: bool) -> List[Finding]:
+    """Drive a generated burst workload through the SLO overload ladder
+    under the retrace sentinel + host-sync tripwire: the shed and
+    width-throttle projections are pure host arithmetic, so an overloaded
+    controlled trace must compile the chunk fn exactly once and add ZERO
+    device syncs beyond the sanctioned tick boundary."""
+    from repro.serving import workload
+    from repro.serving.engine import Engine
+    from repro.serving.scheduler import SLOSpec
+
+    cfg = policy_cfg("dms", paged)
+    eng = Engine(arch, params, cfg, chunk=4)
+    spec = workload.WorkloadSpec(
+        vocab=50, max_len=MAX_LEN, prompt_len=(6, 10), max_new=(3, 6),
+        widths=(1, 2), deadline=10)
+    reqs = workload.burst_trace(0, 8, rate=2.0, on_ticks=3, off_ticks=5,
+                                spec=spec)
+    slo = SLOSpec(ttft_ticks=5, max_queue=4, min_width=1, cooldown_ticks=4)
+    sched = eng.scheduler(num_lanes=2, max_len=MAX_LEN, slo=slo)
+    for r in reqs:
+        sched.submit(r)
+    with RetraceSentinel(engine_jits(eng),
+                         exact={"chunk": 1},
+                         budget={"gather": 1, "reset": 1, "prefill": 0,
+                                 "export": 0, "import": 0}) as sentinel, \
+            HostSyncTripwire() as tripwire:
+        results = sched.run()
+    tag = f"slo/{'paged' if paged else 'fixed'}"
+    findings = [dataclasses.replace(f, path=f"{tag}:{f.path}")
+                for f in sentinel.findings() + tripwire.violations()]
+    life = sched.lifecycle_stats()
+    # the trace must actually exercise the ladder, or the sync/compile
+    # guarantee above is vacuous
+    if len(results) != len(reqs) or life["shed"] < 1 \
+            or life["degraded"] < 1:
+        findings.append(Finding(
+            "error", "scheduler",
+            f"SLO trace lost coverage: {len(results)}/{len(reqs)} results, "
+            f"shed={life['shed']}, degraded={life['degraded']} "
+            "(need >=1 each)", path=tag))
+    return findings
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--policies", default=None,
@@ -245,6 +291,9 @@ def main(argv=None) -> int:
                   flush=True)
             findings += audit_preempt(arch, params, paged)
             print(f"  audited preempt/{'paged' if paged else 'fixed'}",
+                  flush=True)
+            findings += audit_slo(arch, params, paged)
+            print(f"  audited slo/{'paged' if paged else 'fixed'}",
                   flush=True)
 
     bad = gating(findings)

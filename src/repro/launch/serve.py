@@ -18,8 +18,9 @@ from repro.configs import get_smoke
 from repro.core.config import KVPolicyConfig
 from repro.core.policy import available_policies
 from repro.models import transformer as tfm
+from repro.serving import workload
 from repro.serving.engine import Engine
-from repro.serving.scheduler import Request
+from repro.serving.scheduler import Request, SLOSpec
 
 
 def main(argv=None):
@@ -87,6 +88,31 @@ def main(argv=None):
     ap.add_argument("--deadline", type=int, default=None,
                     help="per-request deadline in scheduler ticks from "
                          "arrival; exceeded -> status 'timeout'")
+    ap.add_argument("--arrival", default=None,
+                    choices=["poisson", "burst"],
+                    help="draw the trace from the seeded workload generator "
+                         "(repro.serving.workload) instead of --stagger: "
+                         "'poisson' open-loop arrivals at --rate, 'burst' "
+                         "on/off windows (--burst-on/--burst-off) at --rate "
+                         "inside each burst; prompt lengths mix over "
+                         "[prompt_len/2, prompt_len]")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="workload arrival rate in requests/tick "
+                         "(--arrival modes)")
+    ap.add_argument("--burst-on", type=int, default=4,
+                    help="burst window length in ticks (--arrival burst)")
+    ap.add_argument("--burst-off", type=int, default=8,
+                    help="silence between bursts in ticks (--arrival burst)")
+    ap.add_argument("--slo-ttft", type=int, default=None,
+                    help="TTFT SLO in ticks (arrival -> first token); also "
+                         "enables SLO-aware queue shedding")
+    ap.add_argument("--slo-tpot", type=float, default=None,
+                    help="TPOT SLO in decode ticks per post-first token "
+                         "(measured; counts against goodput)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded queue: when the live backlog of arrived, "
+                         "never-admitted requests exceeds this depth, the "
+                         "newest arrivals are rejected (backpressure)")
     args = ap.parse_args(argv)
 
     arch = get_smoke(args.arch)
@@ -103,24 +129,53 @@ def main(argv=None):
     shared = rng.integers(3, arch.vocab_size,
                           size=(args.shared_prefix,)).astype(np.int32)
     max_len = args.shared_prefix + args.prompt_len + args.max_new
+    slo = None
+    if (args.slo_ttft is not None or args.slo_tpot is not None
+            or args.max_queue is not None):
+        slo = SLOSpec(ttft_ticks=args.slo_ttft, tpot_ticks=args.slo_tpot,
+                      max_queue=args.max_queue)
     sched = engine.scheduler(num_lanes=args.num_lanes, max_len=max_len,
                              on_pressure=args.on_pressure,
-                             oversub=args.oversub)
-    for i in range(args.requests):
-        plen = (int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
-                if args.stagger else args.prompt_len)
-        own = rng.integers(3, arch.vocab_size, size=(plen,)).astype(np.int32)
-        sched.submit(Request(
-            uid=i, prompt=np.concatenate([shared, own]),
-            max_new=args.max_new, width=args.width,
-            eos_id=args.eos_id, arrival=i if args.stagger else 0,
-            deadline=args.deadline))
+                             oversub=args.oversub, slo=slo)
+    if args.arrival is not None:
+        spec = workload.WorkloadSpec(
+            vocab=arch.vocab_size,
+            max_len=max_len - args.shared_prefix,
+            prompt_len=(max(1, args.prompt_len // 2), args.prompt_len),
+            max_new=(args.max_new, args.max_new),
+            widths=(args.width,), eos_id=args.eos_id,
+            deadline=args.deadline)
+        if args.arrival == "poisson":
+            reqs = workload.poisson_trace(0, args.requests, rate=args.rate,
+                                          spec=spec)
+        else:
+            reqs = workload.burst_trace(0, args.requests, rate=args.rate,
+                                        on_ticks=args.burst_on,
+                                        off_ticks=args.burst_off, spec=spec)
+        for r in reqs:
+            sched.submit(Request(
+                uid=r.uid, prompt=np.concatenate([shared, r.prompt]),
+                max_new=r.max_new, width=r.width, eos_id=r.eos_id,
+                arrival=r.arrival, deadline=r.deadline))
+    else:
+        for i in range(args.requests):
+            plen = (int(rng.integers(args.prompt_len // 2,
+                                     args.prompt_len + 1))
+                    if args.stagger else args.prompt_len)
+            own = rng.integers(3, arch.vocab_size,
+                               size=(plen,)).astype(np.int32)
+            sched.submit(Request(
+                uid=i, prompt=np.concatenate([shared, own]),
+                max_new=args.max_new, width=args.width,
+                eos_id=args.eos_id, arrival=i if args.stagger else 0,
+                deadline=args.deadline))
     results = sched.run()
 
     for r in sorted(results, key=lambda r: r.uid):
         print(json.dumps({
             "uid": r.uid, "chains": len(r.lengths),
-            "status": r.status, "preempts": r.preempt_count,
+            "status": r.status, "degraded": r.degraded,
+            "preempts": r.preempt_count,
             "generated": r.lengths.tolist(),
             "kv_reads": r.meter.kv_reads,
             "kv_reads_prefill": r.prefill_meter.kv_reads,
@@ -130,13 +185,23 @@ def main(argv=None):
             "peak_bytes": r.meter.peak_bytes,
             "ticks": [r.admitted_tick, r.finished_tick],
             "latency_ticks": r.latency_ticks,
+            "ttft_ticks": r.ttft_ticks,
+            "tpot_ticks": round(r.tpot_ticks, 4),
         }))
+    # per-request TTFT/TPOT/status summary table (human-scan view of the
+    # JSON rows above)
+    print(f"# {'uid':>4} {'status':>9} {'deg':>4} {'ttft':>5} "
+          f"{'tpot':>6} {'lat':>5}")
+    for r in sorted(results, key=lambda r: r.uid):
+        print(f"# {r.uid:>4} {r.status:>9} "
+              f"{'y' if r.degraded else '-':>4} {r.ttft_ticks:>5} "
+              f"{r.tpot_ticks:>6.2f} {r.latency_ticks:>5}")
     print(json.dumps({
         "policy": args.policy, "cr": args.cr,
         "requests": len(results), "lanes": args.num_lanes,
         "scheduler_ticks": sched.ticks, "scheduler_steps": sched.steps,
     }))
-    print(json.dumps({"lifecycle": sched.lifecycle_stats()}))
+    print(json.dumps({"slo": sched.slo_stats()}))
     pool = sched.pool_stats()
     if pool is not None:
         print(json.dumps({"block_pool": pool}))

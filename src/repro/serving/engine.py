@@ -113,8 +113,8 @@ class Engine:
     def scheduler(self, num_lanes: int, max_len: int, *, seed: int = 0,
                   chunk: Optional[int] = None,
                   prefix_cache: Any = _ENGINE_CACHE, faults: Any = None,
-                  on_pressure: str = "preempt",
-                  oversub: float = 1.0) -> Scheduler:
+                  on_pressure: str = "preempt", oversub: float = 1.0,
+                  slo: Any = None) -> Scheduler:
         """A lane arena bound to this engine's jitted step functions.
 
         The engine's :class:`PrefixCache` (if any) rides along by default, so
@@ -122,8 +122,9 @@ class Engine:
         ``prefix_cache=None`` for an explicitly cold scheduler, or another
         PrefixCache instance to override.  ``faults`` attaches a
         :class:`~repro.serving.faults.FaultPlan` (chaos tests/benchmarks);
-        ``on_pressure``/``oversub`` configure the preemption layer (see
-        :class:`Scheduler`)."""
+        ``on_pressure``/``oversub`` configure the preemption layer and
+        ``slo`` an :class:`~repro.serving.scheduler.SLOSpec` for the
+        overload-control ladder (see :class:`Scheduler`)."""
         if prefix_cache is _ENGINE_CACHE:
             prefix_cache = self.prefix_cache
         return Scheduler(
@@ -134,7 +135,8 @@ class Engine:
             use_kernel=self.use_kernel, temperature=self.temperature,
             seed=seed, prefix_cache=prefix_cache,
             export_jit=self._export_jit, import_jit=self._import_jit,
-            faults=faults, on_pressure=on_pressure, oversub=oversub)
+            faults=faults, on_pressure=on_pressure, oversub=oversub,
+            slo=slo)
 
     # -- public API -------------------------------------------------------
 

@@ -92,16 +92,37 @@ class FaultPlan:
 
     @staticmethod
     def random(seed: int, *, lanes: int, horizon: int = 12,
-               max_faults: int = 3, paged: bool = True) -> "FaultPlan":
+               max_faults: int = 3, paged: bool = True,
+               arrivals: Optional[Sequence[int]] = None) -> "FaultPlan":
         """A seeded plan: 1..max_faults faults over the first ``horizon``
         ticks.  Pool faults are only drawn for paged states (they are no-ops
-        on fixed arenas, which would waste fuzz budget)."""
+        on fixed arenas, which would waste fuzz budget).
+
+        ``arrivals`` is the workload-generator hook: pass a trace's arrival
+        ticks (e.g. ``repro.serving.workload.burst_arrivals``) and each
+        fault tick is drawn near a sampled arrival instead of uniformly —
+        bursty traces get their faults *inside* the burst, where requests
+        are actually in flight, and ``horizon`` stretches to cover the
+        trace's span.  With ``arrivals=None`` the draw sequence is unchanged
+        (one uniform integer per fault), so existing seeded plans replay
+        bit-identically."""
         rng = np.random.default_rng(seed)
         kinds = list(KINDS) if paged else ["nan_logits", "stall", "preempt"]
+        arr = None
+        if arrivals is not None and len(arrivals):
+            arr = np.sort(np.asarray(arrivals, np.int64))
+            horizon = max(horizon, int(arr.max()) + 2)
+
+        def draw_tick() -> int:
+            if arr is None:
+                return int(rng.integers(1, horizon))
+            base = int(arr[int(rng.integers(len(arr)))])
+            return max(1, base + int(rng.integers(0, 3)))
+
         faults = []
         for _ in range(int(rng.integers(1, max_faults + 1))):
             kind = kinds[int(rng.integers(len(kinds)))]
-            tick = int(rng.integers(1, horizon))
+            tick = draw_tick()
             if kind == "pool_shrink":
                 release = (tick + int(rng.integers(2, horizon))
                            if rng.random() < 0.5 else None)

@@ -63,6 +63,26 @@ replaces the lockstep fixed batch with a real scheduler:
   ``preempt_count``), ``failed``, or ``timeout`` (per-request deadline
   ticks).  docs/serving.md "Failure semantics & preemption" is the contract;
   ``serving/faults.py`` is the chaos harness that proves it.
+* **SLO & overload control.**  With an :class:`SLOSpec` attached the
+  scheduler meters TTFT (arrival → first sampled token, in ticks) and TPOT
+  (decode ticks per post-first token) on every result and runs a
+  *degradation ladder* when offered load exceeds capacity — **throttle**
+  hyper-scaling fork width (a width-W request is served at W′, flagged
+  ``degraded``, tokens equal to a solo width-W′ run) with hysteresis
+  (``cooldown_ticks``) so the preemption path cannot storm; **shed** queued
+  requests that provably cannot meet their deadline/TTFT SLO even if
+  admitted this very tick (status ``rejected``, zero prefill reads burned —
+  unlike ``timeout``, which fires only after the deadline has passed);
+  the bounded queue (``max_queue``) **rejects** the newest arrivals at the
+  door when the live backlog of arrived requests exceeds it; only then
+  the PR-9 rungs: **preempt**, and finally **fail**.  Every projection is
+  pure host arithmetic over admission descriptors and the read-only radix
+  probe (:meth:`PrefixCache.covered`) — zero device syncs, zero compiles
+  (the analysis tripwires cover these paths).  :meth:`Scheduler.slo_stats`
+  reports goodput (offered requests finishing ``ok`` within SLO), TTFT/TPOT
+  percentiles, and queue-depth / lane-utilization timelines;
+  ``serving/workload.py`` generates the traffic, ``benchmarks/slo_harness.py``
+  gates the goodput win over the uncontrolled baseline.
 """
 from __future__ import annotations
 
@@ -107,14 +127,51 @@ class Request:
     max_preempts: int = 3
 
 
+@dataclass(frozen=True)
+class SLOSpec:
+    """Latency SLO + overload-control knobs (attach via ``Scheduler(slo=)``).
+
+    ``ttft_ticks`` bounds arrival → first sampled token; ``tpot_ticks``
+    bounds decode ticks per post-first token (both measured on every result;
+    either may be None = unconstrained for goodput accounting).
+    ``max_queue`` bounds the live backlog of arrived-but-unadmitted
+    requests — arrivals past it are ``rejected`` at the door (backpressure,
+    a definite outcome; enforced per tick so preloaded traces with future
+    arrivals are not counted against today's queue).  ``shed``
+    enables SLO-aware admission: a queued request that *provably* cannot
+    meet its deadline/TTFT SLO even if admitted this tick is rejected
+    before it burns any prefill reads.  ``degrade_width`` enables the
+    throttle rung of the degradation ladder: under lane/pool pressure a
+    width-W request is admitted at ``min_width`` instead (result flagged
+    ``degraded``), and ``cooldown_ticks`` of hysteresis keep the throttle
+    engaged after pressure recedes so admission cannot flap into the
+    preemption path."""
+
+    ttft_ticks: Optional[int] = None
+    tpot_ticks: Optional[float] = None
+    max_queue: Optional[int] = None
+    shed: bool = True
+    degrade_width: bool = True
+    min_width: int = 1
+    cooldown_ticks: int = 4
+
+
 @dataclass
 class RequestResult:
     """``status`` is always definite: ``"ok"`` (``preempt_count`` > 0 means
     preempted×N then completed — tokens still bitwise-equal to an
     uninterrupted run), ``"failed"`` (pool exhaustion backstop, NaN/Inf
     logits, retry budget exhausted, or unservable under injected pressure),
-    or ``"timeout"`` (deadline ticks exceeded).  ``latency_ticks`` is
-    end-to-end (arrival → finished), queueing and backoff included."""
+    ``"timeout"`` (deadline ticks exceeded), or ``"rejected"`` (bounded-queue
+    backpressure on arrival, or SLO-driven shed while queued — either way the
+    request never touched a lane and burned zero prefill reads).
+    ``latency_ticks`` is end-to-end (arrival → finished), queueing and
+    backoff included.  ``ttft_ticks`` is arrival → first sampled token (-1
+    when no token was ever sampled); ``tpot_ticks`` is decode ticks per
+    post-first token (0.0 for single-token generations).  ``degraded`` marks
+    a hyper-scaling request served at reduced width by the overload ladder —
+    ``tokens`` then has the *served* width's rows and equals a solo run at
+    that width."""
 
     uid: int
     tokens: np.ndarray            # (W, max_new) int32, padded after EOS
@@ -127,12 +184,17 @@ class RequestResult:
     status: str = "ok"
     preempt_count: int = 0
     latency_ticks: int = 0
+    first_token_tick: int = -1
+    ttft_ticks: int = -1
+    tpot_ticks: float = 0.0
+    degraded: bool = False
 
 
 class _ReqState:
     def __init__(self, req: Request, pad_id: int):
         self.req = req
         self.lanes: List[int] = []             # lane -> chain index by order
+        self.width = req.width                 # SERVED width (ladder may cut)
         self.consumed = 0                      # prompt tokens prefetched
         self.prefill_chunks = 0                # chunks prefilled (export stride)
         self.hold_logits: Optional[np.ndarray] = None
@@ -142,6 +204,7 @@ class _ReqState:
         self.decode_meter = BudgetMeter()
         self.pad_id = pad_id
         self.admitted_tick = -1                # -1 = never admitted
+        self.first_token_tick = -1             # -1 = no token ever sampled
         self.status = "ok"
         self.preempt_count = 0
         self.resume_at = 0                     # backoff: earliest re-admission
@@ -156,8 +219,15 @@ class _ReqState:
     def ready(self, tick: int) -> bool:
         return self.req.arrival <= tick and self.resume_at <= tick
 
+    def degrade(self, width: int) -> None:
+        """Throttle to ``width`` chains (admission-time only: chains are
+        still empty, no lane holds anything of ours yet)."""
+        self.width = width
+        self.chains = [[] for _ in range(width)]
+        self.chain_done = [False] * width
+
     def result(self, peak_bytes: float, finished_tick: int) -> RequestResult:
-        w, m = self.req.width, self.req.max_new
+        w, m = self.width, self.req.max_new
         toks = np.full((w, m), self.pad_id, np.int32)
         lens = np.zeros((w,), np.int32)
         for c, chain in enumerate(self.chains):
@@ -165,13 +235,20 @@ class _ReqState:
             toks[c, :len(chain)] = chain
         for meter in (self.prefill_meter, self.decode_meter):
             meter.observe_peak_bytes(peak_bytes)
+        ft = self.first_token_tick
+        gen = int(lens.max()) if w else 0
+        tpot = ((finished_tick - ft) / (gen - 1)
+                if ft >= 0 and gen > 1 else 0.0)
         return RequestResult(
             uid=self.req.uid, tokens=toks, lengths=lens,
             meter=self.prefill_meter.merge_sequential(self.decode_meter),
             prefill_meter=self.prefill_meter, decode_meter=self.decode_meter,
             admitted_tick=self.admitted_tick, finished_tick=finished_tick,
             status=self.status, preempt_count=self.preempt_count,
-            latency_ticks=finished_tick - self.req.arrival)
+            latency_ticks=max(0, finished_tick - self.req.arrival),
+            first_token_tick=ft,
+            ttft_ticks=ft - self.req.arrival if ft >= 0 else -1,
+            tpot_ticks=float(tpot), degraded=self.width < self.req.width)
 
 
 def make_chunk_fn(arch, *, use_kernel: bool = False,
@@ -250,7 +327,8 @@ class Scheduler:
                  temperature: float = 0.0, seed: int = 0, pad_id: int = 0,
                  prefix_cache: Optional[PrefixCache] = None,
                  export_jit=None, import_jit=None, faults=None,
-                 on_pressure: str = "preempt", oversub: float = 1.0):
+                 on_pressure: str = "preempt", oversub: float = 1.0,
+                 slo: Optional[SLOSpec] = None):
         self.arch, self.params, self.policy = arch, params, policy
         self.num_lanes, self.max_len, self.chunk = num_lanes, max_len, chunk
         self.pad_id = pad_id
@@ -266,15 +344,28 @@ class Scheduler:
         if oversub < 1.0:
             raise ValueError("oversub < 1 would reserve more than worst-case "
                              "demand; shrink pool_blocks instead")
+        if slo is not None and slo.min_width < 1:
+            raise ValueError("SLOSpec.min_width must be >= 1")
         self.faults = faults
         self.on_pressure = on_pressure
         self.oversub = float(oversub)
+        self.slo = slo
         # lifecycle observability (lifecycle_stats / pool_stats / serve.py)
         self.preemptions = 0
         self.resumes = 0
         self.failures = 0
         self.timeouts = 0
         self.completed = 0
+        self.rejected = 0              # bounded-queue backpressure on arrival
+        self.shed = 0                  # SLO-driven queue sheds (also rejected)
+        self.degraded = 0              # width-throttled admissions
+        self.offered = 0               # every submit() that passed validation
+        # SLO observability: every retired result (any status) plus per-tick
+        # queue-depth / active-lane samples — all host-side, zero syncs
+        self._finished: List[RequestResult] = []
+        self._timeline: Dict[str, List[int]] = {"queue_depth": [],
+                                                "active_lanes": []}
+        self._hot_until = -1           # throttle hysteresis: degrade before it
         self._chunk_jit = chunk_jit or jax.jit(make_chunk_fn(
             arch, use_kernel=use_kernel, temperature=temperature))
         self._reset_jit = reset_jit or jax.jit(self._reset_fn,
@@ -352,6 +443,7 @@ class Scheduler:
                     f"request {req.uid}: worst-case pool demand "
                     f"{req.width * d} blocks exceeds pool {i} capacity "
                     f"{self._pool_descs[i][3]} — unservable at any load")
+        self.offered += 1
         self.queue.append(_ReqState(req, self.pad_id))
 
     def pool_stats(self) -> Optional[Dict[str, Any]]:
@@ -370,10 +462,27 @@ class Scheduler:
         left the system.  ``preemptions`` counts evictions (a request can
         contribute several), ``resumes`` successful snapshot re-admissions;
         ``completed``/``failures``/``timeouts`` partition finished requests
-        by terminal status."""
+        by terminal status; ``rejected`` counts bounded-queue backpressure on
+        arrival, ``shed`` SLO-driven queue sheds (both retire as status
+        ``rejected``), and ``degraded`` width-throttled admissions."""
         return {"preemptions": self.preemptions, "resumes": self.resumes,
                 "completed": self.completed, "failures": self.failures,
-                "timeouts": self.timeouts}
+                "timeouts": self.timeouts, "rejected": self.rejected,
+                "shed": self.shed, "degraded": self.degraded}
+
+    def slo_stats(self) -> Dict[str, Any]:
+        """Goodput / latency observability over everything retired so far:
+        goodput (fraction of offered requests finishing ``ok`` within the
+        attached SLO), TTFT/TPOT percentiles over ok requests, per-status
+        counts, and queue-depth / lane-utilization timeline aggregates —
+        joined with :meth:`lifecycle_stats`.  Pure host arithmetic over the
+        retired-result ledger."""
+        out = compute_slo_stats(self._finished, self.slo,
+                                offered=self.offered,
+                                timeline=self._timeline,
+                                num_lanes=self.num_lanes)
+        out["lifecycle"] = self.lifecycle_stats()
+        return out
 
     def run(self) -> List[RequestResult]:
         """Run the queue to completion; results in completion order.
@@ -388,6 +497,8 @@ class Scheduler:
             if self.faults is not None:
                 self.faults.on_tick(self, results)
             self._expire_queued(results)
+            self._bound_queue(results)
+            self._shed_queued(results)
             # fork before admitting: freed lanes must reach held hyperscale
             # requests before new admissions can take them
             self._fork_ready()
@@ -400,6 +511,7 @@ class Scheduler:
                     self._fail_starved(results)
                     continue
                 # nothing admitted yet (future arrivals / backoff): tick time
+                self._record_timeline()
                 self.ticks += 1
                 continue
             self._tick(results)
@@ -420,20 +532,20 @@ class Scheduler:
         return [h * min(-(-tokens // bp), nb)
                 for (h, nb, bp, _) in self._pool_descs]
 
-    def _reserved_demand(self, req: Request) -> List[int]:
-        """Pool blocks admission reserves for ``req``: worst case scaled by
-        the oversubscription factor.  ``oversub == 1`` (the default) reserves
-        the full width-W worst case — a fixed-arena-sound contract under
-        which the pool can *never* exhaust via the public API (the CoW fork
-        shares pages, so divergence only grows demand toward the reserved
-        bound, never past it).  ``oversub > 1`` is the explicit contract
-        change: admit more, and let the preemption layer absorb the overflow
-        when divergence actually materializes."""
-        return [math.ceil(req.width * d / self.oversub)
-                for d in self._lane_pool_demand(
-                    len(req.prompt) + req.max_new)]
+    def _reserved_demand(self, tokens: int, width: int) -> List[int]:
+        """Pool blocks admission reserves for a ``tokens``-token request at
+        serving width ``width``: worst case scaled by the oversubscription
+        factor.  ``oversub == 1`` (the default) reserves the full width-W
+        worst case — a fixed-arena-sound contract under which the pool can
+        *never* exhaust via the public API (the CoW fork shares pages, so
+        divergence only grows demand toward the reserved bound, never past
+        it).  ``oversub > 1`` is the explicit contract change: admit more,
+        and let the preemption layer absorb the overflow when divergence
+        actually materializes."""
+        return [math.ceil(width * d / self.oversub)
+                for d in self._lane_pool_demand(tokens)]
 
-    def _pool_fits(self, req: Request) -> bool:
+    def _pool_fits(self, tokens: int, width: int) -> bool:
         """Byte-budget admission: would admitting ``req`` let total
         *reserved* pool demand exceed any pool's block count?  Host-side
         static arithmetic — no device sync.  With the default provisioning
@@ -445,10 +557,11 @@ class Scheduler:
         :meth:`_reserved_demand` — preemption absorbs what materializes)."""
         if not self._pool_descs:
             return True
-        demand = self._reserved_demand(req)
+        demand = self._reserved_demand(tokens, width)
         reserved = [0] * len(self._pool_descs)
         for r in self.active_reqs:
-            d = self._reserved_demand(r.req)
+            d = self._reserved_demand(len(r.req.prompt) + r.req.max_new,
+                                      r.width)
             for i in range(len(reserved)):
                 reserved[i] += d[i]
         return all(reserved[i] + demand[i] <= self._pool_descs[i][3]
@@ -477,14 +590,17 @@ class Scheduler:
             idle = self._idle_lanes()
             if not idle:
                 break
-            reserved = sum(r.req.width - len(r.lanes)
+            reserved = sum(r.width - len(r.lanes)
                            for r in self.active_reqs)
             avail = len(idle) - reserved
             free = None                  # lazy free-page readback, ≤1 / pass
-            nxt = None
+            nxt, nxt_w = None, 0
             for r in self.queue:
-                if not r.ready(self.ticks) or r.req.width > avail \
-                        or not self._pool_fits(r.req):
+                if not r.ready(self.ticks):
+                    continue
+                w = self._effective_width(r)
+                if w > avail or not self._pool_fits(
+                        len(r.req.prompt) + r.req.max_new, w):
                     continue
                 if r.snaps is not None and self._pool_descs \
                         and self._pressure_possible():
@@ -495,7 +611,7 @@ class Scheduler:
                     if any(free[i] < len(r.snaps) * need[i]
                            for i in range(len(need))):
                         continue         # resume free-gate: wait it out
-                nxt = r
+                nxt, nxt_w = r, w
                 break
             if nxt is None:
                 break
@@ -503,6 +619,14 @@ class Scheduler:
             if nxt.snaps is not None:
                 self._resume(nxt, idle)
                 continue
+            if nxt_w < nxt.width:
+                # throttle rung: serve the hyper-scaling request at reduced
+                # width (degraded quality beats a preemption storm); arm the
+                # hysteresis window so admission doesn't flap back
+                nxt.degrade(nxt_w)
+                self.degraded += 1
+                self._hot_until = max(self._hot_until,
+                                      self.ticks + self.slo.cooldown_ticks)
             lane = idle.pop(0)
             self.owner[lane] = nxt
             self.chain_of[lane] = 0
@@ -514,6 +638,135 @@ class Scheduler:
             self.finished[lane] = False
             self.lane_eos[lane] = -1 if nxt.req.eos_id is None else nxt.req.eos_id
             self._import_prefix(nxt, lane)
+
+    # -- SLO & overload control (degradation ladder) -------------------------
+
+    def _effective_width(self, r: _ReqState) -> int:
+        """The width this request would be admitted at right now — the
+        *throttle* rung of the degradation ladder.  Full width unless an
+        SLOSpec enables width degradation AND either the throttle window is
+        hot (lane demand exceeds the arena, or hysteresis from a recent
+        throttle/preemption) or the pool fits the request only at reduced
+        width.  Resumed requests keep their snapshot width (their lanes'
+        state already has that shape).  Pure host arithmetic."""
+        w = r.width
+        if r.snaps is not None or self.slo is None \
+                or not self.slo.degrade_width:
+            return w
+        lo = min(w, max(1, self.slo.min_width))
+        if lo == w:
+            return w
+        if self._throttled():
+            return lo
+        tokens = len(r.req.prompt) + r.req.max_new
+        if self._pool_descs and not self._pool_fits(tokens, w) \
+                and self._pool_fits(tokens, lo):
+            return lo                 # degrade instead of waiting to preempt
+        return w
+
+    def _throttled(self) -> bool:
+        """Is the throttle window hot?  Overload signal: the *ready backlog*
+        alone (arrived, unadmitted lane demand) exceeds the whole arena —
+        even an empty arena could not take the waiting traffic at full
+        width.  Active lanes deliberately don't count: one wide request plus
+        a single arrival is a momentary queue, not overload, and must not
+        degrade traffic a calm system would serve at full width.  Observing
+        overload arms ``cooldown_ticks`` of hysteresis, so the throttle
+        disengages only after a quiet cooldown — admission cannot flap
+        between full-width and degraded and feed the preemption path."""
+        if self.ticks < self._hot_until:
+            return True
+        backlog = sum(q.width for q in self.queue if q.ready(self.ticks))
+        if backlog > self.num_lanes:
+            self._hot_until = self.ticks + self.slo.cooldown_ticks
+            return True
+        return False
+
+    def _min_prefill_ticks(self, r: _ReqState) -> int:
+        """Optimistic prefill ticks if admitted THIS tick: chunked suffix
+        after the longest cached prefix (read-only radix probe — no stats,
+        no recency, no device work).  A lower bound: prefix reuse and idle
+        lanes can only make the real admission this fast, never faster."""
+        plen = len(r.req.prompt)
+        cached = 0
+        if self.prefix_cache is not None:
+            cached = min(plen, self.prefix_cache.covered(
+                self.signature, r.req.prompt))
+        return -(-(plen - cached) // self.chunk)
+
+    def _min_service_ticks(self, r: _ReqState) -> int:
+        """Provable lower bound on admission → completion ticks: optimistic
+        prefill plus the fewest decode ticks any outcome allows (one token —
+        the first sample could be EOS — when ``eos_id`` is set, the full
+        ``max_new`` budget otherwise).  Matches the tick mechanics exactly:
+        token 0 is sampled at the post-prefill boundary and the final chunk
+        that completes the request has already advanced the clock."""
+        gen = 1 if r.req.eos_id is not None else r.req.max_new
+        return self._min_prefill_ticks(r) + max(-(-(gen - 1) // self.chunk), 1)
+
+    def _bound_queue(self, results: List[RequestResult]) -> None:
+        """Bounded-queue backpressure (``max_queue``): when the backlog of
+        *arrived*, never-admitted requests exceeds the bound, the newest
+        arrivals bounce off the door with status ``rejected`` — a definite
+        outcome instead of an unbounded wait.  The bound is enforced at
+        arrival time against the live backlog, not at :meth:`submit` — a
+        preloaded trace's future arrivals never count against today's queue.
+        Preempted requests (``admitted_tick >= 0``) occupy depth but are
+        never bounced: they were already accepted once."""
+        slo = self.slo
+        if slo is None or slo.max_queue is None:
+            return
+        arrived = [r for r in self.queue if r.req.arrival <= self.ticks]
+        fresh = [r for r in arrived if r.admitted_tick == -1]
+        over = len(arrived) - slo.max_queue
+        # newest first: FIFO order is the door's admission promise
+        for r in sorted(fresh, key=lambda r: (r.req.arrival, r.req.uid),
+                        reverse=True)[:max(0, over)]:
+            self.queue.remove(r)
+            r.status = "rejected"
+            self.rejected += 1
+            self._finish(r, results, 0.0)
+
+    def _shed_queued(self, results: List[RequestResult]) -> None:
+        """The *shed* rung: reject queued requests that provably cannot meet
+        their deadline (or TTFT SLO) even if admitted this very tick.  Today
+        is the cheapest moment to say no — a shed request has burned zero
+        prefill reads (``admitted_tick == -1``), unlike a ``timeout``, which
+        fires only after the deadline has already passed and any prefill
+        spend is lost.  Preempted requests are exempt (their prefill is
+        already paid; expiry handles them).  Pure host arithmetic — the
+        projection adds no device syncs and no compiles."""
+        slo = self.slo
+        if slo is None or not slo.shed:
+            return
+        for r in list(self.queue):
+            if r.admitted_tick != -1 or r.req.arrival > self.ticks:
+                continue
+            arr = r.req.arrival
+            dl = r.req.deadline
+            doomed = (dl is not None and
+                      self.ticks + self._min_service_ticks(r) > arr + dl)
+            if not doomed and slo.ttft_ticks is not None:
+                doomed = (self.ticks + self._min_prefill_ticks(r)
+                          > arr + slo.ttft_ticks)
+            if doomed:
+                self.queue.remove(r)
+                r.status = "rejected"
+                self.shed += 1
+                self._finish(r, results, 0.0)
+
+    def _finish(self, r: _ReqState, results: List[RequestResult],
+                peak_bytes: float) -> None:
+        """Single choke point for retiring a request: the result goes to the
+        caller AND onto the ledger :meth:`slo_stats` aggregates."""
+        res = r.result(peak_bytes, self.ticks)
+        results.append(res)
+        self._finished.append(res)
+
+    def _record_timeline(self) -> None:
+        self._timeline["queue_depth"].append(len(self.queue))
+        self._timeline["active_lanes"].append(
+            sum(o is not None for o in self.owner))
 
     # -- preemption, failure semantics, pool pressure ------------------------
 
@@ -575,7 +828,7 @@ class Scheduler:
             for r in self.active_reqs:
                 d = self._lane_pool_demand(
                     len(r.req.prompt) + r.req.max_new)
-                w = max(len(r.lanes), r.req.width)
+                w = max(len(r.lanes), r.width)
                 for i in range(len(total)):
                     total[i] += w * d[i]
             if all(total[i] + ghost[i] <= self._pool_descs[i][3]
@@ -596,6 +849,12 @@ class Scheduler:
         are bounded, statuses definite."""
         r.preempt_count += 1
         self.preemptions += 1
+        if self.slo is not None:
+            # a preemption is the strongest overload signal there is: arm
+            # the throttle window so follow-on admissions degrade width
+            # instead of re-inflating demand (the ladder's anti-storm rung)
+            self._hot_until = max(self._hot_until,
+                                  self.ticks + self.slo.cooldown_ticks)
         lanes = list(r.lanes)
         give_up = r.preempt_count > r.req.max_preempts
         if not give_up:
@@ -614,7 +873,7 @@ class Scheduler:
         if give_up:
             r.status = "failed"
             self.failures += 1
-            results.append(r.result(self._req_peak(len(lanes)), self.ticks))
+            self._finish(r, results, self._req_peak(len(lanes)))
         else:
             r.resume_at = self.ticks + (1 << (r.preempt_count - 1))
             self.queue.append(r)
@@ -658,7 +917,7 @@ class Scheduler:
         self.active_reqs.remove(r)
         lanes = list(r.lanes)
         self._release_lanes(r, lanes)
-        results.append(r.result(self._req_peak(len(lanes)), self.ticks))
+        self._finish(r, results, self._req_peak(len(lanes)))
 
     def _release_lanes(self, r: _ReqState, lanes: List[int]) -> None:
         reclaim = np.zeros((self.num_lanes,), bool)
@@ -686,14 +945,22 @@ class Scheduler:
     def _expire_queued(self, results: List[RequestResult]) -> None:
         """Deadline enforcement for requests still *waiting* (never admitted,
         or preempted and backing off): past the deadline they time out
-        without ever touching a lane."""
+        without ever touching a lane.
+
+        Boundary semantics (pinned by tests/test_scheduler.py): a deadline
+        ``dl`` grants the closed tick window ``[arrival, arrival + dl]``.
+        Strict ``>`` here and in the active-path check in :meth:`_tick` —
+        both fire first at ``ticks == arrival + dl + 1``, and a request
+        completing exactly at ``arrival + dl`` is ``ok`` (completion wins
+        the tie in :meth:`_tick`, which collects tokens before the deadline
+        scan)."""
         for r in list(self.queue):
             dl = r.req.deadline
             if dl is not None and self.ticks - r.req.arrival > dl:
                 self.queue.remove(r)
                 r.status = "timeout"
                 self.timeouts += 1
-                results.append(r.result(0.0, self.ticks))
+                self._finish(r, results, 0.0)
 
     def _starved(self) -> bool:
         """True when nothing can ever change: all lanes idle, every queued
@@ -713,7 +980,7 @@ class Scheduler:
             self.queue.remove(r)
             r.status = "failed"
             self.failures += 1
-            results.append(r.result(0.0, self.ticks))
+            self._finish(r, results, 0.0)
 
     def _import_prefix(self, r: _ReqState, lane: int) -> None:
         """Longest-cached-prefix import: the lane resumes at token boundary L
@@ -789,9 +1056,9 @@ class Scheduler:
     def _fork_ready(self) -> None:
         """hold → decode: fork prefilled lanes into W chains, sample token 0."""
         for r in list(self.active_reqs):
-            if r.hold_logits is None or len(r.lanes) == r.req.width:
+            if r.hold_logits is None or len(r.lanes) == r.width:
                 continue
-            need = r.req.width - 1
+            need = r.width - 1
             idle = self._idle_lanes()
             if len(idle) < need:
                 continue                      # wait for lanes to free up
@@ -807,7 +1074,7 @@ class Scheduler:
             self.lane_eos[r.lanes] = self.lane_eos[r.lanes[0]]
             self._start_decode(r)
         for r in list(self.active_reqs):      # width-1 fast path
-            if r.hold_logits is not None and len(r.lanes) == r.req.width \
+            if r.hold_logits is not None and len(r.lanes) == r.width \
                     and not self.decoding[r.lanes].any():
                 self._start_decode(r)
 
@@ -823,6 +1090,8 @@ class Scheduler:
             first = jnp.argmax(logits, axis=-1)
         with sanctioned("tick-boundary"):      # once per request, not per step
             first = np.asarray(first, np.int32)
+        if r.first_token_tick < 0:
+            r.first_token_tick = self.ticks    # TTFT endpoint
         r.decode_meter.observe_step([0.0], new_tokens=w,
                                     reads_tokens_per_layer=[0.0])
         for c, lane in enumerate(r.lanes):
@@ -836,6 +1105,7 @@ class Scheduler:
         r.hold_logits = None
 
     def _tick(self, results: List[RequestResult]) -> None:
+        self._record_timeline()
         # preemptive pressure relief BEFORE dispatch: post-hoc preemption
         # cannot be bitwise (writes were already dropped mid-chunk), so the
         # margin check runs at the boundary, where snapshots are still exact
@@ -976,9 +1246,7 @@ class Scheduler:
                     # EOS reclamation offers the finished prompt's prefix
                     # chain back to the tree (LRU recency refresh)
                     self.prefix_cache.touch(self.signature, r.req.prompt)
-                results.append(r.result(
-                    self.peak_bytes * len(r.lanes) / self.num_lanes,
-                    self.ticks))
+                self._finish(r, results, self._req_peak(len(r.lanes)))
                 for lane in r.lanes:
                     self.owner[lane] = None
                     reclaim[lane] = True
@@ -988,7 +1256,11 @@ class Scheduler:
             self._reset(reclaim)
 
         # deadlines: completion above wins a tie; anything still active past
-        # its deadline times out now (definite status, lanes reclaimed)
+        # its deadline times out now (definite status, lanes reclaimed).
+        # Strict ``>`` against the post-increment clock — the same boundary
+        # as _expire_queued: the closed window [arrival, arrival + dl] is
+        # usable, the first doomed tick is arrival + dl + 1 (pinned by
+        # tests/test_scheduler.py::test_deadline_boundary_exact_tick)
         for r in list(self.active_reqs):
             dl = r.req.deadline
             if dl is not None and self.ticks - r.req.arrival > dl:
@@ -1018,3 +1290,72 @@ class Scheduler:
         self.state = self._reset_jit(self.state, jnp.asarray(mask),
                                      b=self.num_lanes, ml=self.max_len)
         self._reapply_ghosts()
+
+
+# -- SLO accounting (shared by Scheduler.slo_stats and benchmarks) -----------
+
+
+def slo_attained(res: RequestResult, slo: Optional[SLOSpec]) -> bool:
+    """Did this request land inside the SLO?  ``ok`` status is necessary;
+    with no SLO attached it is also sufficient.  Measuring an *uncontrolled*
+    run against the same SLOSpec (as ``benchmarks/slo_harness.py`` does) is
+    the point of keeping this a pure function of the result."""
+    if res.status != "ok":
+        return False
+    if slo is None:
+        return True
+    if slo.ttft_ticks is not None and not (
+            0 <= res.ttft_ticks <= slo.ttft_ticks):
+        return False
+    if slo.tpot_ticks is not None and res.tpot_ticks > slo.tpot_ticks:
+        return False
+    return True
+
+
+def _pctiles(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"p50": -1.0, "p90": -1.0, "max": -1.0}
+    a = np.asarray(xs, np.float64)
+    return {"p50": float(np.percentile(a, 50)),
+            "p90": float(np.percentile(a, 90)), "max": float(a.max())}
+
+
+def compute_slo_stats(results: List[RequestResult],
+                      slo: Optional[SLOSpec] = None, *,
+                      offered: Optional[int] = None,
+                      timeline: Optional[Dict[str, List[int]]] = None,
+                      num_lanes: Optional[int] = None) -> Dict[str, Any]:
+    """Goodput + latency aggregates over retired results.
+
+    Goodput is the fraction of *offered* requests (``offered`` defaults to
+    ``len(results)``) that finished ``ok`` within ``slo`` — rejected, shed,
+    timed-out, and failed requests all count against it, which is exactly
+    why shedding hopeless work can raise it: lanes spend their ticks on
+    requests that can still land inside the SLO."""
+    offered = len(results) if offered is None else int(offered)
+    by_status: Dict[str, int] = {}
+    for r in results:
+        by_status[r.status] = by_status.get(r.status, 0) + 1
+    ok = [r for r in results if r.status == "ok"]
+    within = sum(1 for r in results if slo_attained(r, slo))
+    out: Dict[str, Any] = {
+        "offered": offered,
+        "finished": len(results),
+        "statuses": by_status,
+        "ok": len(ok),
+        "ok_within_slo": int(within),
+        "goodput": within / offered if offered else 0.0,
+        "degraded": sum(1 for r in results if r.degraded),
+        "ttft": _pctiles([float(r.ttft_ticks) for r in ok
+                          if r.ttft_ticks >= 0]),
+        "tpot": _pctiles([float(r.tpot_ticks) for r in ok
+                          if r.ttft_ticks >= 0]),
+    }
+    if timeline is not None:
+        qd = timeline.get("queue_depth", [])
+        al = timeline.get("active_lanes", [])
+        out["queue_depth"] = {"mean": float(np.mean(qd)) if qd else 0.0,
+                              "max": int(max(qd)) if qd else 0}
+        out["lane_util"] = (float(np.mean(al)) / num_lanes
+                            if al and num_lanes else 0.0)
+    return out

@@ -10,6 +10,8 @@ Acceptance criteria pinned here:
   per-request meters; lane reclaim is exact (a lane reused after EOS serves
   the next request identically to a fresh arena).
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -410,3 +412,226 @@ def test_submit_rejects_unservable_request(tiny_arch, tiny_params):
     sched.submit(Request(
         uid=1, prompt=_prompt(10, seed=3, vocab=tiny_arch.vocab_size),
         max_new=8))
+
+
+# -- SLO & overload control --------------------------------------------------
+# docs/serving.md "SLO & overload control" is the contract these tests pin.
+
+
+def _plain_engine(tiny_arch, tiny_params):
+    """Fixed-arena engine (no pool): SLO tests isolate the ladder from the
+    preemption layer's pool pressure."""
+    return Engine(tiny_arch, tiny_params,
+                  KVPolicyConfig(kind="dms", cr=2.0,
+                                 window=tiny_arch.dms.window),
+                  chunk=4)
+
+
+def test_deadline_boundary_exact_tick(tiny_arch, tiny_params):
+    """Boundary pinning: the usable window is CLOSED — [arrival,
+    arrival + deadline].  A request finishing exactly at arrival + deadline
+    is "ok" (completion wins the tie); deadline - 1 times it out, and the
+    timeout retires on the first doomed tick, arrival + deadline + 1 - 1 ==
+    the post-increment boundary.  Both the active path (_tick) and the
+    queued path (_expire_queued) use the same strict-> comparison; this test
+    is the regression pin both cite."""
+    eng = _plain_engine(tiny_arch, tiny_params)
+    prompt = _prompt(8, seed=70, vocab=tiny_arch.vocab_size)
+    # solo latency: 2 prefill ticks (plen 8 / chunk 4) + 1 decode tick
+    sched = eng.scheduler(num_lanes=1, max_len=24)
+    sched.submit(Request(uid=0, prompt=prompt, max_new=4))
+    lat = sched.run()[0].latency_ticks
+
+    # deadline == exact latency: completes ok AT the boundary tick
+    sched = eng.scheduler(num_lanes=1, max_len=24)
+    sched.submit(Request(uid=0, prompt=prompt, max_new=4, deadline=lat))
+    res = sched.run()[0]
+    assert res.status == "ok" and res.finished_tick == lat
+
+    # deadline = lat - 1: the request completes at the first doomed
+    # boundary (arrival + dl + 1) — a genuine tie, and completion wins it
+    sched = eng.scheduler(num_lanes=1, max_len=24)
+    sched.submit(Request(uid=0, prompt=prompt, max_new=4, deadline=lat - 1))
+    res = sched.run()[0]
+    assert res.status == "ok" and res.finished_tick == lat
+
+    # deadline = lat - 2: the doomed boundary (dl + 1 = lat - 1) arrives
+    # with the request still incomplete — timeout retires it THERE, not at
+    # its would-be completion tick
+    sched = eng.scheduler(num_lanes=1, max_len=24)
+    sched.submit(Request(uid=0, prompt=prompt, max_new=4, deadline=lat - 2))
+    res = sched.run()[0]
+    assert res.status == "timeout"
+    assert res.finished_tick == (lat - 2) + 1
+
+    # queued path: a request that can never be admitted before its deadline
+    # expires at arrival + deadline + 1 without taking a lane
+    sched = eng.scheduler(num_lanes=1, max_len=24)
+    sched.submit(Request(uid=0, prompt=prompt, max_new=8))
+    sched.submit(Request(uid=1, prompt=prompt, max_new=4, deadline=1))
+    res = {r.uid: r for r in sched.run()}[1]
+    assert res.status == "timeout" and res.admitted_tick == -1
+    assert res.finished_tick == 1 + 1
+
+
+def test_bounded_queue_rejects_newest_arrivals(tiny_arch, tiny_params):
+    """max_queue backpressure: when the live backlog exceeds the bound the
+    NEWEST arrivals bounce with a definite "rejected" status and zero
+    prefill reads; future arrivals in a preloaded trace never count."""
+    from repro.serving.scheduler import SLOSpec
+
+    eng = _plain_engine(tiny_arch, tiny_params)
+    slo = SLOSpec(max_queue=1, shed=False, degrade_width=False)
+    sched = eng.scheduler(num_lanes=1, max_len=24, slo=slo)
+    prompt = _prompt(8, seed=71, vocab=tiny_arch.vocab_size)
+    for i in range(3):
+        sched.submit(Request(uid=i, prompt=prompt, max_new=4))
+    # a FUTURE arrival: must not be bounced by today's backlog
+    sched.submit(Request(uid=3, prompt=prompt, max_new=4, arrival=30))
+    results = {r.uid: r for r in sched.run()}
+
+    assert results[0].status == "ok"
+    for uid in (1, 2):
+        assert results[uid].status == "rejected", uid
+        assert results[uid].admitted_tick == -1
+        assert results[uid].prefill_meter.kv_reads == 0
+    assert results[3].status == "ok"
+    life = sched.lifecycle_stats()
+    assert life["rejected"] == 2 and life["shed"] == 0
+    assert sched.offered == 4
+
+
+def test_shed_provably_doomed_request_zero_prefill(tiny_arch, tiny_params):
+    """The shed rung: a queued request that provably cannot meet its
+    deadline even if admitted this tick is rejected BEFORE its deadline
+    passes and before it burns any prefill reads — unlike the uncontrolled
+    scheduler, where the same request would be admitted, prefill, and time
+    out."""
+    from repro.serving.scheduler import SLOSpec
+
+    eng = _plain_engine(tiny_arch, tiny_params)
+    long = Request(uid=0,
+                   prompt=_prompt(12, seed=72, vocab=tiny_arch.vocab_size),
+                   max_new=10)
+    # min service for uid 1: 3 prefill ticks (plen 12) + 2 decode ticks;
+    # while uid 0 squats the single lane, ticks advance past the point where
+    # arrival + deadline is still reachable
+    doomed = Request(uid=1,
+                     prompt=_prompt(12, seed=73,
+                                    vocab=tiny_arch.vocab_size),
+                     max_new=8, deadline=6)
+    sched = eng.scheduler(num_lanes=1, max_len=24,
+                          slo=SLOSpec(degrade_width=False))
+    sched.submit(long)
+    sched.submit(doomed)
+    results = {r.uid: r for r in sched.run()}
+
+    assert results[0].status == "ok"
+    assert results[1].status == "rejected"
+    assert results[1].admitted_tick == -1
+    assert results[1].prefill_meter.kv_reads == 0
+    # shed strictly before the deadline would have fired
+    assert results[1].finished_tick <= doomed.deadline
+    life = sched.lifecycle_stats()
+    assert life["shed"] == 1 and life["timeouts"] == 0
+
+    # uncontrolled: the same trace burns prefill on uid 1, then times it out
+    sched = eng.scheduler(num_lanes=1, max_len=24)
+    sched.submit(dataclasses.replace(long))
+    sched.submit(dataclasses.replace(doomed))
+    results = {r.uid: r for r in sched.run()}
+    assert results[1].status == "timeout"
+
+
+def test_width_degradation_token_equal_and_hysteresis(tiny_arch,
+                                                      tiny_params):
+    """The throttle rung: under a backlog that exceeds the arena, width-W
+    requests are served at min_width with ``degraded`` set, and every
+    degraded request is bitwise token-equal to a solo run AT THE SERVED
+    width.  With headroom (calm trace) the throttle must be invisible:
+    full width, no degraded flag."""
+    from repro.serving.scheduler import SLOSpec
+
+    eng = _plain_engine(tiny_arch, tiny_params)
+    reqs = [Request(uid=i,
+                    prompt=_prompt(8, seed=80 + i,
+                                   vocab=tiny_arch.vocab_size),
+                    max_new=4, width=2)
+            for i in range(3)]
+
+    slo = SLOSpec(min_width=1, cooldown_ticks=4)
+    sched = eng.scheduler(num_lanes=2, max_len=24, slo=slo)
+    for r in reqs:
+        sched.submit(r)
+    results = {r.uid: r for r in sched.run()}
+
+    assert sched.lifecycle_stats()["degraded"] >= 1
+    saw_degraded = False
+    for r in reqs:
+        got = results[r.uid]
+        assert got.status == "ok"
+        served_w = len(got.lengths)
+        assert got.degraded == (served_w < r.width)
+        saw_degraded |= got.degraded
+        solo = eng.scheduler(num_lanes=2, max_len=24)
+        solo.submit(dataclasses.replace(r, width=served_w, arrival=0))
+        ref = solo.run()[0]
+        np.testing.assert_array_equal(got.tokens, ref.tokens,
+                                      err_msg=f"uid {r.uid}")
+        np.testing.assert_array_equal(got.lengths, ref.lengths)
+    assert saw_degraded
+
+    # hysteresis recovery: the same width-2 request alone (no backlog) is
+    # served at full width — the throttle disengages after the cooldown
+    sched = eng.scheduler(num_lanes=2, max_len=24, slo=slo)
+    sched.submit(dataclasses.replace(reqs[0]))
+    res = sched.run()[0]
+    assert not res.degraded and len(res.lengths) == 2
+    assert sched.lifecycle_stats()["degraded"] == 0
+
+
+def test_ttft_tpot_metering_and_slo_stats(tiny_arch, tiny_params):
+    """TTFT = arrival -> first sampled token; TPOT = decode ticks per
+    post-first token; slo_stats joins goodput, percentiles, timelines and
+    lifecycle counters."""
+    from repro.serving.scheduler import SLOSpec, slo_attained
+
+    eng = _plain_engine(tiny_arch, tiny_params)
+    slo = SLOSpec(ttft_ticks=4, tpot_ticks=1.0)
+    sched = eng.scheduler(num_lanes=1, max_len=24, slo=slo)
+    # plen 8 / chunk 4 -> 2 prefill ticks: first token samples at tick 2
+    sched.submit(Request(uid=0,
+                         prompt=_prompt(8, seed=90,
+                                        vocab=tiny_arch.vocab_size),
+                         max_new=6))
+    res = sched.run()[0]
+
+    assert res.first_token_tick == 2
+    assert res.ttft_ticks == 2
+    # 5 post-first tokens over (finished - first_token) decode ticks
+    assert res.tpot_ticks == pytest.approx(
+        (res.finished_tick - res.first_token_tick) / 5)
+    assert slo_attained(res, slo)
+
+    stats = sched.slo_stats()
+    assert stats["offered"] == 1 and stats["goodput"] == 1.0
+    assert stats["ttft"]["p50"] == 2.0
+    # the solo request is admitted before the first timeline sample, so
+    # the queue axis records an all-drained trace
+    assert stats["queue_depth"]["max"] == 0
+    assert 0.0 < stats["lane_util"] <= 1.0
+    assert stats["lifecycle"]["completed"] == 1
+
+    # a queued-forever request never samples: sentinel TTFT, not within SLO
+    sched = eng.scheduler(num_lanes=1, max_len=24, slo=slo)
+    sched.submit(Request(uid=0,
+                         prompt=_prompt(8, seed=90,
+                                        vocab=tiny_arch.vocab_size),
+                         max_new=6))
+    sched.submit(Request(uid=1,
+                         prompt=_prompt(8, seed=91,
+                                        vocab=tiny_arch.vocab_size),
+                         max_new=4, deadline=1))
+    results = {r.uid: r for r in sched.run()}
+    assert results[1].ttft_ticks == -1
+    assert not slo_attained(results[1], slo)

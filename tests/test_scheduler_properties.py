@@ -315,7 +315,8 @@ def test_preempt_resume_bitwise_per_policy(kind, paged, tiny_arch,
     np.testing.assert_array_equal(got.lengths, oracle.lengths)
     assert sched.lifecycle_stats() == {
         "preemptions": 2, "resumes": 2, "completed": 1,
-        "failures": 0, "timeouts": 0}
+        "failures": 0, "timeouts": 0, "rejected": 0, "shed": 0,
+        "degraded": 0}
 
 
 @pytest.mark.parametrize("paged", [False, True], ids=["fixed", "paged"])
@@ -336,3 +337,94 @@ def test_preempt_resume_bitwise_hyperscale_width(paged, tiny_arch,
     assert got.status == "ok" and got.preempt_count == 1
     np.testing.assert_array_equal(got.tokens, oracle.tokens)
     np.testing.assert_array_equal(got.lengths, oracle.lengths)
+
+
+# -- chaos under bursty overload + SLO control --------------------------------
+
+
+def check_burst_chaos(seed, paged):
+    """Fault isolation when everything lands at once: a bursty workload
+    trace (repro.serving.workload), a FaultPlan drawn *near the burst
+    arrivals* (the ``arrivals`` hook — stalls/preempts overlap in-flight
+    requests instead of idle ticks), AND the SLO ladder armed (shed +
+    width-throttle live alongside the fault injector).  Invariants: the run
+    terminates, every request has a definite status (now including
+    ``rejected``), lanes conserve, shed requests burned zero prefill, and
+    every ``ok`` request — degraded or not — is token-equal to its solo
+    oracle at the width it was actually served."""
+    from repro.serving import workload
+    from repro.serving.scheduler import SLOSpec
+
+    eng = _chaos_engine("dms", paged)
+    spec = workload.WorkloadSpec(
+        vocab=_CTX["arch"].vocab_size, max_len=MAX_LEN - 4,
+        prompt_len=(4, 10), max_new=(3, 6), widths=(1, 2), deadline=40)
+    reqs = workload.burst_trace(seed, 4, rate=1.5, on_ticks=3, off_ticks=4,
+                                spec=spec)
+    plan = FaultPlan.random(seed, lanes=NUM_LANES, paged=paged,
+                            arrivals=[r.arrival for r in reqs])
+    slo = SLOSpec(ttft_ticks=20, min_width=1, cooldown_ticks=3)
+
+    sched = eng.scheduler(num_lanes=NUM_LANES, max_len=MAX_LEN, faults=plan,
+                          slo=slo)
+    for r in reqs:
+        sched.submit(r)
+    results = {r.uid: r for r in sched.run()}   # terminates
+
+    assert sorted(results) == [r.uid for r in reqs]
+    for uid, got in results.items():
+        assert got.status in ("ok", "failed", "timeout", "rejected"), \
+            (uid, got.status)
+        if got.status == "rejected":
+            assert got.admitted_tick == -1
+            assert got.prefill_meter.kv_reads == 0
+
+    assert not sched.queue and not sched.active_reqs
+    assert all(o is None for o in sched.owner)
+
+    for r in reqs:
+        got = results[r.uid]
+        if got.status != "ok":
+            continue
+        served_w = len(got.lengths)
+        assert got.degraded == (served_w < r.width)
+        ref = _solo_chaos(eng, dataclasses.replace(r, width=served_w))
+        np.testing.assert_array_equal(got.tokens, ref.tokens,
+                                      err_msg=f"uid {r.uid} diverged")
+        np.testing.assert_array_equal(got.lengths, ref.lengths)
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["fixed", "paged"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_burst_chaos_with_slo_keeps_isolation_seeded(seed, paged, tiny_arch,
+                                                     tiny_params):
+    """Deterministic burst-chaos driver — runs in every environment."""
+    _prime(tiny_arch, tiny_params)
+    check_burst_chaos(seed, paged)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6), st.booleans())
+def test_burst_chaos_with_slo_keeps_isolation_fuzzed(seed, paged):
+    """Hypothesis burst-chaos driver: same invariants, adversarial seeds."""
+    check_burst_chaos(seed, paged)
+
+
+def test_faultplan_random_arrivals_hook_targets_bursts():
+    """The ``arrivals`` hook: every drawn fault tick lands within the jitter
+    window of some arrival, and omitting the hook replays the legacy
+    uniform draw bit-identically (same seed, same plan)."""
+    from repro.serving import workload
+
+    arr = workload.burst_arrivals(3, 20, rate=2.0, on_ticks=3, off_ticks=9)
+    for seed in range(5):
+        plan = FaultPlan.random(seed, lanes=2, arrivals=arr)
+        for f in plan.faults:
+            assert any(a <= f.tick <= a + 2 for a in arr) or f.tick == 1, \
+                (f.kind, f.tick)
+        a = FaultPlan.random(seed, lanes=2)
+        b = FaultPlan.random(seed, lanes=2)
+        assert [(f.kind, f.tick, f.lane, f.blocks, f.duration, f.release)
+                for f in a.faults] == \
+               [(f.kind, f.tick, f.lane, f.blocks, f.duration, f.release)
+                for f in b.faults]
